@@ -1,0 +1,105 @@
+"""Shared benchmark utilities: timing, CSV rows, and one cached meta-trained
+TCN embedder reused by the FSL/CL benchmarks (Table I / Fig. 15)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn, *args, iters=3, warmup=1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+_CACHE = {}
+
+
+def get_meta_trained_tcn(episodes: int = 260, img: int = 12, n_classes: int = 40,
+                         seed: int = 0):
+    """Meta-train the paper's TCN PN embedder (reduced for CPU) once."""
+    key = (episodes, img, n_classes, seed)
+    if key in _CACHE:
+        return _CACHE[key]
+    from repro.configs import get_config
+    from repro.core import protonet as pn
+    from repro.data import EpisodicSampler, GlyphClasses, split_classes
+    from repro.models import build_bundle
+    from repro.models.tcn import tcn_empty_state, tcn_forward
+    from repro.training.optim import adamw, apply_updates
+
+    cfg = get_config("chameleon-tcn").replace(
+        tcn_channels=(16, 16, 16), tcn_kernel=5, embed_dim=32, n_classes=5)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(seed))
+    state = tcn_empty_state(cfg)
+    ds = GlyphClasses(n_classes, seed=seed, size=img)
+    train_cls, test_cls = split_classes(n_classes, 0.5, seed=seed)
+    sampler = EpisodicSampler(ds, train_cls, seed=seed + 1)
+    opt_init, opt_update = adamw(2e-3)
+    opt_state = opt_init(params)
+
+    def episode_loss(params, state, sx, sy, qx, qy):
+        emb_s, _, new_state = tcn_forward(params, state, cfg, sx, train=True)
+        emb_q, _, _ = tcn_forward(params, new_state, cfg, qx, train=True)
+        s = pn.support_sums(emb_s, sy, 5)
+        w, b = pn.pn_fc_from_sums(s, sx.shape[0] // 5)
+        logits = pn.pn_logits(emb_q, w, b)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, qy[:, None], 1)[:, 0]
+        return jnp.mean(lse - gold), new_state
+
+    @jax.jit
+    def step(params, state, opt_state, sx, sy, qx, qy):
+        (loss, new_state), grads = jax.value_and_grad(
+            episode_loss, has_aux=True)(params, state, sx, sy, qx, qy)
+        updates, opt_state, _ = opt_update(grads, opt_state, params)
+        return apply_updates(params, updates), new_state, opt_state, loss
+
+    for ep in range(episodes):
+        sx, sy, qx, qy = sampler.episode(ep, n_ways=5, k_shots=3, n_query=3)
+        params, state, opt_state, _ = step(
+            params, state, opt_state, jnp.asarray(sx), jnp.asarray(sy),
+            jnp.asarray(qx), jnp.asarray(qy))
+
+    out = (cfg, bundle, params, state, ds, test_cls)
+    _CACHE[key] = out
+    return out
+
+
+def fsl_accuracy(cfg, params, state, ds, classes, n_ways, k, n_ep=10,
+                 log2=False, seed=97):
+    from repro.core import protonet as pn
+    from repro.data import EpisodicSampler
+    from repro.models.tcn import tcn_forward
+    sampler = EpisodicSampler(ds, classes, seed=seed)
+    accs = []
+    for ep in range(n_ep):
+        sx, sy, qx, qy = sampler.episode(ep, n_ways, k, n_query=4)
+        emb_s, _, _ = tcn_forward(params, state, cfg, jnp.asarray(sx),
+                                  train=False, quantize=log2)
+        emb_q, _, _ = tcn_forward(params, state, cfg, jnp.asarray(qx),
+                                  train=False, quantize=log2)
+        s = pn.support_sums(emb_s, jnp.asarray(sy), n_ways)
+        if log2:
+            w, b, _, _ = pn.pn_fc_from_sums_log2(s, k)
+        else:
+            w, b = pn.pn_fc_from_sums(s, k)
+        pred = jnp.argmax(pn.pn_logits(emb_q, w, b), axis=-1)
+        accs.append(float(jnp.mean(pred == jnp.asarray(qy))))
+    return float(np.mean(accs)), float(np.std(accs) / max(len(accs), 1) ** 0.5)

@@ -1,0 +1,32 @@
+"""Table I reproduction: FSL accuracy across ways/shots on sequential
+(synthetic-)Omniglot, fp32 and the MatMul-free log2 path.
+
+Omniglot itself is not available offline (DESIGN §1); the benchmark runs the
+identical pipeline on procedural glyph classes, so the *mechanism* numbers
+(FC-vs-prototype agreement, log2 delta, way/shot scaling) are the
+reproducible claims; absolute accuracies are dataset-dependent.
+"""
+
+import time
+
+from benchmarks.common import emit, fsl_accuracy, get_meta_trained_tcn
+
+
+def run():
+    cfg, bundle, params, state, ds, test_cls = get_meta_trained_tcn()
+    scenarios = [(5, 1), (5, 5), (10, 1), (10, 5), (15, 1)]
+    for n_ways, k in scenarios:
+        if n_ways > len(test_cls):
+            continue
+        t0 = time.perf_counter()
+        acc, sem = fsl_accuracy(cfg, params, state, ds, test_cls, n_ways, k)
+        dt = (time.perf_counter() - t0) * 1e6 / 10
+        emit(f"fsl_{n_ways}way_{k}shot_fp32", dt, f"acc={acc:.3f}+-{sem:.3f}")
+        acc_q, _ = fsl_accuracy(cfg, params, state, ds, test_cls, n_ways, k,
+                                log2=True)
+        emit(f"fsl_{n_ways}way_{k}shot_log2", dt,
+             f"acc={acc_q:.3f};delta={acc_q - acc:+.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Kernel-level accounting: packed-log2 matmul HBM-byte savings (the
+transferable 'MatMul-free' win on TPU) + wall-time of the jnp oracle path on
+CPU (Pallas interpret-mode timing is not meaningful; TPU timing needs HW)."""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.ref import log2_matmul_ref
+from repro.quant.log2 import compute_scale, pack_nibbles, quantize_log2
+
+
+def run():
+    for (M, K, N) in [(256, 2048, 2048), (1024, 2048, 8192)]:
+        w = jax.random.normal(jax.random.key(0), (K, N)) * 0.05
+        s = compute_scale(w)
+        packed = pack_nibbles(quantize_log2(w, s))
+        x = jax.random.normal(jax.random.key(1), (M, K), jnp.bfloat16)
+        f = jax.jit(lambda x, p: log2_matmul_ref(x, p, s))
+        us, _ = time_fn(f, x, packed)
+        bytes_bf16 = K * N * 2
+        bytes_packed = K * N // 2
+        # arithmetic intensity gain for the weight-bound decode regime
+        emit(f"log2mm_{M}x{K}x{N}", us,
+             f"weight_bytes_saved={1 - bytes_packed / bytes_bf16:.0%};"
+             f"packed_MB={bytes_packed / 2 ** 20:.1f}")
+
+
+if __name__ == "__main__":
+    run()

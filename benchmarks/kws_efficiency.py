@@ -1,0 +1,62 @@
+"""Fig. 11/12 + Table II (KWS columns) reproduction from the calibrated
+dual-mode PE-array/SRAM cost model: array-size sweep, real-time KWS power in
+both modes, peak GOPS/TOPS/W, and the comparison against published
+accelerators (constants from the paper's Table II)."""
+
+import time
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.costmodel import F_MAX_HZ, PEArrayMode, kws_ops_per_s
+from repro.core.streaming import greedy_inference_stats
+from repro.launch.analytic import param_count
+from repro.models.build import build_bundle
+
+# published comparison points (paper Fig. 12 / Table II)
+SOTA = {
+    "vocell": {"power_uw": 10.6, "gops": 0.13},
+    "tinyvers": {"power_uw": 193.0, "gops": 17.6},
+    "ultratrail": {"power_uw": 8.2, "gops": 3.8},
+}
+
+
+def run():
+    # the paper's MFCC KWS model: 16.5k params, 63-frame windows
+    cfg = get_config("chameleon-tcn-kws")
+    macs_per_window = greedy_inference_stats(cfg, 63)["macs"] / 2
+    ops_rate = kws_ops_per_s(macs_per_window)
+
+    t0 = time.perf_counter()
+    # Fig. 11(a): array-size sweep (leakage/throughput trade)
+    best = []
+    for n in (2, 4, 8, 16, 32):
+        mode = PEArrayMode(n)
+        p = mode.realtime_power_w(ops_rate)
+        best.append((n, p))
+        emit(f"pe_sweep_n{n}", 0.0,
+             f"rt_kws_uW={p * 1e6:.2f};peak_gops={mode.peak_gops():.1f};"
+             f"clock_kHz={mode.clock_for(ops_rate) / 1e3:.1f}")
+
+    m4, m16 = PEArrayMode(4), PEArrayMode(16)
+    p4 = m4.realtime_power_w(ops_rate) * 1e6
+    p16 = (m16.realtime_power_w(ops_rate)) * 1e6
+    dt = (time.perf_counter() - t0) * 1e6
+    emit("dualmode_kws", dt,
+         f"mode4_uW={p4:.2f};mode16_uW={p16:.2f};gating_saves={1 - p4 / p16:.0%}")
+    # Fig. 12 headline: peak GOPS vs best SotA
+    ratio = m16.peak_gops() / max(v["gops"] for v in SOTA.values())
+    emit("peak_throughput", 0.0,
+         f"peak_gops={m16.peak_gops():.1f};vs_sota={ratio:.1f}x")
+    for name, v in SOTA.items():
+        emit(f"vs_{name}", 0.0,
+             f"power_ratio={v['power_uw'] / p4:.1f}x;"
+             f"gops_ratio={m16.peak_gops() / v['gops']:.0f}x")
+    # model footprint (Table II: smallest model size among KWS accelerators)
+    bundle = build_bundle(cfg)
+    n_params = param_count(bundle.param_defs)
+    emit("kws_model", 0.0,
+         f"params={n_params};kB_log2={n_params * 0.5 / 1024:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the dry-run
+records (deliverable g).  Sources: analytic FLOP/byte counters (primary; XLA
+cost_analysis undercounts scanned programs — see utils/hlo.py docstring) and
+HLO-parsed collective bytes.  Writes experiments/roofline.md + emits CSV.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.core.costmodel import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, roofline
+
+
+def load_records(out_dir="experiments/dryrun", mesh_tag="pod16x16",
+                 exp="baseline"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, f"{mesh_tag}__*__{exp}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def analyse(rec):
+    n = rec["n_chips"]
+    terms = roofline(
+        rec["flops_global_analytic"],
+        rec["bytes_global_analytic"],
+        rec["collective_bytes_per_device"] * n,  # global collective bytes
+        n,
+    )
+    useful = rec["model_flops"] / max(rec["flops_global_analytic"], 1.0)
+    frac = terms.compute_s / max(terms.bound_s, 1e-12)
+    return terms, useful, frac
+
+
+def _what_would_help(rec, terms):
+    d = terms.dominant
+    if d == "compute":
+        return "at compute roofline; reduce remat recompute or quantize"
+    if d == "memory":
+        if rec["kind"] == "decode":
+            return "cut weight/cache bytes: log2-4bit weights, MLA/quantized cache"
+        return "fuse/reuse: bigger microbatch, activation recompute over reload"
+    return "reduce comm: drop SP all-gathers, shard_map a2a MoE, overlap"
+
+
+def run(write_md=True):
+    recs = load_records()
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | bound | "
+             "MODEL/HLO | roofline frac | bottleneck note |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for rec in recs:
+        terms, useful, frac = analyse(rec)
+        name = f"{rec['arch']}__{rec['shape']}"
+        emit(f"roofline_{name}", 0.0,
+             f"compute_s={terms.compute_s:.4g};memory_s={terms.memory_s:.4g};"
+             f"collective_s={terms.collective_s:.4g};dom={terms.dominant};"
+             f"useful={useful:.2f};frac={frac:.2f}")
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {terms.compute_s:.4g} | "
+            f"{terms.memory_s:.4g} | {terms.collective_s:.4g} | "
+            f"{terms.dominant} | {useful:.2f} | {frac:.2f} | "
+            f"{_what_would_help(rec, terms)} |")
+    if write_md and recs:
+        os.makedirs("experiments", exist_ok=True)
+        with open("experiments/roofline.md", "w") as f:
+            f.write(f"# Roofline (16x16 pod, v5e: {PEAK_FLOPS_BF16/1e12:.0f} "
+                    f"bf16 TFLOP/s, {HBM_BW/1e9:.0f} GB/s HBM, "
+                    f"{ICI_BW/1e9:.0f} GB/s/link ICI)\n\n")
+            f.write("\n".join(lines) + "\n")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

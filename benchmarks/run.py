@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+
+import argparse
+import time
+
+SUITES = [
+    ("greedy_tcn", "Fig 8c: greedy dilation-aware vs weight-stationary"),
+    ("activation_memory", "Fig 9b: FIFO vs ping-pong/triple buffers"),
+    ("kws_efficiency", "Fig 11/12 + Table II: dual-mode PE array model"),
+    ("kernel_bench", "kernels: packed-log2 byte savings"),
+    ("fsl_accuracy", "Table I: FSL accuracy (synthetic-Omniglot)"),
+    ("cl_curve", "Fig 15: continual-learning curve"),
+    ("roofline", "dry-run roofline terms (EXPERIMENTS §Roofline)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod_name, desc in SUITES:
+        if args.only and args.only != mod_name:
+            continue
+        print(f"# --- {mod_name}: {desc}", flush=True)
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{mod_name},0,FAILED:{e!r}", flush=True)
+            raise
+    print(f"# total {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

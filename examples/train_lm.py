@@ -1,0 +1,64 @@
+"""LM training example with fault tolerance: train a reduced assigned arch on
+the synthetic seekable stream, kill mid-run, and resume exactly.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch olmo-1b] [--steps 60]
+
+(On hardware, drop --smoke sizing and point --mesh at the pod; see
+repro/launch/train.py for the production entrypoint.)
+"""
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import lm_batch
+from repro.models import build_bundle
+from repro.training import TrainConfig, Trainer
+from repro.training.optim import adamw, warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[setup] {cfg.name} (reduced): {n/1e6:.2f}M params")
+
+    data = lambda s: {k: jnp.asarray(v) for k, v in
+                      lm_batch(s, args.batch, args.seq, cfg.vocab_size).items()}
+    opt = adamw(warmup_cosine(3e-3, args.steps // 10, args.steps))
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        tc = TrainConfig(steps=args.steps, ckpt_dir=ckpt, ckpt_every=20,
+                         log_every=10)
+        print("[run 1] training, will 'crash' at 60% ...")
+        t1 = Trainer(bundle.loss_fn, params, tc, data, optimizer=opt)
+        t1.run(steps=int(args.steps * 0.6))
+        t1.ckpt.wait()
+
+        print("[run 2] relaunch -> auto-resume from latest valid checkpoint")
+        t2 = Trainer(bundle.loss_fn, params, tc, data, optimizer=opt)
+        resumed = t2.maybe_resume()
+        print(f"[run 2] resumed at step {resumed}")
+        state, hist = t2.run()
+        for h in hist:
+            print(f"  step {h['step']:4d} loss {h['loss']:.4f} "
+                  f"acc {h.get('acc', 0):.3f}")
+        first, last = hist[0]["loss"], hist[-1]["loss"]
+        print(f"[done] loss {first:.3f} -> {last:.3f} "
+              f"(copy-task structure learned: {last < first})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Chameleon-JAX: MatMul-free TCN + prototypical-learning framework (pod scale)."""
+
+__version__ = "1.0.0"

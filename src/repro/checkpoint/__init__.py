@@ -1,0 +1,3 @@
+from repro.checkpoint import store
+
+__all__ = ["store"]

@@ -1,0 +1,7 @@
+from repro.configs.registry import ASSIGNED, REGISTRY, get_config
+from repro.configs.shapes import SHAPES, LONG_CONTEXT_ARCHS, ENCDEC_ENC_LEN, cells
+
+__all__ = [
+    "ASSIGNED", "REGISTRY", "get_config",
+    "SHAPES", "LONG_CONTEXT_ARCHS", "ENCDEC_ENC_LEN", "cells",
+]

@@ -1,0 +1,12 @@
+"""Assigned architecture config: qwen2.5-32b (see DESIGN.md section 3)."""
+
+from repro.models.config import ArchConfig
+
+QWEN25_32B = ArchConfig(
+    name="qwen2.5-32b", family="dense",  # [hf:Qwen/Qwen2.5-32B]
+    n_layers=64, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128, attn_kv_repeat=True, train_microbatch=2,
+    d_ff=27648, vocab_size=152064, norm_type="rmsnorm",
+    mlp_type="swiglu", qkv_bias=True, rope_theta=1e6,
+)
+
+CONFIG = QWEN25_32B

@@ -1,0 +1,92 @@
+"""Analytical cost models.
+
+1. The paper's dual-mode PE array / SRAM power model (§III-C, Fig. 11/12/16):
+   silicon power cannot be measured here, so the *analysis* that produced the
+   paper's Fig. 11 trade-off (optimal array sizes 4 and 16 under an
+   SRAM-dominated power assumption) is reproduced from first principles,
+   calibrated against the paper's own measured points.
+
+2. TPU v5e roofline constants + the three-term roofline evaluator used by
+   benchmarks/roofline.py and EXPERIMENTS.md (§Roofline).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------------------
+# Chameleon ASIC model (calibrated to the paper's measured points)
+# ---------------------------------------------------------------------------
+
+# measured anchors (paper §IV):   16x16 @150 MHz -> 76.8 GOPS peak
+PEAK_GOPS_16 = 76.8              # = 2 * 256 MACs * 150 MHz
+F_MAX_HZ = 150e6
+# Fig. 16 @0.73 V: 4x4 real-time KWS 3.1 uW total; 16x16 variant 7.4 uW
+P_LEAK_CORE_AON_W = 1.5e-6       # core + always-on mem leakage (4x4 mode)
+P_LEAK_MSB_W = 3.3e-6            # gateable MSB memory leakage (16x16 adds it)
+E_DYN_PER_OP_J = 16e-15          # dynamic energy per (shift+add) op, 0.73 V
+
+
+@dataclass(frozen=True)
+class PEArrayMode:
+    n: int  # array side (4 or 16)
+
+    @property
+    def macs(self) -> int:
+        return self.n * self.n
+
+    def peak_gops(self, f_hz: float = F_MAX_HZ) -> float:
+        return 2 * self.macs * f_hz / 1e9
+
+    def realtime_power_w(self, ops_per_s: float) -> float:
+        """Leakage + dynamic power to sustain ops_per_s in real time."""
+        leak = P_LEAK_CORE_AON_W + (P_LEAK_MSB_W if self.n > 4 else 0.0)
+        return leak + E_DYN_PER_OP_J * ops_per_s
+
+    def clock_for(self, ops_per_s: float) -> float:
+        return ops_per_s / (2 * self.macs)
+
+
+def kws_ops_per_s(macs_per_window: float, windows_per_s: float = 62.5) -> float:
+    """Real-time KWS op rate (16 ms MFCC hop => 62.5 inferences/s)."""
+    return 2.0 * macs_per_window * windows_per_s
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e roofline
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12   # per chip
+HBM_BW = 819e9             # B/s per chip
+ICI_BW = 50e9              # B/s per link (brief's constant)
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+             n_chips: int) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=hlo_flops / (n_chips * PEAK_FLOPS_BF16),
+        memory_s=hlo_bytes / (n_chips * HBM_BW),
+        collective_s=collective_bytes / (n_chips * ICI_BW),
+    )
+
+
+def model_flops(n_params_active: float, n_tokens: float) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE)."""
+    return 6.0 * n_params_active * n_tokens

@@ -1,0 +1,157 @@
+"""Prototypical-network learning as an equivalent FC layer — the paper's
+central contribution (§III-A, Eq. 3–6 and the log2 form Eq. 8).
+
+The reformulation: with prototypes P_j = s^j / k  (s^j = sum of the k support
+embeddings of way j), the squared L2 distance to a query x satisfies
+
+    D_j^2  ∝  (1/2k) ||s^j||^2  -  s^j · x        (after scaling by k/2)
+
+so classification (argmin D_j) is an FC layer with W_j = s^j and
+b_j = -(1/2k)||s^j||^2 followed by argmax — *learning is just a forward pass
+plus a segment-sum*.  This module provides:
+
+  * exact fp32 extraction (Eq. 6) and the MatMul-free log2 form (Eq. 8),
+    where the squared sum-embedding is computed by doubling the log2
+    exponent — the ASIC's bit-shift, here exp2(2e) — never a multiply;
+  * a class-incremental ``PrototypeStore`` (CL = appending rows, 26 B/way
+    on the ASIC; here: one (V,) row + one scalar per way);
+  * distributed adaptation: shot embeddings computed data-parallel, the
+    segment-sum is a psum over the dp axes, the FC row store is sharded
+    over `model` — so on-device learning scales to pods unchanged.
+
+Works against *any* Bundle's ``embed_fn`` (TCN or LM backbones).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.log2 import compute_scale, dequantize_log2, quantize_log2
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3–6: exact PN -> FC extraction
+# ---------------------------------------------------------------------------
+
+def support_sums(embeddings: jax.Array, labels: jax.Array, n_ways: int):
+    """s^j = sum over the k shots of way j. embeddings: (N*k, V); labels (N*k,)."""
+    return jax.ops.segment_sum(embeddings, labels, num_segments=n_ways)
+
+
+def pn_fc_from_sums(s: jax.Array, k: int):
+    """Eq. 6: W_j = s^j, b_j = -(1/2k)||s^j||^2. Returns (W (N,V), b (N,))."""
+    w = s
+    b = -jnp.sum(jnp.square(s), axis=-1) / (2.0 * k)
+    return w, b
+
+
+def pn_fc_from_sums_log2(s: jax.Array, k: int):
+    """Eq. 8: the MatMul-free variant.  s is quantized to 4-bit signed log2
+    codes; the square inside the bias becomes an exponent *doubling*
+    (left shift on the ASIC; exp2(2e) here), and the 1/2k scale a right
+    shift by ceil(log2(k)) + 1.  Returns (W_deq, b, codes, scale)."""
+    scale = compute_scale(s)
+    q = quantize_log2(s, scale)                      # nibble codes
+    w = dequantize_log2(q, scale)                    # FC weights (log2 grid)
+    # |value| = 2^(1-|q|) * scale  =>  value^2 = 2^(2*(1-|q|)) * scale^2
+    e2 = 2.0 * (1.0 - jnp.abs(q.astype(jnp.float32)))  # doubled exponent
+    sq = jnp.where(q == 0, 0.0, jnp.exp2(e2)) * (scale ** 2)
+    k_shift = 2.0 ** jnp.ceil(jnp.log2(jnp.asarray(float(k))))  # 2^ceil(log2 k)
+    b = -jnp.sum(sq, axis=-1) / (2.0 * k_shift)
+    return w, b, q, scale
+
+
+def pn_logits(x: jax.Array, w: jax.Array, b: jax.Array):
+    """Forward pass through the equivalent FC layer: (B,V) -> (B,N).
+    argmax equals argmin of the squared L2 distance to the prototypes."""
+    return jnp.einsum("bv,nv->bn", x, w) + b[None, :]
+
+
+def l2_classify(x: jax.Array, prototypes: jax.Array):
+    """Oracle: argmin_j ||P_j - x||^2 (used by tests/benchmarks only)."""
+    d2 = jnp.sum(jnp.square(x[:, None, :] - prototypes[None]), axis=-1)
+    return jnp.argmin(d2, axis=-1), d2
+
+
+# ---------------------------------------------------------------------------
+# Few-shot adaptation (the "learning controller" + "parameter extractor")
+# ---------------------------------------------------------------------------
+
+def adapt(embed_fn, params, support_batch, labels, n_ways: int, k: int,
+          *, log2: bool = False):
+    """End-to-end FSL (Fig. 6): embed the N*k support samples (step 1),
+    segment-sum into prototypes (step 2), extract FC params (step 3).
+    Returns (W, b).  Pure function of params+support — jit/pjit-able."""
+    emb = embed_fn(params, support_batch).astype(jnp.float32)
+    s = support_sums(emb, labels, n_ways)
+    if log2:
+        w, b, _, _ = pn_fc_from_sums_log2(s, k)
+        return w, b
+    return pn_fc_from_sums(s, k)
+
+
+# ---------------------------------------------------------------------------
+# Continual learning: a growable prototype store
+# ---------------------------------------------------------------------------
+
+class PrototypeStore(NamedTuple):
+    """CL state: FC rows for up to max_ways classes.  s_sums and counts are
+    kept so a class can receive additional shots later (prototype refinement
+    = just adding to the sum, Eq. 3)."""
+    s_sums: jax.Array   # (max_ways, V)
+    counts: jax.Array   # (max_ways,)
+    n_ways: jax.Array   # scalar int32
+
+
+def store_init(max_ways: int, dim: int) -> PrototypeStore:
+    return PrototypeStore(
+        s_sums=jnp.zeros((max_ways, dim), jnp.float32),
+        counts=jnp.zeros((max_ways,), jnp.float32),
+        n_ways=jnp.zeros((), jnp.int32),
+    )
+
+
+def store_add_class(store: PrototypeStore, shot_embeddings: jax.Array) -> PrototypeStore:
+    """Learn one new class from its k shot embeddings (k, V)."""
+    idx = store.n_ways
+    s = shot_embeddings.astype(jnp.float32).sum(axis=0)
+    return PrototypeStore(
+        s_sums=jax.lax.dynamic_update_index_in_dim(store.s_sums, s, idx, 0),
+        counts=store.counts.at[idx].add(shot_embeddings.shape[0]),
+        n_ways=store.n_ways + 1,
+    )
+
+
+def store_update_class(store: PrototypeStore, idx, shot_embeddings) -> PrototypeStore:
+    """Add more shots to an existing class (prototype refinement)."""
+    s = shot_embeddings.astype(jnp.float32).sum(axis=0)
+    return PrototypeStore(
+        s_sums=store.s_sums.at[idx].add(s),
+        counts=store.counts.at[idx].add(shot_embeddings.shape[0]),
+        n_ways=store.n_ways,
+    )
+
+
+def store_fc(store: PrototypeStore):
+    """FC weights/bias over the currently learned ways.
+
+    Eq. 6's (W=s, b=-||s||^2/2k) form assumes every class has the same shot
+    count k (the per-class k/2 rescale must be uniform for argmax to equal
+    argmin-distance).  The CL store allows heterogeneous counts, so it uses
+    the normalized equivalent W_j = P_j = s_j/k_j, b_j = -||P_j||^2 / 2 —
+    identical up to a global scale when counts are uniform (tested).
+    Unlearned rows get bias -inf so they never win the argmax."""
+    k = jnp.maximum(store.counts, 1.0)[:, None]
+    w = store.s_sums / k
+    b = -jnp.sum(jnp.square(w), axis=-1) / 2.0
+    live = jnp.arange(store.s_sums.shape[0]) < store.n_ways
+    b = jnp.where(live, b, -jnp.inf)
+    return w, b
+
+
+def store_classify(store: PrototypeStore, emb: jax.Array):
+    w, b = store_fc(store)
+    return jnp.argmax(pn_logits(emb.astype(jnp.float32), w, b), axis=-1)

@@ -1,0 +1,4 @@
+from repro.data.episodic import EpisodicSampler, split_classes
+from repro.data.synthetic import GlyphClasses, KeywordAudio, lm_batch
+
+__all__ = ["EpisodicSampler", "split_classes", "GlyphClasses", "KeywordAudio", "lm_batch"]

@@ -1,0 +1,3 @@
+from repro.kernels.ops import dilated_conv_op, log2_matmul_op, proto_extract_op
+
+__all__ = ["dilated_conv_op", "log2_matmul_op", "proto_extract_op"]

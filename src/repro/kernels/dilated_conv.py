@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: causal dilated conv1d (the TCN hot loop, §III-B).
+
+Dilation-aware by construction: the kernel gathers exactly the k real taps
+per output step (shifted views of the input strip), never touching the
+zero-valued graph nodes that a dense im2col / 2D-kernel emulation would
+multiply (TCN-CUTIE's 80% wasted MACs, per the paper).  Each grid cell owns
+one batch row and one Cout tile; the full (left-padded) time strip sits in
+VMEM — TCN channel counts are small (<=64), so even 16k-step raw audio is
+16k*64*4 B = 4 MiB, within v5e VMEM.  The k tap-shifted matmuls hit the MXU
+back-to-back and accumulate in registers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, dilation: int, T: int):
+    x = x_ref[0]          # (T + (k-1)*d, Cin) left-padded strip
+    w = w_ref[...]        # (k, Cin, bco)
+    b = b_ref[...]        # (bco,)
+    acc = jnp.zeros((T, w.shape[2]), jnp.float32)
+    for j in range(k):
+        tap = jax.lax.dynamic_slice_in_dim(x, j * dilation, T, axis=0)
+        acc = acc + jnp.dot(tap.astype(jnp.float32), w[j].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+    o_ref[0] = acc + b.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("dilation", "bco", "interpret"))
+def dilated_causal_conv(x, w, b, dilation: int, *, bco: int = 128,
+                        interpret: bool | None = None):
+    """x: (B, T, Cin); w: (K, Cin, Cout); b: (Cout,) -> (B, T, Cout) f32."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, T, Cin = x.shape
+    K, _, Cout = w.shape
+    pad = (K - 1) * dilation
+    xp = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    bco = min(bco, Cout)
+    Cp = -(-Cout // bco) * bco
+    if Cp != Cout:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, Cp - Cout)))
+        b = jnp.pad(b, (0, Cp - Cout))
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=K, dilation=dilation, T=T),
+        grid=(B, Cp // bco),
+        in_specs=[
+            pl.BlockSpec((1, T + pad, Cin), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((K, Cin, bco), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((bco,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, T, bco), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, T, Cp), jnp.float32),
+        interpret=interpret,
+    )(xp, w, b)
+    return out[..., :Cout]

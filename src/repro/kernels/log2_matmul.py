@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: matmul with nibble-packed 4-bit signed log2 weights.
+
+The TPU-native form of the paper's MatMul-free PE array (§III-C): the ASIC
+replaces multipliers with bit-shifters; the MXU multiplies for free, so the
+transferable win is *bandwidth* — weights stay packed (2 codes/byte) through
+HBM->VMEM and are expanded in-kernel with exp2 (the bit-shift analogue)
+immediately before the MXU dot.  Vs bf16 weights this is a 4x cut in weight
+bytes, which is exactly what the decode-shape roofline is bound by.
+
+Tiling: grid (M/bm, N/bn); the full K strip of x (bm, K) and of the packed
+weights (K, bn/2) live in VMEM per tile.  v5e VMEM is ~16 MiB: defaults
+bm=256, bn=512, K<=8192 use  256*8192*4 + 8192*256 = 10.4 MiB.  MXU dims
+(bm, bn multiples of 128) are hardware-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, scale_ref, o_ref):
+    x = x_ref[...]                       # (bm, K)
+    pw = w_ref[...]                      # (K, bn//2) uint8
+    scale = scale_ref[0]
+    # unpack two nibbles per byte -> (K, bn), sign-extend 4-bit two's compl.
+    lo = (pw & 0xF).astype(jnp.int32)
+    hi = ((pw >> 4) & 0xF).astype(jnp.int32)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(pw.shape[0], pw.shape[1] * 2)
+    codes = (codes ^ 8) - 8
+    # decode: value = sign * 2^(1-|code|) * scale   (the ASIC's bit shift)
+    mag = jnp.exp2(1.0 - jnp.abs(codes).astype(jnp.float32))
+    w = jnp.where(codes == 0, 0.0, jnp.sign(codes).astype(jnp.float32) * mag)
+    w = w * scale
+    o_ref[...] = jnp.dot(x.astype(jnp.float32), w,
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def log2_matmul(x, w_packed, scale, *, bm: int = 256, bn: int = 512,
+                interpret: bool | None = None):
+    """x: (M, K); w_packed: (K, N//2) uint8; scale: () f32 -> (M, N) f32."""
+    M, K = x.shape
+    N = w_packed.shape[1] * 2
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bm = min(bm, M)
+    bn = min(bn, N)
+    # pad M/N up to tile multiples (K strip is always whole)
+    Mp = -(-M // bm) * bm
+    Np = -(-N // bn) * bn
+    xp = jnp.pad(x, ((0, Mp - M), (0, 0))) if Mp != M else x
+    wp = jnp.pad(w_packed, ((0, 0), (0, (Np - N) // 2))) if Np != N else w_packed
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Mp // bm, Np // bn),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn // 2), lambda i, j: (0, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(xp, wp, scale.reshape(1))
+    return out[:M, :N]

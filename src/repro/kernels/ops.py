@@ -1,0 +1,33 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode against the jnp
+oracles in ref.py; on TPU they compile to Mosaic.  ``use_pallas=False``
+switches any call site to the oracle — the dry-run lowers the pure-JAX path.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.dilated_conv import dilated_causal_conv
+from repro.kernels.log2_matmul import log2_matmul
+from repro.kernels.proto_extract import proto_extract
+
+
+def log2_matmul_op(x, w_packed, scale, *, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.log2_matmul_ref(x, w_packed, scale)
+    return log2_matmul(x, w_packed, scale)
+
+
+def dilated_conv_op(x, w, b, dilation: int, *, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.dilated_conv_ref(x, w, b, dilation)
+    return dilated_causal_conv(x, w, b, dilation)
+
+
+def proto_extract_op(emb, onehot, k: int, *, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.proto_extract_ref(emb, onehot, k)
+    return proto_extract(emb, onehot, k)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused prototypical parameter extraction (§III-A, Fig. 6
+steps 2+3 — the "prototypical parameter extractor" module).
+
+One pass produces both FC parameters from the support embeddings:
+    W = onehot @ emb          (class-wise shot sums, Eq. 3)
+    b = -(1/2k) ||W||^2       (Eq. 6 bias)
+The square-and-reduce happens in VMEM right after the dot, so the sums never
+round-trip to HBM — the kernel analogue of the ASIC reusing the inference
+datapath with a few cycles of extra control logic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(oh_ref, emb_ref, w_ref, b_ref, *, inv_2k: float):
+    oh = oh_ref[...]      # (bn, Nk)
+    emb = emb_ref[...]    # (Nk, V)
+    w = jnp.dot(oh.astype(jnp.float32), emb.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    w_ref[...] = w
+    b_ref[...] = -jnp.sum(jnp.square(w), axis=-1) * inv_2k
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn", "interpret"))
+def proto_extract(emb, onehot, k: int, *, bn: int = 128,
+                  interpret: bool | None = None):
+    """emb: (Nk, V); onehot: (N, Nk) dispatch matrix -> (W (N,V), b (N,))."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    N, Nk = onehot.shape
+    V = emb.shape[1]
+    bn = min(bn, N)
+    Np = -(-N // bn) * bn
+    oh = jnp.pad(onehot, ((0, Np - N), (0, 0))) if Np != N else onehot
+    w, b = pl.pallas_call(
+        functools.partial(_kernel, inv_2k=1.0 / (2.0 * k)),
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, Nk), lambda i: (i, 0)),
+            pl.BlockSpec((Nk, V), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, V), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, V), jnp.float32),
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(oh, emb)
+    return w[:N], b[:N]

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.log2 import dequantize_log2, unpack_nibbles
+
+
+def log2_matmul_ref(x: jax.Array, w_packed: jax.Array, scale: jax.Array) -> jax.Array:
+    """x: (M, K) float; w_packed: (K, N//2) uint8 nibble-packed log2 codes;
+    scale: scalar.  Returns (M, N) f32 = x @ dequant(w)."""
+    codes = unpack_nibbles(w_packed)           # (K, N)
+    w = dequantize_log2(codes, scale)          # f32
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+
+
+def dilated_conv_ref(x: jax.Array, w: jax.Array, b: jax.Array, dilation: int) -> jax.Array:
+    """Causal dilated conv1d oracle. x: (B,T,Cin); w: (K,Cin,Cout)."""
+    k = w.shape[0]
+    pad = (k - 1) * dilation
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1,), padding=[(pad, 0)], rhs_dilation=(dilation,),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    ) + b.astype(jnp.float32)
+
+
+def proto_extract_ref(emb: jax.Array, onehot: jax.Array, k: int):
+    """PN parameter extraction oracle (Eq. 3+6).
+
+    emb: (Nk, V); onehot: (N, Nk) class-dispatch matrix (rows sum to k).
+    Returns (W (N, V) = class-wise sums, b (N,) = -(1/2k)||W||^2)."""
+    w = jnp.dot(onehot.astype(jnp.float32), emb.astype(jnp.float32))
+    b = -jnp.sum(jnp.square(w), axis=-1) / (2.0 * k)
+    return w, b
+
+
+def wkv6_chunk_ref(r, k, v, log_w, u, state):
+    """One WKV6 chunk oracle: naive per-step recurrence over the chunk.
+    r,k,v,log_w: (C, H, Dh); u: (H, Dh); state: (H, Dh, Dh)."""
+    C = r.shape[0]
+    ys = []
+    S = state.astype(jnp.float32)
+    for t in range(C):
+        rt, kt, vt = (a[t].astype(jnp.float32) for a in (r, k, v))
+        y = jnp.einsum("hi,hij->hj", rt, S) + \
+            jnp.einsum("hi,hi,hi,hj->hj", rt, u.astype(jnp.float32), kt, vt)
+        S = jnp.exp(log_w[t].astype(jnp.float32))[..., None] * S + \
+            jnp.einsum("hi,hj->hij", kt, vt)
+        ys.append(y)
+    return jnp.stack(ys, 0), S

@@ -1,0 +1,109 @@
+"""Sharding specs for batches, caches, and optimizer state per (arch, mesh).
+
+Parameters get their specs from the ParamDef logical axes (sharding/rules);
+this module covers the *runtime* trees: input batches, KV/state caches, and
+optimizer state (which mirrors the param specs leaf-for-leaf).
+Dims are only sharded when divisible by the mesh axis size (e.g. 8 KV heads
+on a 16-way model axis stay replicated — Megatron's GQA duplication rule).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+from repro.models.config import ArchConfig
+from repro.training.trainer import TrainState
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh, dim: int, axes):
+    """Shard dim over axes only if divisible."""
+    return axes if dim % max(_axis_size(mesh, axes), 1) == 0 and dim > 1 else None
+
+
+def batch_pspecs(cfg: ArchConfig, specs: dict, mesh) -> dict:
+    dp = dp_axes(mesh)
+    out = {}
+    for name, s in specs.items():
+        if name == "pos" or s.ndim == 0:
+            out[name] = P()
+            continue
+        b = _maybe(mesh, s.shape[0], dp)
+        if s.ndim == 3:  # (B, S/T, D/C) real-valued frontend stubs
+            out[name] = P(b, None, None)
+        else:            # (B, S) tokens / labels; (B,) labels
+            out[name] = P(b, *([None] * (s.ndim - 1)))
+    return out
+
+
+def cache_pspecs(cfg: ArchConfig, cache_tree, mesh) -> dict:
+    """KV caches (L,B,S,H,D), MLA latents (L,B,S,r), SSM states, rings."""
+    dp = dp_axes(mesh)
+
+    def leaf_spec(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        shape = leaf.shape
+        b = _maybe(mesh, shape[1], dp) if len(shape) >= 2 else None
+        if any(n in ("k", "v") for n in names) and len(shape) == 5:
+            L, B, S, H, Dh = shape
+            h = _maybe(mesh, H, "model")
+            # kv_heads < TP degree (e.g. 8 on 16): shard the SEQUENCE over
+            # the model axis instead; GSPMD turns the softmax/AV reductions
+            # into tiny per-step all-reduces (context-parallel decode).
+            seq_axes = [a for a in ("data", "model")
+                        if (a == "data" and b is None) or (a == "model" and h is None)]
+            seq = tuple(seq_axes) if seq_axes else None
+            if seq is not None and S % _axis_size(mesh, seq) != 0:
+                seq = None
+            return P(None, b, seq, h, None)
+        if any(n == "c_kv" for n in names):  # (L,B,S,r) MLA latent
+            L, B, S, r = shape
+            seq = _maybe(mesh, S, "model")
+            return P(None, b, seq, None)
+        if any(n == "k_rope" for n in names):  # (L,B,S,1,dr)
+            seq = _maybe(mesh, shape[2], "model")
+            return P(None, b, seq, None, None)
+        if any(n == "ssm" for n in names):  # (L,B,H,N,P)
+            return P(None, b, _maybe(mesh, shape[2], "model"), None, None)
+        if any(n == "state" for n in names):  # rwkv (L,B,H,Dh,Dh)
+            return P(None, b, _maybe(mesh, shape[2], "model"), None, None)
+        if any(n == "conv" for n in names):  # (L,B,K-1,C)
+            return P(None, b, None, _maybe(mesh, shape[3], "model"))
+        if len(shape) == 3:  # rwkv x_prev (L,B,D)
+            return P(None, b, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def named(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_pspecs(param_pspecs_tree, opt_state_abstract) -> TrainState:
+    """Optimizer state mirrors the param specs (mu/nu per-leaf)."""
+    return TrainState(
+        params=param_pspecs_tree,
+        opt_state=type(opt_state_abstract)(
+            step=P(),
+            mu=param_pspecs_tree,
+            nu=param_pspecs_tree,
+        ),
+        model_state={},
+        err_state={},
+        step=P(),
+    )

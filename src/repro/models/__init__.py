@@ -1,0 +1,4 @@
+from repro.models.config import ArchConfig
+from repro.models.build import Bundle, build_bundle, input_specs, make_empty_cache
+
+__all__ = ["ArchConfig", "Bundle", "build_bundle", "input_specs", "make_empty_cache"]

@@ -1,0 +1,444 @@
+"""Model bundles: one uniform functional API per architecture.
+
+``build_bundle(cfg)`` returns a ``Bundle`` whose members are pure jittable
+functions — the trainer, serving engine, dry-run launcher, and the PN-as-FC
+learning head (core/protonet.py) all consume this interface, so the paper's
+technique composes with every architecture in the zoo.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ENCDEC_ENC_LEN, SHAPES, ShapeSpec
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models import tcn as tcn_mod
+from repro.models.config import ArchConfig
+from repro.models.rwkv import rwkv_empty_cache, rwkv_layer, rwkv_layer_param_defs
+from repro.models.ssm import mamba_empty_cache, mamba_layer, mamba_param_defs
+from repro.models.transformer import (
+    backbone,
+    chunked_cross_entropy,
+    embed_tokens,
+    layer_fwd,
+    layer_param_defs,
+    logits_last,
+    model_param_defs,
+    norm_param_defs,
+    run_encoder,
+    stack_defs,
+)
+from repro.sharding.rules import ParamDef, abstract_params, init_params
+
+
+def _adt(cfg):
+    return jnp.bfloat16 if cfg.act_dtype == "bfloat16" else jnp.float32
+
+
+@dataclass
+class Bundle:
+    cfg: ArchConfig
+    param_defs: dict
+    loss_fn: Callable      # (params, batch) -> (loss, metrics)
+    prefill_fn: Callable   # (params, batch) -> (logits_last, cache)
+    decode_fn: Callable    # (params, cache, batch{tokens,pos}) -> (logits, cache)
+    embed_fn: Callable     # (params, batch) -> (B, E) embeddings for protonet
+    empty_cache: Callable  # (batch, seq_len) -> concrete cache pytree
+    cache_specs: Callable  # (batch, seq_len) -> ShapeDtypeStruct cache pytree
+
+    def init(self, key):
+        return init_params(self.param_defs, key)
+
+    def abstract_params(self):
+        return abstract_params(self.param_defs)
+
+    def input_specs(self, shape_name: str) -> dict:
+        return input_specs(self.cfg, shape_name)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch family, shape) — ShapeDtypeStruct stand-ins only.
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    s = SHAPES[shape_name]
+    B, S = s.global_batch, s.seq_len
+    i32 = jnp.int32
+    adt = _adt(cfg)
+    D = cfg.d_model
+    if cfg.family == "tcn":
+        if s.kind == "train":
+            return {"x": jax.ShapeDtypeStruct((B, S, cfg.tcn_in_channels), jnp.float32),
+                    "labels": jax.ShapeDtypeStruct((B,), i32)}
+        return {"x": jax.ShapeDtypeStruct((B, 1, cfg.tcn_in_channels), jnp.float32)}
+    if s.kind == "train":
+        if cfg.family == "vlm":
+            P = cfg.n_patches
+            return {"patches": jax.ShapeDtypeStruct((B, P, D), adt),
+                    "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S - P), i32)}
+        if cfg.family == "audio":
+            half = S // 2
+            return {"frames": jax.ShapeDtypeStruct((B, half, D), adt),
+                    "tokens": jax.ShapeDtypeStruct((B, half), i32),
+                    "labels": jax.ShapeDtypeStruct((B, half), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if s.kind == "prefill":
+        if cfg.family == "vlm":
+            P = cfg.n_patches
+            return {"patches": jax.ShapeDtypeStruct((B, P, D), adt),
+                    "tokens": jax.ShapeDtypeStruct((B, S - P), i32)}
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct((B, ENCDEC_ENC_LEN, D), adt),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _kv_cache(cfg, L, B, S, dtype):
+    Hkv, Dh = cfg.n_kv_heads, cfg.dh
+    return {"k": jnp.zeros((L, B, S, Hkv, Dh), dtype),
+            "v": jnp.zeros((L, B, S, Hkv, Dh), dtype)}
+
+
+def _mla_cache(cfg, L, B, S, dtype):
+    return {"c_kv": jnp.zeros((L, B, S, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((L, B, S, 1, cfg.qk_rope_dim), dtype)}
+
+
+def make_empty_cache(cfg: ArchConfig, B: int, S: int, dtype=jnp.bfloat16):
+    if cfg.family == "rwkv":
+        return rwkv_empty_cache(cfg, B, dtype)
+    if cfg.family == "hybrid":
+        n_apps = _zamba_n_apps(cfg)
+        return {"mamba": mamba_empty_cache(cfg, cfg.n_layers, B, dtype),
+                "attn": _kv_cache(cfg, n_apps, B, S, dtype)}
+    if cfg.family == "audio":
+        c = _kv_cache(cfg, cfg.n_layers, B, S, dtype)
+        c["cross"] = _kv_cache(cfg, cfg.n_layers, B, ENCDEC_ENC_LEN, dtype)
+        return {"self": c}
+    per = _mla_cache if cfg.use_mla else _kv_cache
+    out = {}
+    n_moe = cfg.n_layers - cfg.n_dense_layers if cfg.n_experts else 0
+    n_dense = cfg.n_layers - n_moe
+    if n_dense:
+        out["dense"] = per(cfg, n_dense, B, S, dtype)
+    if n_moe:
+        out["moe"] = per(cfg, n_moe, B, S, dtype)
+    return out
+
+
+def make_cache_specs(cfg: ArchConfig, B: int, S: int, dtype=jnp.bfloat16):
+    concrete = jax.eval_shape(lambda: make_empty_cache(cfg, B, S, dtype))
+    return concrete
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM / MoE / VLM / enc-dec bundles
+# ---------------------------------------------------------------------------
+
+def _lm_inputs_train(params, cfg, batch):
+    """Embed the batch -> (x (B,S,D), labels (B,S), enc_h or None)."""
+    enc_h = None
+    if cfg.family == "vlm":
+        text = embed_tokens(params, cfg, batch["tokens"])
+        x = jnp.concatenate([batch["patches"].astype(text.dtype), text], axis=1)
+        P = batch["patches"].shape[1]
+        pad = jnp.full((x.shape[0], P), -1, jnp.int32)
+        labels = jnp.concatenate([pad, batch["labels"]], axis=1)
+    elif cfg.family == "audio":
+        enc_h = run_encoder(params, cfg, batch["frames"], remat=True)
+        x = embed_tokens(params, cfg, batch["tokens"])
+        labels = batch["labels"]
+    else:
+        x = embed_tokens(params, cfg, batch["tokens"])
+        labels = batch["labels"]
+    return x, labels, enc_h
+
+
+def build_lm_bundle(cfg: ArchConfig) -> Bundle:
+    defs = model_param_defs(cfg)
+
+    def loss_fn(params, batch):
+        x, labels, enc_h = _lm_inputs_train(params, cfg, batch)
+        h, _, metrics = backbone(params, cfg, x, 0, None, remat=True, enc_h=enc_h)
+        loss, lm_m = chunked_cross_entropy(h, params["lm_head"], labels, cfg.logit_chunk)
+        metrics = {**metrics, **lm_m}
+        if "moe_aux" in metrics:
+            loss = loss + cfg.router_aux_coef * metrics["moe_aux"]
+        return loss, metrics
+
+    def prefill_fn(params, batch):
+        enc_h = None
+        if cfg.family == "vlm":
+            text = embed_tokens(params, cfg, batch["tokens"])
+            x = jnp.concatenate([batch["patches"].astype(text.dtype), text], axis=1)
+        elif cfg.family == "audio":
+            enc_h = run_encoder(params, cfg, batch["frames"], remat=False)
+            x = embed_tokens(params, cfg, batch["tokens"])
+        else:
+            x = embed_tokens(params, cfg, batch["tokens"])
+        B, S = x.shape[0], x.shape[1]
+        cache = make_empty_cache(cfg, B, S, _adt(cfg))
+        h, cache, _ = backbone(params, cfg, x, 0, cache, remat=False, enc_h=enc_h)
+        return logits_last(params, cfg, h), cache
+
+    def decode_fn(params, cache, batch):
+        x = embed_tokens(params, cfg, batch["tokens"])
+        h, cache, _ = backbone(params, cfg, x, batch["pos"], cache, remat=False)
+        return logits_last(params, cfg, h), cache
+
+    def embed_fn(params, batch):
+        if "labels" not in batch:
+            batch = {**batch, "labels": batch["tokens"]}
+        x, _, enc_h = _lm_inputs_train(params, cfg, batch)
+        h, _, _ = backbone(params, cfg, x, 0, None, remat=False, enc_h=enc_h)
+        return h.mean(axis=1)
+
+    return Bundle(
+        cfg=cfg, param_defs=defs, loss_fn=loss_fn, prefill_fn=prefill_fn,
+        decode_fn=decode_fn, embed_fn=embed_fn,
+        empty_cache=lambda B, S: make_empty_cache(cfg, B, S, _adt(cfg)),
+        cache_specs=lambda B, S: make_cache_specs(cfg, B, S, _adt(cfg)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 bundle
+# ---------------------------------------------------------------------------
+
+def rwkv_model_param_defs(cfg: ArchConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), init="embed"),
+        "ln_in": {"w": ParamDef((D,), ("embed",), init="ones"),
+                  "b": ParamDef((D,), ("embed",), init="zeros")},
+        "layers": stack_defs(rwkv_layer_param_defs(cfg), cfg.n_layers),
+        "final_norm": {"w": ParamDef((D,), ("embed",), init="ones"),
+                       "b": ParamDef((D,), ("embed",), init="zeros")},
+        "lm_head": ParamDef((D, V), ("embed", "vocab")),
+    }
+
+
+def _rwkv_forward(params, cfg, x, cache, *, remat: bool):
+    from repro.models.layers import layernorm
+
+    x = layernorm(x, params["ln_in"]["w"], params["ln_in"]["b"])
+
+    def body(x, p, c):
+        return rwkv_layer(p, cfg, x, c)
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def f(carry, xs):
+        p, c = xs
+        y, nc = body(carry, p, c)
+        return y, nc
+
+    x, new_cache = jax.lax.scan(f, x, (params["layers"], cache))
+    x = layernorm(x, params["final_norm"]["w"], params["final_norm"]["b"])
+    return x, new_cache
+
+
+def build_rwkv_bundle(cfg: ArchConfig) -> Bundle:
+    defs = rwkv_model_param_defs(cfg)
+
+    def loss_fn(params, batch):
+        x = embed_tokens(params, cfg, batch["tokens"])
+        cache = rwkv_empty_cache(cfg, x.shape[0], x.dtype)
+        h, _ = _rwkv_forward(params, cfg, x, cache, remat=True)
+        return chunked_cross_entropy(h, params["lm_head"], batch["labels"], cfg.logit_chunk)
+
+    def prefill_fn(params, batch):
+        x = embed_tokens(params, cfg, batch["tokens"])
+        cache = rwkv_empty_cache(cfg, x.shape[0], x.dtype)
+        h, cache = _rwkv_forward(params, cfg, x, cache, remat=False)
+        return logits_last(params, cfg, h), cache
+
+    def decode_fn(params, cache, batch):
+        x = embed_tokens(params, cfg, batch["tokens"])
+        h, cache = _rwkv_forward(params, cfg, x, cache, remat=False)
+        return logits_last(params, cfg, h), cache
+
+    def embed_fn(params, batch):
+        x = embed_tokens(params, cfg, batch["tokens"])
+        cache = rwkv_empty_cache(cfg, x.shape[0], x.dtype)
+        h, _ = _rwkv_forward(params, cfg, x, cache, remat=False)
+        return h.mean(axis=1)
+
+    return Bundle(
+        cfg=cfg, param_defs=defs, loss_fn=loss_fn, prefill_fn=prefill_fn,
+        decode_fn=decode_fn, embed_fn=embed_fn,
+        empty_cache=lambda B, S: rwkv_empty_cache(cfg, B, _adt(cfg)),
+        cache_specs=lambda B, S: jax.eval_shape(
+            lambda: rwkv_empty_cache(cfg, B, _adt(cfg))),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid bundle (Mamba2 stack + one shared attention block)
+# ---------------------------------------------------------------------------
+
+def _zamba_n_apps(cfg: ArchConfig) -> int:
+    return -(-cfg.n_layers // cfg.attn_every)
+
+
+def zamba_model_param_defs(cfg: ArchConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), init="embed"),
+        "layers": stack_defs(mamba_param_defs(cfg), cfg.n_layers),
+        "shared_attn": layer_param_defs(cfg, moe=False),  # ONE shared block
+        "final_norm": norm_param_defs(cfg),
+        "lm_head": ParamDef((D, V), ("embed", "vocab")),
+    }
+
+
+def _zamba_forward(params, cfg, x, cache, pos, *, remat: bool):
+    """Mamba stack with the shared attention block applied every attn_every
+    layers (Zamba's parameter-sharing trick: same weights, distinct KV
+    caches per application site).  cache=None means training: mamba states
+    start at zero per sequence and no KV cache is threaded."""
+    from repro.models.layers import rope_angles
+    from repro.models.transformer import apply_norm
+
+    B, S, _ = x.shape
+    train = cache is None
+    positions = pos + jnp.arange(S)
+    cos, sin = rope_angles(positions, int(cfg.dh * cfg.rotary_frac), cfg.rope_theta)
+
+    mbody = lambda p, x, c: mamba_layer(p, cfg, x, c)
+    abody = lambda x, c: layer_fwd(params["shared_attn"], cfg, x, (cos, sin),
+                                   c, pos, moe=False)
+    if remat:
+        mbody = jax.checkpoint(mbody, policy=jax.checkpoint_policies.nothing_saveable)
+        abody = jax.checkpoint(abody, policy=jax.checkpoint_policies.nothing_saveable)
+
+    L, E = cfg.n_layers, cfg.attn_every
+    n_apps = _zamba_n_apps(cfg)
+    mcache = cache["mamba"] if not train else mamba_empty_cache(cfg, L, B, x.dtype)
+    new_attn_caches = []
+    new_mamba = []
+    sl = lambda t, i0, i1: jax.tree.map(lambda a: a[i0:i1], t)
+    for app in range(n_apps):
+        ac1 = None if train else jax.tree.map(lambda a: a[app], cache["attn"])
+        x, nc, _ = abody(x, ac1)
+        new_attn_caches.append(nc)
+        i0, i1 = app * E, min((app + 1) * E, L)
+        seg_params = sl(params["layers"], i0, i1)
+        seg_cache = sl(mcache, i0, i1)
+
+        def f(carry, xs):
+            p, c = xs
+            y, nc2 = mbody(p, carry, c)
+            return y, nc2
+
+        x, seg_new = jax.lax.scan(f, x, (seg_params, seg_cache))
+        new_mamba.append(seg_new)
+    x = apply_norm(cfg.norm_type, params, "final_norm", x)
+    if train:
+        return x, None
+    new_cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_mamba),
+        "attn": jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_attn_caches),
+    }
+    return x, new_cache
+
+
+def build_zamba_bundle(cfg: ArchConfig) -> Bundle:
+    defs = zamba_model_param_defs(cfg)
+    empty = lambda B, S: make_empty_cache(cfg, B, S, _adt(cfg))
+
+    def loss_fn(params, batch):
+        x = embed_tokens(params, cfg, batch["tokens"])
+        h, _ = _zamba_forward(params, cfg, x, None, 0, remat=True)
+        return chunked_cross_entropy(h, params["lm_head"], batch["labels"], cfg.logit_chunk)
+
+    def prefill_fn(params, batch):
+        x = embed_tokens(params, cfg, batch["tokens"])
+        cache = empty(x.shape[0], x.shape[1])
+        h, cache = _zamba_forward(params, cfg, x, cache, 0, remat=False)
+        return logits_last(params, cfg, h), cache
+
+    def decode_fn(params, cache, batch):
+        x = embed_tokens(params, cfg, batch["tokens"])
+        h, cache = _zamba_forward(params, cfg, x, cache, batch["pos"], remat=False)
+        return logits_last(params, cfg, h), cache
+
+    def embed_fn(params, batch):
+        x = embed_tokens(params, cfg, batch["tokens"])
+        h, _ = _zamba_forward(params, cfg, x, None, 0, remat=False)
+        return h.mean(axis=1)
+
+    return Bundle(
+        cfg=cfg, param_defs=defs, loss_fn=loss_fn, prefill_fn=prefill_fn,
+        decode_fn=decode_fn, embed_fn=embed_fn, empty_cache=empty,
+        cache_specs=lambda B, S: jax.eval_shape(lambda: empty(B, S)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# TCN bundle (the paper's architecture)
+# ---------------------------------------------------------------------------
+
+def build_tcn_bundle(cfg: ArchConfig) -> Bundle:
+    defs = tcn_mod.tcn_param_defs(cfg)
+
+    def loss_fn(params, batch, state=None, quantize=False):
+        state = state if state is not None else tcn_mod.tcn_empty_state(cfg)
+        emb, logits, new_state = tcn_mod.tcn_forward(
+            params, state, cfg, batch["x"], train=True, quantize=quantize)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+        loss = jnp.mean(lse - gold)
+        acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+        return loss, ({"acc": acc}, new_state)
+
+    def embed_fn(params, batch, state=None, quantize=False):
+        state = state if state is not None else tcn_mod.tcn_empty_state(cfg)
+        emb, _, _ = tcn_mod.tcn_forward(params, state, cfg, batch["x"],
+                                        train=False, quantize=quantize)
+        return emb
+
+    def prefill_fn(params, batch):
+        state = tcn_mod.tcn_empty_state(cfg)
+        emb, logits, _ = tcn_mod.tcn_forward(params, state, cfg, batch["x"])
+        return logits, {}
+
+    def decode_fn(params, cache, batch):  # streaming lives in core/streaming
+        raise NotImplementedError("use core.streaming for TCN decode")
+
+    return Bundle(
+        cfg=cfg, param_defs=defs, loss_fn=loss_fn, prefill_fn=prefill_fn,
+        decode_fn=decode_fn, embed_fn=embed_fn,
+        empty_cache=lambda B, S: {}, cache_specs=lambda B, S: {},
+    )
+
+
+BUILDERS = {
+    "dense": build_lm_bundle,
+    "moe": build_lm_bundle,
+    "vlm": build_lm_bundle,
+    "audio": build_lm_bundle,
+    "rwkv": build_rwkv_bundle,
+    "hybrid": build_zamba_bundle,
+    "tcn": build_tcn_bundle,
+}
+
+
+def build_bundle(cfg: ArchConfig) -> Bundle:
+    return BUILDERS[cfg.family](cfg)

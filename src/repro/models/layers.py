@@ -1,0 +1,305 @@
+"""Shared transformer building blocks: norms, rotary, attention (GQA + MLA),
+MLPs.  Pure functions of (params, x); parameter trees are declared with
+ParamDef (see sharding/rules.py) by the per-arch builders in transformer.py.
+
+Compute dtype is bf16 by default (params fp32, norms/softmax in fp32) —
+matching TPU v5e MXU-native precision.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import constrain
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+# Norms use custom VJPs with dtype-controlled backward passes.  Rationale
+# (measured, see EXPERIMENTS §Perf): (i) an x->f32 convert as the first op of
+# a checkpointed scan body makes XLA store the *converted* f32 tensor as the
+# per-layer residual, doubling the dominant activation-save memory; (ii) the
+# auto-derived transpose of a mixed-precision stats reduction promotes
+# x-shaped cotangents to f32.  Hand-writing the VJP keeps every x-shaped
+# tensor in the activation dtype while stats/param-grads accumulate in f32.
+
+def _f32_dot(a, b, sub):
+    return jnp.einsum(sub, a, b, preferred_element_type=jnp.float32)
+
+
+@jax.custom_vjp
+def _rms_core(x, w, eps):
+    D = x.shape[-1]
+    ms = _f32_dot(x, x, "...d,...d->...") / D
+    inv = jax.lax.rsqrt(ms + eps)
+    return x * inv[..., None].astype(x.dtype) * w.astype(x.dtype)
+
+
+def _rms_fwd(x, w, eps):
+    D = x.shape[-1]
+    ms = _f32_dot(x, x, "...d,...d->...") / D
+    inv = jax.lax.rsqrt(ms + eps)
+    y = x * inv[..., None].astype(x.dtype) * w.astype(x.dtype)
+    return y, (x, w, inv)
+
+
+def _rms_bwd(res, dy):
+    x, w, inv = res
+    D = x.shape[-1]
+    wb = w.astype(x.dtype)
+    invb = inv[..., None].astype(x.dtype)
+    # dw accumulates in f32 (param grad); dx stays in the activation dtype
+    dw = _f32_dot(dy * invb, x, "...d,...d->d" if x.ndim > 1 else "d,d->d")
+    s = _f32_dot(dy * wb, x, "...d,...d->...") / D  # (B,S) f32
+    coef = (inv ** 3 * s)[..., None].astype(x.dtype)
+    dx = dy * wb * invb - x * coef
+    return dx, dw.astype(w.dtype), None
+
+
+_rms_core.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rmsnorm(x, w, eps=1e-6):
+    return _rms_core(x, w, eps)
+
+
+@jax.custom_vjp
+def _ln_core(x, w, b, eps):
+    return _ln_fwd(x, w, b, eps)[0]
+
+
+def _ln_fwd(x, w, b, eps):
+    D = x.shape[-1]
+    mu = _f32_dot(x, jnp.ones((D,), x.dtype), "...d,d->...") / D
+    ms = _f32_dot(x, x, "...d,...d->...") / D
+    var = jnp.maximum(ms - jnp.square(mu), 0.0)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (x - mu[..., None].astype(x.dtype)) * inv[..., None].astype(x.dtype)
+    y = xhat * w.astype(x.dtype) + b.astype(x.dtype)
+    return y, (xhat, w, inv)
+
+
+def _ln_bwd(res, dy):
+    xhat, w, inv = res
+    D = xhat.shape[-1]
+    wb = w.astype(xhat.dtype)
+    dyw = dy * wb
+    db = _f32_dot(dy, jnp.ones(dy.shape[:-1], dy.dtype), "...d,...->d")
+    dw = _f32_dot(dy, xhat, "...d,...d->d")
+    m1 = (_f32_dot(dyw, jnp.ones((D,), xhat.dtype), "...d,d->...") / D)
+    m2 = (_f32_dot(dyw, xhat, "...d,...d->...") / D)
+    dx = (dyw - m1[..., None].astype(xhat.dtype)
+          - xhat * m2[..., None].astype(xhat.dtype))
+    dx = dx * inv[..., None].astype(xhat.dtype)
+    return dx, dw.astype(w.dtype), db.astype(w.dtype), None
+
+
+_ln_core.defvjp(_ln_fwd, _ln_bwd)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    D = x.shape[-1]
+    if w is None:
+        w = jnp.ones((D,), jnp.float32)
+    if b is None:
+        b = jnp.zeros((D,), jnp.float32)
+    return _ln_core(x, w, b, eps)
+
+
+def layernorm_np(x, eps=1e-5):
+    """Non-parametric LayerNorm (OLMo): no learnable scale/bias."""
+    return layernorm(x, None, None, eps)
+
+
+def apply_norm(norm_type: str, p: dict, name: str, x):
+    if norm_type == "rmsnorm":
+        return rmsnorm(x, p[name]["w"])
+    if norm_type == "layernorm":
+        return layernorm(x, p[name]["w"], p[name]["b"])
+    if norm_type == "layernorm_np":
+        return layernorm_np(x)
+    raise ValueError(norm_type)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions, dim: int, theta: float):
+    """positions (...,) int -> (cos, sin) of shape (..., dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rotary_frac: float = 1.0):
+    """x: (B, S, H, Dh); cos/sin: (B?, S, Dr/2). Rotates the first Dr dims."""
+    dr = cos.shape[-1] * 2
+    xr, xp = x[..., :dr], x[..., dr:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    c = cos[..., None, :].astype(x.dtype) if cos.ndim == x.ndim - 2 else cos.astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype) if sin.ndim == x.ndim - 2 else sin.astype(x.dtype)
+    # broadcast over the head axis: cos (B,S,1,Dr/2)
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1) if xp.shape[-1] else out
+
+
+# ---------------------------------------------------------------------------
+# Attention cores.  q: (B, Sq, Hq, Dh); k/v: (B, Skv, Hkv, Dh); GQA via
+# grouped einsum (never materializes repeated KV heads).
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _group_q(q, n_kv):
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def attention_dense(q, k, v, *, causal: bool, q_offset=0, kv_len=None, softmax_scale=None):
+    """Materialized-scores attention (fp32 softmax). For short/medium seqs."""
+    b, sq, hq, dh = q.shape
+    n_kv = k.shape[2]
+    scale = softmax_scale if softmax_scale is not None else dh ** -0.5
+    qg = _group_q(q, n_kv)  # (B,Sq,Hkv,G,Dh)
+    # f32 via dot accumulation (MXU-native): an .astype(f32) on the output
+    # makes XLA materialize convert(k) — hoisted out of the layer scan, that
+    # is a full f32 copy of the KV cache (measured 5 GiB/device at 32k).
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    skv = k.shape[1]
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(skv)[None, :]
+        scores = jnp.where(kpos <= qpos, scores, NEG_INF)
+    if kv_len is not None:  # mask out cache positions beyond current length
+        scores = jnp.where(jnp.arange(skv)[None, :] < kv_len, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, v.shape[-1])  # v dim may differ (MLA)
+
+
+def attention_chunked(q, k, v, *, causal: bool, kv_chunk: int = 1024, softmax_scale=None):
+    """Flash-style online-softmax attention, scanning over KV chunks.
+
+    O(Sq * kv_chunk) live memory instead of O(Sq * Skv): required to lower
+    32k-token prefill within HBM.  Fully-masked (future) chunks still execute
+    (scan has a static trip count) but are numerically inert; the causal skip
+    is a hillclimb lever (see EXPERIMENTS §Perf).
+    """
+    b, sq, hq, dh = q.shape
+    skv = k.shape[1]
+    n_kv = k.shape[2]
+    scale = softmax_scale if softmax_scale is not None else dh ** -0.5
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, n_kv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, n_kv, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+    qg = _group_q(q, n_kv)
+    qpos = jnp.arange(sq)[:, None]
+
+    # remat per KV chunk: without this the scan stacks every chunk's (Sq,
+    # kv_chunk) prob tensor as a backward residual — 4 GiB/layer at 4k x 1k
+    # chunks on d8192 models.  Recomputing scores in the bwd pass is the
+    # flash-attention backward by construction.
+    @jax.checkpoint
+    def body(carry, xs):
+        m, l, acc = carry
+        idx, kb, vb = xs
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kb,
+                            preferred_element_type=jnp.float32) * scale
+        kpos = idx * kv_chunk + jnp.arange(kv_chunk)[None, :]
+        mask = kpos < skv
+        if causal:
+            mask = mask & (kpos <= qpos)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(q.dtype), vb
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    g = hq // n_kv
+    dv = v.shape[-1]
+    # constrain the online-softmax carries: they are fresh zeros, and
+    # without a constraint GSPMD replicates the head dim (GiBs of f32 acc)
+    m0 = constrain(jnp.full((b, n_kv, g, sq), NEG_INF, jnp.float32),
+                   ("batch", "heads_act", None, None))
+    l0 = constrain(jnp.zeros((b, n_kv, g, sq), jnp.float32),
+                   ("batch", "heads_act", None, None))
+    a0 = constrain(jnp.zeros((b, n_kv, g, sq, dv), jnp.float32),
+                   ("batch", "heads_act", None, None, None))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal: bool, q_offset=0, kv_len=None,
+              softmax_scale=None, chunked_threshold: int = 8192):
+    # Prefill (q_offset==0, kv_len==Sq) needs no cache-length mask: the
+    # causal mask subsumes it, so the flash-chunked path applies.  Without
+    # this, 32k prefill materializes S x S f32 scores (32 GiB/head-group).
+    prefill_like = (isinstance(q_offset, int) and q_offset == 0
+                    and isinstance(kv_len, int) and kv_len == q.shape[1])
+    if q.shape[1] > 1 and k.shape[1] >= chunked_threshold and causal \
+            and (kv_len is None or prefill_like):
+        return attention_chunked(q, k, v, causal=True, softmax_scale=softmax_scale)
+    if q.shape[1] > 1 and k.shape[1] >= chunked_threshold and kv_len is None:
+        return attention_chunked(q, k, v, causal=causal, softmax_scale=softmax_scale)
+    return attention_dense(
+        q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+        softmax_scale=softmax_scale,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_swiglu(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    h = constrain(h, ("batch", None, "ffn"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))
+
+
+def mlp_gelu(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if "bi" in p:
+        h = h + p["bi"].astype(x.dtype)
+    h = jax.nn.gelu(h)
+    h = constrain(h, ("batch", None, "ffn"))
+    h = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))
+    if "bd" in p:
+        h = h + p["bd"].astype(x.dtype)
+    return h
+
+
+def mlp_relu(p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if "bi" in p:
+        h = h + p["bi"].astype(x.dtype)
+    h = jax.nn.relu(h)
+    h = constrain(h, ("batch", None, "ffn"))
+    h = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))
+    if "bd" in p:
+        h = h + p["bd"].astype(x.dtype)
+    return h
+
+
+MLP_FNS = {"swiglu": mlp_swiglu, "gelu": mlp_gelu, "relu": mlp_relu}

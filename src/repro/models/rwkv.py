@@ -1,0 +1,201 @@
+"""RWKV6 ("Finch") — attention-free time mixing with data-dependent decay.
+
+TPU adaptation: the per-token recurrence S_t = diag(w_t) S_{t-1} + k_t v_t^T
+is executed in *chunked matmul form* (like flash-linear-attention) so the MXU
+does the work: within a chunk of length C the token-token interaction is a
+(C, C) masked score matrix with per-channel decay factors; across chunks only
+the (Dh, Dh) state is carried by a lax.scan.  All exp() arguments are <= 0 by
+construction, so the chunking is numerically safe.  This mirrors the paper's
+theme of restructuring a sequential dataflow for the available compute array.
+
+Decode is a single O(1)-state update — the Chameleon FIFO idea degenerating
+to one slot (see DESIGN §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import layernorm
+from repro.sharding.rules import ParamDef
+
+CHUNK = 32
+
+
+def rwkv_layer_param_defs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    F = cfg.d_ff
+    R = cfg.rwkv_decay_lora
+    mix = lambda: ParamDef((D,), ("embed",), init="zeros")
+    return {
+        "ln1": {"w": ParamDef((D,), ("embed",), init="ones"),
+                "b": ParamDef((D,), ("embed",), init="zeros")},
+        "ln2": {"w": ParamDef((D,), ("embed",), init="ones"),
+                "b": ParamDef((D,), ("embed",), init="zeros")},
+        "time": {
+            "mix_r": mix(), "mix_k": mix(), "mix_v": mix(), "mix_g": mix(), "mix_w": mix(),
+            "wr": ParamDef((D, D), ("embed", "heads")),
+            "wk": ParamDef((D, D), ("embed", "heads")),
+            "wv": ParamDef((D, D), ("embed", "heads")),
+            "wg": ParamDef((D, D), ("embed", "heads")),
+            "w0": ParamDef((D,), ("embed",), init="zeros"),
+            "wa": ParamDef((D, R), ("embed", None)),
+            "wb": ParamDef((R, D), (None, "heads")),
+            "u": ParamDef((D,), ("embed",), init="zeros"),
+            "wo": ParamDef((D, D), ("heads", "embed")),
+            "gn_w": ParamDef((D,), ("embed",), init="ones"),
+            "gn_b": ParamDef((D,), ("embed",), init="zeros"),
+        },
+        "channel": {
+            "mix_k": mix(), "mix_r": mix(),
+            "wk": ParamDef((D, F), ("embed", "ffn")),
+            "wv": ParamDef((F, D), ("ffn", "embed")),
+            "wr": ParamDef((D, D), ("embed", "heads")),
+        },
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: (B,S,D); x_prev: (B,D) carry from the previous step/chunk."""
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def _decay(p, xw):
+    """Data-dependent decay w_t in (0,1): exp(-exp(w0 + tanh(x@A)@B))."""
+    lora = jnp.einsum("bsd,dr->bsr", xw, p["wa"].astype(xw.dtype))
+    logw = p["w0"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd", jnp.tanh(lora), p["wb"].astype(xw.dtype)
+    ).astype(jnp.float32)
+    return -jnp.exp(logw)  # log-decay (<= 0); w = exp(log_w)
+
+
+def wkv_chunked(r, k, v, log_w, u, state):
+    """Chunked WKV6 recurrence.
+
+    r,k,v: (B, T, H, Dh); log_w: (B, T, H, Dh) (<=0); u: (H, Dh);
+    state: (B, H, Dh, Dh) [k-dim x v-dim].  T must be a multiple of CHUNK.
+    Returns (y (B,T,H,Dh), final state).
+    """
+    B, T, H, Dh = r.shape
+    C = min(CHUNK, T)
+    n = -(-T // C)
+    pad = n * C - T
+    if pad:
+        # zero r/k/v and log_w=0 (decay 1) leave the state untouched
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, log_w = map(zpad, (r, k, v, log_w))
+    resh = lambda x: x.reshape(B, n, C, H, Dh).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = map(resh, (r, k, v, log_w))
+
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)  # strictly lower: s < t
+
+    def body(S, xs):
+        rb, kb, vb, wb = xs  # (B, C, H, Dh)
+        cum = jnp.cumsum(wb.astype(jnp.float32), axis=1)  # L_t inclusive
+        cum_prev = cum - wb.astype(jnp.float32)           # L_{t-1}
+        # intra-chunk scores: att[t,s] = sum_i r[t,i] k[s,i] exp(L_{t-1,i}-L_{s,i})
+        att = jnp.einsum(
+            "bthi,bshi,btshi->bhts",
+            rb.astype(jnp.float32), kb.astype(jnp.float32),
+            jnp.exp(cum_prev[:, :, None] - cum[:, None, :]),
+        )
+        att = jnp.where(mask[None, None], att, 0.0)
+        # diagonal bonus term: (r_t * u * k_t) -> weight for v_t
+        diag = jnp.einsum("bthi,hi,bthi->bth", rb.astype(jnp.float32),
+                          u.astype(jnp.float32), kb.astype(jnp.float32))
+        y = jnp.einsum("bhts,bshj->bthj", att, vb.astype(jnp.float32))
+        y = y + diag[..., None] * vb.astype(jnp.float32)
+        # contribution from carried state: r~_t = r_t * exp(L_{t-1})
+        rt = rb.astype(jnp.float32) * jnp.exp(cum_prev)
+        y = y + jnp.einsum("bthi,bhij->bthj", rt, S)
+        # state update: S' = exp(L_C) (.) S + sum_s exp(L_C - L_s) k_s v_s^T
+        kt = kb.astype(jnp.float32) * jnp.exp(cum[:, -1:, :, :] - cum)
+        S_new = jnp.exp(cum[:, -1])[..., None] * S + jnp.einsum("bshi,bshj->bhij", kt, vb.astype(jnp.float32))
+        return S_new, y
+
+    state, ys = jax.lax.scan(body, state.astype(jnp.float32), (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, n * C, H, Dh)[:, :T]
+    return y.astype(r.dtype), state
+
+
+def wkv_step(r, k, v, log_w, u, state):
+    """Single-token decode update. r,k,v,log_w: (B,H,Dh); state: (B,H,Dh,Dh)."""
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    y = jnp.einsum("bhi,bhij->bhj", rf, state) + \
+        jnp.einsum("bhi,hi,bhi,bhj->bhj", rf, u.astype(jnp.float32), kf, vf)
+    state = jnp.exp(log_w.astype(jnp.float32))[..., None] * state + \
+        jnp.einsum("bhi,bhj->bhij", kf, vf)
+    return y.astype(r.dtype), state
+
+
+def _group_norm(y, w, b, H):
+    """Per-head LayerNorm on (B, T, H, Dh) flattened output (RWKV ln_x)."""
+    B, T, _, Dh = y.shape
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yn = yn.reshape(B, T, H * Dh) * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return yn
+
+
+def time_mix(p, cfg: ArchConfig, x, x_prev, state):
+    """RWKV6 time-mixing. x: (B,S,D). Returns (out, (new_x_prev, new_state))."""
+    B, S, D = x.shape
+    H = D // cfg.rwkv_head_dim
+    Dh = cfg.rwkv_head_dim
+    xs = _token_shift(x, x_prev)
+    lerp = lambda m: x + (xs - x) * p[m].astype(x.dtype)
+    xr, xk, xv, xg, xw = (lerp(m) for m in ("mix_r", "mix_k", "mix_v", "mix_g", "mix_w"))
+    proj = lambda h, w: jnp.einsum("bsd,de->bse", h, p[w].astype(x.dtype))
+    r = proj(xr, "wr").reshape(B, S, H, Dh)
+    k = proj(xk, "wk").reshape(B, S, H, Dh)
+    v = proj(xv, "wv").reshape(B, S, H, Dh)
+    g = jax.nn.silu(proj(xg, "wg"))
+    log_w = _decay(p, xw).reshape(B, S, H, Dh)
+    u = p["u"].reshape(H, Dh)
+    if S == 1:
+        y, state = wkv_step(r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], u, state)
+        y = y[:, None]
+    else:
+        y, state = wkv_chunked(r, k, v, log_w, u, state)
+    y = _group_norm(y, p["gn_w"], p["gn_b"], H).astype(x.dtype) * g
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+    return out, (x[:, -1, :], state)
+
+
+def channel_mix(p, cfg: ArchConfig, x, x_prev):
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * p["mix_k"].astype(x.dtype)
+    xr = x + (xs - x) * p["mix_r"].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype)))
+    return r * kv, x[:, -1, :]
+
+
+def rwkv_layer(p, cfg: ArchConfig, x, cache):
+    """cache: {'x_prev_t','x_prev_c': (B,D), 'state': (B,H,Dh,Dh)}."""
+    h = layernorm(x, p["ln1"]["w"], p["ln1"]["b"])
+    dt, (xp_t, state) = time_mix(p["time"], cfg, h, cache["x_prev_t"], cache["state"])
+    x = x + dt
+    h = layernorm(x, p["ln2"]["w"], p["ln2"]["b"])
+    dc, xp_c = channel_mix(p["channel"], cfg, h, cache["x_prev_c"])
+    x = x + dc
+    return x, {"x_prev_t": xp_t, "x_prev_c": xp_c, "state": state}
+
+
+def rwkv_empty_cache(cfg: ArchConfig, batch: int, dtype):
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    Dh = cfg.rwkv_head_dim
+    L = cfg.n_layers
+    return {
+        "x_prev_t": jnp.zeros((L, batch, D), dtype),
+        "x_prev_c": jnp.zeros((L, batch, D), dtype),
+        "state": jnp.zeros((L, batch, H, Dh, Dh), jnp.float32),
+    }

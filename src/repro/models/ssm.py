@@ -1,0 +1,147 @@
+"""Mamba2 (SSD) blocks for the zamba2 hybrid architecture.
+
+Chunked matmul-form execution of the selective-state recurrence
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * B_t x_t^T,   y_t = C_t . S_t + D_h x_t
+(scalar decay per head) — within-chunk interactions become a masked (C, C)
+score matrix on the MXU; the (N, P) state is carried across chunks by a scan.
+The depthwise conv1d in front is exactly the paper's ring-buffer pattern at
+decode time: a (k-1)-deep FIFO per channel (see core/streaming.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import rmsnorm
+from repro.sharding.rules import ParamDef
+
+CHUNK = 64
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mamba_param_defs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    d_inner, H, N, P = _dims(cfg)
+    conv_dim = d_inner + 2 * N  # x, B, C get the depthwise conv
+    proj_out = 2 * d_inner + 2 * N + H  # z, x, B, C, dt
+    return {
+        "norm": {"w": ParamDef((D,), ("embed",), init="ones")},
+        "in_proj": ParamDef((D, proj_out), ("embed", "ffn")),
+        "conv_w": ParamDef((cfg.ssm_conv_k, conv_dim), ("conv_k", "ffn"), scale=0.2),
+        "conv_b": ParamDef((conv_dim,), ("ffn",), init="zeros"),
+        "a_log": ParamDef((H,), ("heads",), init="zeros"),
+        "dt_bias": ParamDef((H,), ("heads",), init="zeros"),
+        "d_skip": ParamDef((H,), ("heads",), init="ones"),
+        "out_norm": {"w": ParamDef((d_inner,), ("ffn",), init="ones")},
+        "out_proj": ParamDef((d_inner, D), ("ffn", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, ring=None):
+    """Depthwise causal conv1d. x: (B,S,C); w: (K,C); ring: (B,K-1,C) or None.
+
+    Returns (y, new_ring).  new_ring carries the last K-1 inputs — the
+    Chameleon FIFO for decode.
+    """
+    K = w.shape[0]
+    if ring is None:
+        ring = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([ring, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_ring = xp[:, -(K - 1):, :]
+    return jax.nn.silu(y), new_ring
+
+
+def ssd_chunked(x, dt, A, B, C, state):
+    """Chunked SSD. x: (B,T,H,P); dt: (B,T,H); A: (H,) (<0);
+    B,C: (B,T,N); state: (B,H,N,P). Returns (y, state)."""
+    Bb, T, H, P = x.shape
+    N = B.shape[-1]
+    Cl = min(CHUNK, T)
+    n = -(-T // Cl)
+    pad = n * Cl - T
+    if pad:
+        # dt=0 -> decay exp(0)=1 and zero update: state passes through
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    xr = x.reshape(Bb, n, Cl, H, P).transpose(1, 0, 2, 3, 4)
+    dtr = dt.reshape(Bb, n, Cl, H).transpose(1, 0, 2, 3)
+    Br = B.reshape(Bb, n, Cl, N).transpose(1, 0, 2, 3)
+    Cr = C.reshape(Bb, n, Cl, N).transpose(1, 0, 2, 3)
+    mask = jnp.tril(jnp.ones((Cl, Cl), bool))  # s <= t
+
+    def body(S, xs):
+        xb, dtb, Bb_, Cb = xs  # (B,C,H,P), (B,C,H), (B,C,N), (B,C,N)
+        ldec = dtb.astype(jnp.float32) * A.astype(jnp.float32)  # log decay per step (<=0)
+        cum = jnp.cumsum(ldec, axis=1)  # (B,C,H) inclusive
+        # scores[t,s] = (C_t . B_s) exp(cum_t - cum_s) dt_s   for s <= t
+        cb = jnp.einsum("btn,bsn->bts", Cb.astype(jnp.float32), Bb_.astype(jnp.float32))
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,t,s,H)
+        att = cb[..., None] * dec * dtb[:, None, :, :]
+        att = jnp.where(mask[None, :, :, None], att, 0.0)
+        y = jnp.einsum("btsh,bshp->bthp", att, xb.astype(jnp.float32))
+        # inter-chunk: y_t += C_t . (exp(cum_t) * S)
+        y = y + jnp.einsum("btn,bth,bhnp->bthp", Cb.astype(jnp.float32),
+                           jnp.exp(cum), S)
+        # state: S' = exp(cum_C) S + sum_s exp(cum_C - cum_s) dt_s B_s x_s^T
+        w_s = jnp.exp(cum[:, -1:, :] - cum) * dtb  # (B,C,H)
+        S_new = jnp.exp(cum[:, -1])[..., None, None] * S + \
+            jnp.einsum("bsn,bsh,bshp->bhnp", Bb_.astype(jnp.float32), w_s, xb.astype(jnp.float32))
+        return S_new, y
+
+    state, ys = jax.lax.scan(body, state.astype(jnp.float32), (xr, dtr, Br, Cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bb, n * Cl, H, P)[:, :T]
+    return y.astype(x.dtype), state
+
+
+def ssd_step(x, dt, A, B, C, state):
+    """Single-token decode. x: (B,H,P); dt: (B,H); B,C: (B,N); state: (B,H,N,P)."""
+    dec = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhnp", B.astype(jnp.float32), dt.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    state = dec[..., None, None] * state + upd
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), state)
+    return y.astype(x.dtype), state
+
+
+def mamba_layer(p, cfg: ArchConfig, x, cache):
+    """Mamba2 block. x: (B,S,D); cache: {'conv': (B,K-1,convdim), 'ssm': (B,H,N,P)}."""
+    B_, S, D = x.shape
+    d_inner, H, N, P = _dims(cfg)
+    h = rmsnorm(x, p["norm"]["w"])
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(x.dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], cache["conv"])
+    xs, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(B_, S, H, P)
+    if S == 1:
+        y, new_ssm = ssd_step(xh[:, 0], dt[:, 0], A, Bmat[:, 0], Cmat[:, 0], cache["ssm"])
+        y = y[:, None]
+    else:
+        y, new_ssm = ssd_chunked(xh, dt, A, Bmat, Cmat, cache["ssm"])
+    y = y + p["d_skip"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(B_, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"]["w"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return x + out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def mamba_empty_cache(cfg: ArchConfig, n_layers: int, batch: int, dtype):
+    d_inner, H, N, P = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv_k - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((n_layers, batch, H, N, P), jnp.float32),
+    }

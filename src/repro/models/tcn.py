@@ -1,0 +1,175 @@
+"""Temporal Convolutional Network — the paper's embedder (§III-B, Fig. 7).
+
+Residual blocks of two causal dilated Conv1d + BN + ReLU; dilation doubles per
+block so the receptive field grows exponentially (Eq. 7).  Supports:
+
+  * fp32 training (batch-norm with running stats carried in a state pytree),
+  * QAT: 4-bit signed log2 weights + 4-bit unsigned uniform activations with
+    BN folded into the preceding conv (the paper's Brevitas flow, §IV-A),
+  * full-sequence inference (training/embedding) and O(R)-state streaming
+    (core/streaming.py — the greedy dilation-aware FIFO execution).
+
+The final embedding is the last timestep's features projected to V dims; the
+classifier is a plain FC layer — exactly the layer the PN-as-FC learning rule
+(core/protonet.py) writes into.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.quant.log2 import fake_quant_act_u4, fake_quant_log2
+from repro.sharding.rules import ParamDef
+
+BN_EPS = 1e-5
+
+
+def receptive_field(cfg: ArchConfig) -> int:
+    k = cfg.tcn_kernel
+    return 1 + sum(2 * (2 ** b) * (k - 1) for b in range(len(cfg.tcn_channels)))
+
+
+def tcn_param_defs(cfg: ArchConfig) -> dict:
+    k = cfg.tcn_kernel
+    chans = cfg.tcn_channels
+    defs: dict = {"blocks": {}}
+    c_in = cfg.tcn_in_channels
+    for i, c_out in enumerate(chans):
+        b: dict = {
+            "conv1_w": ParamDef((k, c_in, c_out), ("conv_k", "channels_in", "channels")),
+            "conv1_b": ParamDef((c_out,), ("channels",), init="zeros"),
+            "conv2_w": ParamDef((k, c_out, c_out), ("conv_k", "channels_in", "channels")),
+            "conv2_b": ParamDef((c_out,), ("channels",), init="zeros"),
+            "bn1": {"scale": ParamDef((c_out,), ("channels",), init="ones"),
+                    "bias": ParamDef((c_out,), ("channels",), init="zeros")},
+            "bn2": {"scale": ParamDef((c_out,), ("channels",), init="ones"),
+                    "bias": ParamDef((c_out,), ("channels",), init="zeros")},
+        }
+        if c_in != c_out:
+            b["down_w"] = ParamDef((1, c_in, c_out), ("conv_k", "channels_in", "channels"))
+            b["down_b"] = ParamDef((c_out,), ("channels",), init="zeros")
+        defs["blocks"][f"b{i}"] = b
+        c_in = c_out
+    defs["head_w"] = ParamDef((c_in, cfg.embed_dim), ("channels_in", None))
+    defs["head_b"] = ParamDef((cfg.embed_dim,), (None,), init="zeros")
+    defs["fc"] = {
+        "w": ParamDef((cfg.embed_dim, cfg.n_classes), (None, "proto"), init="zeros"),
+        "b": ParamDef((cfg.n_classes,), ("proto",), init="zeros"),
+    }
+    return defs
+
+
+def tcn_empty_state(cfg: ArchConfig) -> dict:
+    st = {}
+    for i, c in enumerate(cfg.tcn_channels):
+        st[f"b{i}"] = {
+            "bn1_mean": jnp.zeros((c,)), "bn1_var": jnp.ones((c,)),
+            "bn2_mean": jnp.zeros((c,)), "bn2_var": jnp.ones((c,)),
+        }
+    return st
+
+
+def causal_conv1d(x, w, b, dilation: int):
+    """x: (B, T, Cin); w: (K, Cin, Cout). Left-padded causal dilated conv."""
+    k = w.shape[0]
+    pad = (k - 1) * dilation
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype),
+        window_strides=(1,), padding=[(pad, 0)], rhs_dilation=(dilation,),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    ) + b.astype(x.dtype)
+
+
+def _bn(x, scale, bias, mean, var):
+    inv = jax.lax.rsqrt(var + BN_EPS)
+    return (x - mean) * inv * scale + bias
+
+
+def _bn_train(x, scale, bias, run_mean, run_var, momentum=0.9):
+    mean = jnp.mean(x, axis=(0, 1))
+    var = jnp.var(x, axis=(0, 1))
+    y = _bn(x, scale, bias, mean, var)
+    new_mean = momentum * run_mean + (1 - momentum) * mean
+    new_var = momentum * run_var + (1 - momentum) * var
+    return y, new_mean, new_var
+
+
+def _maybe_q_w(w, quantize):
+    return fake_quant_log2(w) if quantize else w
+
+
+def _maybe_q_a(x, quantize, scale=0.25):
+    # fixed per-tensor scale (the paper's trained requantizer): makes the
+    # quantized streaming/cone executors bit-consistent with full-sequence
+    # inference (a data-dependent max would differ per execution schedule)
+    import jax.numpy as _jnp
+    return fake_quant_act_u4(x, _jnp.float32(scale)) if quantize else x
+
+
+def tcn_forward(params, state, cfg: ArchConfig, x, *, train: bool = False,
+                quantize: bool = False):
+    """x: (B, T, C_in) -> (embedding (B, V), logits (B, n_classes), new_state).
+
+    quantize=True runs the QAT fake-quant path (log2 weights, u4 activations);
+    when quantize is set with train=False, BN uses running stats — matching
+    the paper's deployment flow where BN is folded into the conv weights.
+    """
+    new_state = {}
+    h = x
+    for i in range(len(cfg.tcn_channels)):
+        p = params["blocks"][f"b{i}"]
+        st = state[f"b{i}"]
+        d = 2 ** i
+        ns = dict(st)
+        y = causal_conv1d(h, _maybe_q_w(p["conv1_w"], quantize), p["conv1_b"], d)
+        if train:
+            y, ns["bn1_mean"], ns["bn1_var"] = _bn_train(
+                y, p["bn1"]["scale"], p["bn1"]["bias"], st["bn1_mean"], st["bn1_var"])
+        else:
+            y = _bn(y, p["bn1"]["scale"], p["bn1"]["bias"], st["bn1_mean"], st["bn1_var"])
+        y = _maybe_q_a(jax.nn.relu(y), quantize, cfg.act_scale)
+        y = causal_conv1d(y, _maybe_q_w(p["conv2_w"], quantize), p["conv2_b"], d)
+        if train:
+            y, ns["bn2_mean"], ns["bn2_var"] = _bn_train(
+                y, p["bn2"]["scale"], p["bn2"]["bias"], st["bn2_mean"], st["bn2_var"])
+        else:
+            y = _bn(y, p["bn2"]["scale"], p["bn2"]["bias"], st["bn2_mean"], st["bn2_var"])
+        if "down_w" in p:
+            res = causal_conv1d(h, _maybe_q_w(p["down_w"], quantize), p["down_b"], 1)
+        else:
+            res = h
+        h = _maybe_q_a(jax.nn.relu(y + res), quantize, cfg.act_scale)
+        new_state[f"b{i}"] = ns
+    feat = h[:, -1, :]  # causal: last timestep sees the full receptive field
+    emb = feat @ _maybe_q_w(params["head_w"], quantize) + params["head_b"]
+    emb = _maybe_q_a(jax.nn.relu(emb), quantize, cfg.act_scale)  # u4 embeddings (§IV-A)
+    logits = emb @ params["fc"]["w"] + params["fc"]["b"]
+    return emb, logits, new_state
+
+
+def fold_bn(params, state, cfg: ArchConfig):
+    """Fold BN into conv weights/biases (deployment, paper §IV-A).
+
+    Returns params' such that conv+bias reproduces conv+BN with running stats;
+    BN params become identity.  Enables the pure conv streaming executor and
+    the packed log2 deployment pipeline.
+    """
+    import copy
+    out = jax.tree.map(lambda x: x, params)  # shallow-ish copy of the tree
+    for i in range(len(cfg.tcn_channels)):
+        p = dict(out["blocks"][f"b{i}"])
+        st = state[f"b{i}"]
+        for conv, bn in (("conv1", "bn1"), ("conv2", "bn2")):
+            scale = p[bn]["scale"] / jnp.sqrt(st[f"{bn}_var"] + BN_EPS)
+            p[f"{conv}_w"] = p[f"{conv}_w"] * scale[None, None, :]
+            p[f"{conv}_b"] = (p[f"{conv}_b"] - st[f"{bn}_mean"]) * scale + p[bn]["bias"]
+            p[bn] = {"scale": jnp.ones_like(scale), "bias": jnp.zeros_like(scale)}
+        out["blocks"][f"b{i}"] = p
+    new_state = jax.tree.map(
+        lambda x: jnp.zeros_like(x), tcn_empty_state(cfg))
+    for b in new_state.values():  # var must fold to 1, mean to 0
+        b["bn1_var"] = jnp.ones_like(b["bn1_var"]) * (1.0 - BN_EPS)
+        b["bn2_var"] = jnp.ones_like(b["bn2_var"]) * (1.0 - BN_EPS)
+    return out, new_state

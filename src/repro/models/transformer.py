@@ -1,0 +1,485 @@
+"""Decoder-only and encoder-decoder transformer assembly.
+
+Covers the dense / moe / vlm / audio families (GQA + MLA attention, SwiGLU /
+GELU MLPs, MoE FFNs, parallel residual blocks).  Layers are *scanned* over
+stacked parameters — HLO size and SPMD-partitioning time are O(1) in depth,
+which is what makes compiling 40 (arch x shape) cells on one core (and pod-
+scale compile caches) tractable.
+
+Three execution modes share one layer body:
+  train   — no cache, remat per layer, chunked cross-entropy loss
+  prefill — builds the KV cache (chunked flash attention for 32k inputs)
+  decode  — single-token step against the cache
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    MLP_FNS,
+    apply_norm,
+    apply_rope,
+    attention,
+    rope_angles,
+)
+from repro.models.moe import moe_ffn, moe_param_defs
+from repro.sharding.ctx import constrain
+from repro.sharding.rules import ParamDef
+
+
+def _adt(cfg):
+    return jnp.bfloat16 if cfg.act_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+# ---------------------------------------------------------------------------
+
+def norm_param_defs(cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"w": ParamDef((D,), ("embed",), init="ones")}
+    if cfg.norm_type == "layernorm":
+        return {"w": ParamDef((D,), ("embed",), init="ones"),
+                "b": ParamDef((D,), ("embed",), init="zeros")}
+    return {}  # layernorm_np: non-parametric
+
+
+def attn_param_defs(cfg: ArchConfig) -> dict:
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    if cfg.use_mla:
+        dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+        return {
+            "wq": ParamDef((D, H * (dn + dr)), ("embed", "heads")),
+            "w_dkv": ParamDef((D, r + dr), ("embed", None)),
+            "kv_norm": ParamDef((r,), (None,), init="ones"),
+            "w_ukv": ParamDef((r, H * (dn + dv)), (None, "heads")),
+            "wo": ParamDef((H * dv, D), ("heads", "embed"), scale=(H * dv) ** -0.5),
+        }
+    defs = {
+        "wq": ParamDef((D, H * Dh), ("embed", "heads")),
+        "wk": ParamDef((D, Hkv * Dh), ("embed", "kv_heads")),
+        "wv": ParamDef((D, Hkv * Dh), ("embed", "kv_heads")),
+        "wo": ParamDef((H * Dh, D), ("heads", "embed"), scale=(H * Dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((H * Dh,), ("heads",), init="zeros")
+        defs["bk"] = ParamDef((Hkv * Dh,), ("kv_heads",), init="zeros")
+        defs["bv"] = ParamDef((Hkv * Dh,), ("kv_heads",), init="zeros")
+    return defs
+
+
+def mlp_param_defs(cfg: ArchConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wg": ParamDef((D, F), ("embed", "ffn")),
+            "wi": ParamDef((D, F), ("embed", "ffn")),
+            "wd": ParamDef((F, D), ("ffn", "embed"), scale=F ** -0.5),
+        }
+    defs = {
+        "wi": ParamDef((D, F), ("embed", "ffn")),
+        "wd": ParamDef((F, D), ("ffn", "embed"), scale=F ** -0.5),
+    }
+    if cfg.mlp_bias:
+        defs["bi"] = ParamDef((F,), ("ffn",), init="zeros")
+        defs["bd"] = ParamDef((D,), ("embed",), init="zeros")
+    return defs
+
+
+def layer_param_defs(cfg: ArchConfig, *, moe: bool, cross: bool = False) -> dict:
+    defs = {"attn_norm": norm_param_defs(cfg), "attn": attn_param_defs(cfg)}
+    if not cfg.parallel_block:
+        defs["mlp_norm"] = norm_param_defs(cfg)
+    defs["mlp"] = moe_param_defs(cfg) if moe else mlp_param_defs(cfg)
+    if cross:
+        defs["cross_norm"] = norm_param_defs(cfg)
+        defs["cross"] = attn_param_defs(cfg.replace(use_mla=False))
+    return defs
+
+
+def stack_defs(defs, n: int):
+    """Prepend a scanned 'layers' dimension to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.dtype, d.scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def model_param_defs(cfg: ArchConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), init="embed"),
+        "final_norm": norm_param_defs(cfg),
+        "lm_head": ParamDef((D, V), ("embed", "vocab")),
+    }
+    if cfg.is_encdec:
+        n_dec = cfg.n_layers
+        defs["enc_layers"] = stack_defs(layer_param_defs(cfg, moe=False), cfg.n_enc_layers)
+        defs["enc_norm"] = norm_param_defs(cfg)
+        defs["layers"] = stack_defs(layer_param_defs(cfg, moe=False, cross=True), n_dec)
+        return defs
+    n_moe = cfg.n_layers - cfg.n_dense_layers if cfg.n_experts else 0
+    n_dense = cfg.n_layers - n_moe
+    if n_dense:
+        defs["layers"] = stack_defs(layer_param_defs(cfg, moe=False), n_dense)
+    if n_moe:
+        defs["moe_layers"] = stack_defs(layer_param_defs(cfg, moe=True), n_moe)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Attention blocks (GQA and MLA) with optional cache
+# ---------------------------------------------------------------------------
+
+def gqa_attn(p, cfg: ArchConfig, x, rope_cs, cache, pos, *, causal=True,
+             kv_x=None, cross_cached=False):
+    """Self- or cross-attention with optional KV cache.
+
+    Modes (selected statically by the caller):
+      self, no cache          — training / encoder
+      self, cache + pos       — prefill (pos=0) or decode (pos=t): updates cache
+      cross, kv_x             — compute cross K/V from encoder output
+      cross, cross_cached     — decode: reuse cached cross K/V (never updated)
+    """
+    B, S, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, S, H, Dh)
+    if rope_cs is not None:
+        cos, sin = rope_cs
+        q = apply_rope(q, cos, sin)
+
+    q = constrain(q, ("batch", None, "heads_act", None))
+    kv_len = None
+    q_offset = 0
+    new_cache = cache
+    if cross_cached:
+        k, v = cache["k"], cache["v"]
+    else:
+        src = x if kv_x is None else kv_x
+        k = jnp.einsum("bsd,de->bse", src, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,de->bse", src, p["wv"].astype(x.dtype))
+        if "bk" in p:
+            k = k + p["bk"].astype(x.dtype)
+            v = v + p["bv"].astype(x.dtype)
+        k = k.reshape(B, -1, Hkv, Dh)
+        v = v.reshape(B, -1, Hkv, Dh)
+        if rope_cs is not None and kv_x is None:
+            k = apply_rope(k, cos, sin)
+        if kv_x is not None and cache is not None:
+            # prefill of the cross K/V cache
+            new_cache = {"k": k, "v": v}
+        elif cache is not None:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+            new_cache = {"k": k, "v": v}
+            kv_len = pos + S
+            q_offset = pos
+    if cfg.attn_kv_repeat and Hkv < H and S > 1:
+        # TRAIN/PREFILL with n_kv < TP degree: the head dim must shard, so
+        # gather the sequence dim FIRST (needed for attention anyway), then
+        # repeat + slice heads locally — avoids a seq->heads reshard that
+        # GSPMD can only do via full rematerialization.  DECODE (S==1) skips
+        # the repeat: its cache is sequence-sharded and grouped attention
+        # with replicated KV heads is already parallel.
+        k = constrain(k, ("batch", None, None, None))
+        v = constrain(v, ("batch", None, None, None))
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+        k = constrain(k, ("batch", None, "heads_act", None))
+        v = constrain(v, ("batch", None, "heads_act", None))
+    out = attention(
+        q, k, v, causal=causal and kv_x is None and not cross_cached,
+        q_offset=q_offset, kv_len=kv_len,
+        chunked_threshold=cfg.attn_chunk_threshold,
+    )
+    out = out.reshape(B, S, H * Dh)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+def mla_attn(p, cfg: ArchConfig, x, rope_full, cache, pos):
+    """DeepSeek-V2 multi-head latent attention.
+
+    Caches only the compressed latent (B, Smax, r) + shared rope key
+    (B, Smax, dr) — 576 B/token vs 4 KiB for equivalent GQA: the paper's
+    "shrink the decode state" goal achieved by low-rank projection.
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    cos, sin = rope_full
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    dkv = jnp.einsum("bsd,de->bse", x, p["w_dkv"].astype(x.dtype))
+    c_kv, k_rope = dkv[..., :r], dkv[..., r:]
+    from repro.models.layers import rmsnorm
+    c_kv = rmsnorm(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # (B,S,1,dr) shared head
+
+    if cache is not None:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, pos, 0, 0))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+        kv_len, q_offset = pos + S, pos
+    else:
+        new_cache, kv_len, q_offset = None, None, 0
+
+    if cfg.mla_absorb and S == 1 and cache is not None:
+        # DECODE with weight absorption: fold W_uk into the query and W_uv
+        # into the output so attention runs directly against the compressed
+        # latent cache — O(r) per cached token instead of re-up-projecting
+        # K/V for the whole context every step (H*(dn+dv)/2r ~ 4x fewer
+        # context-length FLOPs for the v2-lite dims; measured in §Perf).
+        w_ukv = p["w_ukv"].astype(x.dtype).reshape(r, H, dn + dv)
+        w_uk, w_uv = w_ukv[..., :dn], w_ukv[..., dn:]
+        q_eff = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)  # (B,1,H,r)
+        scores = jnp.einsum("bshr,bkr->bhsk", q_eff, c_kv.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
+        scores = scores + jnp.einsum(
+            "bshd,bkzd->bhsk", q_rope, k_rope.astype(x.dtype),
+            preferred_element_type=jnp.float32)
+        scores = scores * (dn + dr) ** -0.5
+        skv = c_kv.shape[1]
+        scores = jnp.where(jnp.arange(skv)[None, None, None] < kv_len,
+                           scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhsk,bkr->bshr", probs, c_kv.astype(x.dtype))
+        out = jnp.einsum("bshr,rhd->bshd", ctx, w_uv)
+    else:
+        # up-project latents to per-head K_nope and V (baseline path)
+        ukv = jnp.einsum("bsr,re->bse", c_kv.astype(x.dtype), p["w_ukv"].astype(x.dtype))
+        ukv = ukv.reshape(B, -1, H, dn + dv)
+        k_nope, v = ukv[..., :dn], ukv[..., dn:]
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope.astype(x.dtype), (B, k_nope.shape[1], H, dr))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attention(
+            qq, k, v, causal=True, q_offset=q_offset, kv_len=kv_len,
+            softmax_scale=(dn + dr) ** -0.5,
+            chunked_threshold=cfg.attn_chunk_threshold,
+        )
+    out = out.reshape(B, S, H * dv)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Layer body + scan driver
+# ---------------------------------------------------------------------------
+
+def layer_fwd(p, cfg: ArchConfig, x, rope_cs, cache, pos, *, moe: bool,
+              causal=True, enc_h=None):
+    """One transformer layer. Returns (x, new_cache, metrics)."""
+    metrics = {}
+    x = constrain(x, ("batch", "seq_act", None))
+    h = apply_norm(cfg.norm_type, p, "attn_norm", x)
+    attn_fn = mla_attn if cfg.use_mla else gqa_attn
+    if cfg.use_mla:
+        a, new_cache = mla_attn(p["attn"], cfg, h, rope_cs, cache, pos)
+    else:
+        a, new_cache = gqa_attn(p["attn"], cfg, h, rope_cs, cache, pos, causal=causal)
+    if cfg.parallel_block:
+        if moe:
+            m, metrics = moe_ffn(p["mlp"], cfg, h)
+        else:
+            m = MLP_FNS[cfg.mlp_type](p["mlp"], h)
+        x = x + a + m
+    else:
+        x = x + a
+        x = constrain(x, ("batch", "seq_act", None))
+        h = apply_norm(cfg.norm_type, p, "mlp_norm", x)
+        if moe:
+            m, metrics = moe_ffn(p["mlp"], cfg, h)
+        else:
+            m = MLP_FNS[cfg.mlp_type](p["mlp"], h)
+        x = x + m
+    if enc_h is not None or (cache is not None and "cross" in cache):
+        x = constrain(x, ("batch", "seq_act", None))
+        h = apply_norm(cfg.norm_type, p, "cross_norm", x)
+        ca, cross_cache = gqa_attn(
+            p["cross"], cfg, h, None,
+            cache.get("cross") if cache else None, None, causal=False,
+            kv_x=enc_h, cross_cached=(enc_h is None and cache is not None))
+        x = x + ca
+        if cache is not None:
+            new_cache = {**(new_cache or {}), "cross": cross_cache}
+    return x, new_cache, metrics
+
+
+def _remat_policy(cfg: ArchConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _pick_group(L: int, max_group: int = 8) -> int:
+    """Largest divisor of L that is <= max_group (two-level remat grouping)."""
+    for g in range(min(max_group, L), 0, -1):
+        if L % g == 0:
+            return g
+    return 1
+
+
+def scan_layers(stacked, cfg: ArchConfig, x, rope_cs, cache, pos, *, moe: bool,
+                remat: bool, causal=True, enc_h=None):
+    """Scan one homogeneous layer stack. cache: stacked cache pytree or None.
+
+    Training uses TWO-LEVEL (grouped) remat: an outer scan over L/G groups
+    whose bodies are checkpointed, each re-scanning its G layers (also
+    checkpointed) on the backward pass.  Saved residuals drop from L
+    x-shaped slices to L/G + G transient — the classic sqrt-depth schedule —
+    which is what fits d8192x80L training in 16 GiB/chip (EXPERIMENTS §Perf).
+    """
+
+    def body(x, p, c):
+        return layer_fwd(p, cfg, x, rope_cs, c, pos, moe=moe, causal=causal, enc_h=enc_h)
+
+    if remat:
+        body = jax.checkpoint(body, policy=_remat_policy(cfg))
+
+    if cache is None:
+        L = jax.tree.leaves(stacked)[0].shape[0]
+        G = _pick_group(L) if (remat and cfg.scan_layers) else 1
+
+        def f(carry, pl):
+            y, _, m = body(carry, pl, None)
+            return y, m
+
+        if G > 1:
+            grouped = jax.tree.map(
+                lambda a: a.reshape(L // G, G, *a.shape[1:]), stacked)
+
+            @jax.checkpoint
+            def group_body(carry, pg):
+                return jax.lax.scan(f, carry, pg)
+
+            x, ms = jax.lax.scan(group_body, x, grouped)
+            ms = jax.tree.map(lambda a: a.reshape(L, *a.shape[2:]), ms)
+        else:
+            x, ms = jax.lax.scan(f, x, stacked)
+        new_cache = None
+    else:
+        def f(carry, xs):
+            pl, cl = xs
+            y, nc, m = body(carry, pl, cl)
+            return y, (nc, m)
+        x, (new_cache, ms) = jax.lax.scan(f, x, (stacked, cache))
+    metrics = jax.tree.map(jnp.mean, ms) if ms else {}
+    return x, new_cache, metrics
+
+
+# ---------------------------------------------------------------------------
+# Full model: embed -> stacks -> norm -> (loss | logits)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ArchConfig, tokens):
+    e = params["embed"][tokens]
+    return e.astype(_adt(cfg))
+
+
+def backbone(params, cfg: ArchConfig, x, pos, cache, *, remat, enc_h=None):
+    """Run the decoder stack(s). x: (B,S,D) embedded input."""
+    S = x.shape[1]
+    positions = pos + jnp.arange(S)
+    rope_dim = int((cfg.qk_rope_dim if cfg.use_mla else cfg.dh) * cfg.rotary_frac)
+    cos, sin = rope_angles(positions, rope_dim, cfg.rope_theta)
+    metrics = {}
+    new_cache = {}
+    if cfg.is_encdec:
+        x, nc, _ = scan_layers(params["layers"], cfg, x, (cos, sin),
+                               cache.get("self") if cache else None, pos,
+                               moe=False, remat=remat, enc_h=enc_h)
+        if cache is not None:
+            new_cache["self"] = nc
+    else:
+        if "layers" in params:
+            x, nc, m = scan_layers(params["layers"], cfg, x, (cos, sin),
+                                   cache.get("dense") if cache else None, pos,
+                                   moe=False, remat=remat)
+            metrics.update(m)
+            if cache is not None:
+                new_cache["dense"] = nc
+        if "moe_layers" in params:
+            x, nc, m = scan_layers(params["moe_layers"], cfg, x, (cos, sin),
+                                   cache.get("moe") if cache else None, pos,
+                                   moe=True, remat=remat)
+            metrics.update(m)
+            if cache is not None:
+                new_cache["moe"] = nc
+    x = apply_norm(cfg.norm_type, params, "final_norm", x)
+    return x, (new_cache if cache is not None else None), metrics
+
+
+def run_encoder(params, cfg: ArchConfig, frames, remat):
+    """Non-causal encoder over stub frame embeddings (B, S_enc, D)."""
+    S = frames.shape[1]
+    cos, sin = rope_angles(jnp.arange(S), int(cfg.dh * cfg.rotary_frac), cfg.rope_theta)
+    x = frames.astype(_adt(cfg))
+    x, _, _ = scan_layers(params["enc_layers"], cfg, x, (cos, sin), None, 0,
+                          moe=False, remat=remat, causal=False)
+    return apply_norm(cfg.norm_type, params, "enc_norm", x)
+
+
+def chunked_cross_entropy(hidden, w_head, labels, chunk: int):
+    """Memory-bounded LM loss: scan over *sequence* chunks so the (B, S, V)
+    logits tensor never materializes.  The batch dim stays intact so its
+    data-parallel sharding survives the scan (merging (B,S)->(T,) would let
+    GSPMD drop the sharding and replicate multi-GiB logit chunks).
+    labels < 0 are masked."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    h, y = hidden, labels
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, pad)), constant_values=-1)
+    h = h.reshape(B, n, chunk, D).swapaxes(0, 1)   # (n, B, chunk, D)
+    y = y.reshape(B, n, chunk).swapaxes(0, 1)
+
+    # remat: without this, every chunk's (B, chunk, V) logits are stacked as
+    # backward residuals — ~4 GiB/device at 256k vocab.  Recomputing the
+    # chunk matmul in bwd is the standard fused-CE trade.
+    @jax.checkpoint
+    def body(acc, xs):
+        hc, yc = xs
+        hc = constrain(hc, ("batch", None, None))
+        logits = jnp.einsum("bcd,dv->bcv", hc,
+                            w_head.astype(hc.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(yc, 0)[..., None],
+                                   axis=-1)[..., 0]
+        mask = (yc >= 0).astype(jnp.float32)
+        loss_sum, cnt, correct = acc
+        pred = jnp.argmax(logits, axis=-1)
+        return (loss_sum + jnp.sum((lse - gold) * mask),
+                cnt + mask.sum(),
+                correct + jnp.sum((pred == yc) * mask)), None
+
+    (loss_sum, cnt, correct), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+               jnp.zeros((), jnp.float32)), (h, y))
+    cnt = jnp.maximum(cnt, 1.0)
+    return loss_sum / cnt, {"acc": correct / cnt, "tokens": cnt}
+
+
+def logits_last(params, cfg: ArchConfig, hidden):
+    """LM-head logits for the final position only (decode/prefill output)."""
+    h = hidden[:, -1, :]
+    return jnp.einsum("bd,dv->bv", h, params["lm_head"].astype(h.dtype)).astype(jnp.float32)

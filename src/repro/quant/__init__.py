@@ -1,0 +1,25 @@
+from repro.quant.log2 import (
+    compute_scale,
+    quantize_log2,
+    dequantize_log2,
+    fake_quant_log2,
+    quantize_act_u4,
+    dequantize_act_u4,
+    fake_quant_act_u4,
+    pack_nibbles,
+    unpack_nibbles,
+)
+from repro.quant import compress
+
+__all__ = [
+    "compute_scale",
+    "quantize_log2",
+    "dequantize_log2",
+    "fake_quant_log2",
+    "quantize_act_u4",
+    "dequantize_act_u4",
+    "fake_quant_act_u4",
+    "pack_nibbles",
+    "unpack_nibbles",
+    "compress",
+]

@@ -1,0 +1,50 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Int8 error-feedback (EF) compression: each device quantizes its local gradient
+(plus carried-over error) to int8 with a per-leaf scale before the all-reduce,
+and accumulates the quantization residual locally.  EF guarantees the *sum* of
+transmitted updates converges to the sum of true gradients, so SGD/Adam still
+converge (1-bit-Adam / EF-SGD literature).  This cuts DP all-reduce traffic 4x
+vs fp32 (2x vs bf16) — a distributed-optimization lever for the pod axis,
+whose DCN bandwidth dominates the collective roofline term at 2+ pods.
+
+Used by the trainer via ``shard_map`` over the (pod, data) axes: compress ->
+psum -> decompress; see training/trainer.py (``grad_compression='int8_ef'``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def compress_int8(g: jax.Array, err: jax.Array):
+    """Returns (codes int8, scale f32 scalar, new_err)."""
+    x = g + err
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    decoded = codes.astype(g.dtype) * scale
+    return codes, scale, x - decoded
+
+
+def decompress_int8(codes: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return codes.astype(dtype) * scale
+
+
+def compress_tree(grads, err_state):
+    """Tree-wise EF-int8 compression. Returns (codes_tree, scales_tree, new_err)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    out = [compress_int8(g, e) for g, e in zip(flat_g, flat_e)]
+    codes = treedef.unflatten([o[0] for o in out])
+    scales = treedef.unflatten([o[1] for o in out])
+    new_err = treedef.unflatten([o[2] for o in out])
+    return codes, scales, new_err
+
+
+def decompress_tree(codes, scales, dtype=jnp.float32):
+    return jax.tree.map(lambda c, s: decompress_int8(c, s, dtype), codes, scales)

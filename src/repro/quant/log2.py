@@ -1,0 +1,103 @@
+"""4-bit signed log2 ("power-of-two") weight quantization — the paper's §III-C.
+
+Codebook (one nibble, two's-complement q in [-8, 7]):
+
+    value(q) = 0                                   if q == 0
+             = sign(q) * 2^(1 - |q|) * scale       otherwise
+
+i.e. representable magnitudes are ``scale * {1, 1/2, 1/4, ..., 1/128}`` — the
+same 128:1 dynamic range as int8 in half the bits (the paper's claim), with an
+explicit zero code.  On the ASIC the multiply becomes a bit shift; on TPU the
+equivalent is keeping weights *packed* (2/byte) through HBM->VMEM and expanding
+with ``exp2`` inside the Pallas kernel (see kernels/log2_matmul.py).
+
+Activations are 4-bit unsigned uniform (post-ReLU), per the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Positive codes reach |q|=7 (exp -6); negative codes reach |q|=8 (exp -7),
+# mirroring int8's mild asymmetry.
+_MAX_POS_CODE = 7
+_MAX_NEG_CODE = 8
+
+
+def compute_scale(w: jax.Array) -> jax.Array:
+    """Per-tensor symmetric scale: maps max|w| to the top code (2^0 * scale)."""
+    return jnp.maximum(jnp.max(jnp.abs(w)), 1e-12)
+
+
+def quantize_log2(w: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize real weights to int8 nibble codes in [-8, 7]."""
+    a = jnp.abs(w) / scale
+    # e = round(-log2(a)); magnitudes below 2^-(max_code-0.5) round to zero.
+    e = jnp.round(-jnp.log2(jnp.maximum(a, 2.0 ** -12)))
+    pos = w > 0
+    max_e = jnp.where(pos, _MAX_POS_CODE - 1, _MAX_NEG_CODE - 1)
+    code = (jnp.clip(e, 0, max_e) + 1).astype(jnp.int8)
+    code = jnp.where(pos, code, -code)
+    code = jnp.where((e > max_e) | (w == 0), jnp.int8(0), code)
+    return code.astype(jnp.int8)
+
+
+def dequantize_log2(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Decode nibble codes back to real values."""
+    mag = jnp.exp2((1.0 - jnp.abs(q.astype(jnp.float32))))
+    val = jnp.sign(q.astype(jnp.float32)) * mag * scale
+    return jnp.where(q == 0, 0.0, val).astype(dtype)
+
+
+def fake_quant_log2(w: jax.Array, scale: jax.Array | None = None) -> jax.Array:
+    """Straight-through-estimator fake quantization for QAT."""
+    if scale is None:
+        scale = jax.lax.stop_gradient(compute_scale(w))
+    wq = dequantize_log2(quantize_log2(w, scale), scale, dtype=w.dtype)
+    return w + jax.lax.stop_gradient(wq - w)
+
+
+# ---------------------------------------------------------------------------
+# 4-bit unsigned uniform activations (post-ReLU), per-tensor scale.
+# ---------------------------------------------------------------------------
+
+def quantize_act_u4(x: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(x / scale), 0, 15).astype(jnp.uint8)
+
+
+def dequantize_act_u4(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(dtype)) * scale
+
+
+def fake_quant_act_u4(x: jax.Array, scale: jax.Array | None = None) -> jax.Array:
+    """STE fake-quant for activations; also simulates the 4-bit clip (overflow)."""
+    if scale is None:
+        scale = jax.lax.stop_gradient(jnp.maximum(jnp.max(x) / 15.0, 1e-12))
+    xq = dequantize_act_u4(quantize_act_u4(x, scale), scale, dtype=x.dtype)
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+# ---------------------------------------------------------------------------
+# Nibble packing: two 4-bit codes per uint8 (even nibble = low bits).
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(q: jax.Array) -> jax.Array:
+    """Pack int8 codes in [-8,7] into uint8 pairs along the last axis.
+
+    The last axis must be even; output last axis is half the size.
+    """
+    if q.shape[-1] % 2 != 0:
+        raise ValueError(f"last axis must be even, got {q.shape}")
+    u = (q.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo = u[..., 0::2]
+    hi = u[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(p: jax.Array) -> jax.Array:
+    """Inverse of pack_nibbles: uint8 -> int8 codes in [-8,7] (sign-extended)."""
+    lo = (p & 0xF).astype(jnp.int32)
+    hi = ((p >> 4) & 0xF).astype(jnp.int32)
+    both = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1], p.shape[-1] * 2)
+    return (((both ^ 8) - 8)).astype(jnp.int8)  # sign-extend nibble

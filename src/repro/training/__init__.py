@@ -1,0 +1,4 @@
+from repro.training import optim
+from repro.training.trainer import TrainConfig, Trainer, TrainState, make_train_step
+
+__all__ = ["optim", "TrainConfig", "Trainer", "TrainState", "make_train_step"]

@@ -1,0 +1,120 @@
+"""Pure-JAX optimizers (optax is not available in this environment).
+
+Functional API mirroring optax: an optimizer is ``(init_fn, update_fn)`` where
+``update_fn(grads, state, params) -> (updates, new_state)`` and updates are
+*added* to params.  All state lives in pytrees so it shards/checkpoints like
+params.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: object
+    nu: object
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: object
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def adamw(
+    lr: float | Callable,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    grad_clip: float | None = 1.0,
+):
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init_fn(params):
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+    def update_fn(grads, state: AdamState, params):
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads
+        )
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def _upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree.map(_upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu), {"grad_norm": gnorm}
+
+    return init_fn, update_fn
+
+
+def sgd(lr: float | Callable, momentum: float = 0.9, grad_clip: float | None = None):
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init_fn(params):
+        return SGDState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        )
+
+    def update_fn(grads, state: SGDState, params):
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        mom = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state.momentum, grads
+        )
+        lr_t = lr_fn(step)
+        updates = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype), mom, params)
+        return updates, SGDState(step=step, momentum=mom), {"grad_norm": gnorm}
+
+    return init_fn, update_fn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

@@ -1,0 +1,20 @@
+from repro.utils.trees import (
+    tree_size,
+    tree_bytes,
+    tree_zeros_like,
+    map_with_path,
+    flatten_dict,
+    unflatten_dict,
+)
+from repro.utils.hlo import collective_bytes, parse_cost_analysis
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_zeros_like",
+    "map_with_path",
+    "flatten_dict",
+    "unflatten_dict",
+    "collective_bytes",
+    "parse_cost_analysis",
+]

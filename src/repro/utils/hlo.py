@@ -1,0 +1,151 @@
+"""HLO-text analysis helpers.
+
+``cost_analysis()`` does not report collective traffic, so the roofline's
+collective term is derived by parsing the post-SPMD HLO text and summing the
+bytes of every collective op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute).
+
+Post-optimization HLO does not annotate operand types inline (operands are
+``%name`` references), so we account bytes from the *result* shape, which
+equals the operand size for all-reduce / all-to-all / collective-permute and
+the per-device wire traffic for ring all-gather; for reduce-scatter the
+operand is result x group_size, parsed from ``replica_groups=[g,n]<=[...]``.
+
+KNOWN LIMITATION (documented in EXPERIMENTS.md §Dry-run): XLA's
+HloCostAnalysis counts a ``while`` body ONCE, so flops/bytes from
+``cost_analysis()`` under-count scanned programs; the roofline uses the
+analytic counters in benchmarks/analytic.py as the primary source and
+records the raw cost_analysis numbers alongside.  The same applies to
+collectives inside scanned layer bodies: ``collective_bytes`` therefore
+reports both raw sums and a corrected total using while-loop trip counts
+parsed from the HLO.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ``%x = f32[256,4096]{1,0} all-reduce(...)`` (also -start async forms)
+_OP_LINE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s*"
+    r"(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+# tuple-result form: ``%x = (f32[..], f32[..]) all-to-all(...)``
+_TUPLE_OP_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TRIP_RE = re.compile(r"trip_count=(\d+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _line_bytes(line: str):
+    """Returns (opcode, bytes) for a collective op line, else None."""
+    m = _OP_LINE_RE.search(line)
+    if m:
+        dtype, dims, opcode = m.group(1), m.group(2), m.group(3)
+        nbytes = _shape_bytes(dtype, dims)
+    else:
+        m = _TUPLE_OP_RE.search(line)
+        if not m:
+            return None
+        opcode = m.group(2)
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(m.group(1)))
+    if opcode == "reduce-scatter":
+        g = _GROUPS_RE.search(line)
+        if g:
+            nbytes *= int(g.group(2))  # operand = result x group size
+    return opcode, nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum collective bytes in an HLO module, with while-loop correction.
+
+    HLO while bodies are separate computations; ops inside them execute
+    trip_count times.  We attribute each op line to its enclosing computation
+    and scale computations that are while bodies with a known trip_count
+    (XLA records ``trip_count=N`` in while-loop backend configs when it can
+    prove it; jax lax.scan always produces a provable trip count).
+    """
+    by_type: dict = defaultdict(int)
+    count = 0
+    # map computation name -> trip multiplier
+    multipliers = _while_multipliers(hlo_text)
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") and ("{" in s) and ("=" not in s.split("{")[0]):
+            current_comp = s.split()[0].lstrip("%")
+        elif s.startswith("ENTRY"):
+            current_comp = "__entry__"
+        got = _line_bytes(line)
+        if got is None:
+            continue
+        opcode, nbytes = got
+        if nbytes == 0:
+            continue
+        mult = multipliers.get(current_comp, 1)
+        by_type[opcode] += nbytes * mult
+        count += 1
+    return {"total": sum(by_type.values()), "by_type": dict(by_type),
+            "count": count}
+
+
+_WHILE_RE = re.compile(r"while\(.*?body=%?([\w.\-]+)")
+_KNOWN_TRIP_RE = re.compile(
+    r'known_trip_count[^0-9]*"?n"?\s*[:=]\s*"?(\d+)"?')
+
+
+def _while_multipliers(hlo_text: str) -> dict:
+    """body-computation name -> trip count (1 if unknown)."""
+    mult: dict = {}
+    for line in hlo_text.splitlines():
+        if " while(" not in line:
+            continue
+        m = _WHILE_RE.search(line)
+        if not m:
+            continue
+        body = m.group(1)
+        t = _KNOWN_TRIP_RE.search(line) or _TRIP_RE.search(line)
+        mult[body] = int(t.group(1)) if t else 1
+    return mult
+
+
+def parse_cost_analysis(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` output across jax versions."""
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    out = {}
+    for k, v in dict(cost).items():
+        try:
+            out[k] = float(v)
+        except (TypeError, ValueError):
+            pass
+    return out

@@ -1,0 +1,54 @@
+"""Pytree utilities used throughout the framework (no flax/optax available)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_size(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all leaves (honours per-leaf dtype)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def map_with_path(fn, tree):
+    """jax.tree.map with a '/'-joined string path as the first argument."""
+
+    def _fn(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        return fn(name, leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def flatten_dict(d: dict, prefix: str = "") -> dict:
+    """Flatten a nested dict into {'a/b/c': leaf}."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}/{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten_dict(v, key))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten_dict(flat: dict) -> dict:
+    """Inverse of flatten_dict."""
+    out: dict = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out

@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at a
+reduced same-family config runs one forward/train step on CPU with finite
+loss + nonzero grads, and the decode path is *consistent with prefill*
+(cache correctness: prefill(tokens).logits == decode step after prefix)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import build_bundle
+
+LM_ARCHS = [c.name for c in ASSIGNED]
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    tok = lambda k, s: jax.random.randint(k, (B, s), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        P = cfg.n_patches
+        return {"patches": jax.random.normal(ks[0], (B, P, cfg.d_model), jnp.bfloat16),
+                "tokens": tok(ks[1], S - P), "labels": tok(ks[2], S - P)}
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(ks[0], (B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": tok(ks[1], S), "labels": tok(ks[2], S)}
+    return {"tokens": tok(ks[1], S), "labels": tok(ks[2], S)}
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_train_step_finite(name):
+    cfg = get_config(name).smoke()
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(bundle.loss_fn, has_aux=True))(params, batch)
+    assert jnp.isfinite(loss), f"{name}: loss={loss}"
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gnorm > 0 and np.isfinite(gnorm), f"{name}: bad grads"
+    # output shapes: logits path exercised through loss; check metrics
+    assert 0.0 <= float(metrics["acc"]) <= 1.0
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_decode_consistent_with_prefill(name):
+    """Cache correctness: prefill(tokens[:S]) last-logits must equal the
+    decode-step logits after prefill(tokens[:S-1]) + decode(tokens[S-1])."""
+    cfg = get_config(name).smoke()
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    B, S = 2, 17
+    batch = _batch(cfg, B=B, S=S, seed=3)
+    toks = batch["tokens"]
+    extras = {k: v for k, v in batch.items() if k in ("patches", "frames")}
+
+    full, _ = jax.jit(bundle.prefill_fn)(params, {**extras, "tokens": toks})
+    _, cache = jax.jit(bundle.prefill_fn)(params, {**extras, "tokens": toks[:, :-1]})
+    # decode position counts the full prefix (incl. vlm patch tokens)
+    prefix = toks.shape[1] - 1
+    if cfg.family == "vlm":
+        prefix += extras["patches"].shape[1]
+    # grow kv caches by one slot so the decode write fits
+    def grow(leaf):
+        if leaf.ndim >= 3 and leaf.shape[2] == prefix:
+            pad = [(0, 0)] * leaf.ndim
+            pad[2] = (0, 1)
+            return jnp.pad(leaf, pad)
+        return leaf
+    if cfg.family != "rwkv":  # zamba's shared-attn KV cache also grows
+        cache = jax.tree.map(grow, cache)
+    step, _ = jax.jit(bundle.decode_fn)(
+        params, cache,
+        {"tokens": toks[:, -1:], "pos": jnp.asarray(prefix, jnp.int32)})
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("name", ["chameleon-tcn", "chameleon-tcn-audio",
+                                  "chameleon-tcn-kws"])
+def test_tcn_presets_train(name):
+    cfg = get_config(name).smoke()
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (4, 80, cfg.tcn_in_channels))
+    labels = jax.random.randint(jax.random.key(2), (4,), 0, cfg.n_classes)
+    loss, (m, state) = bundle.loss_fn(params, {"x": x, "labels": labels})
+    assert jnp.isfinite(loss)
+    emb = bundle.embed_fn(params, {"x": x})
+    assert emb.shape == (4, cfg.embed_dim) and jnp.all(jnp.isfinite(emb))
+
+
+def test_paper_tcn_param_budgets():
+    """The full presets respect the paper's published parameter counts."""
+    from repro.launch.analytic import param_count
+    from repro.models.tcn import receptive_field
+    cases = {  # name -> (max params, min receptive field)
+        "chameleon-tcn": (133_000, 784),        # <=133k (chip max), covers 28x28
+        "chameleon-tcn-audio": (133_000, 4_000),
+        "chameleon-tcn-kws": (20_000, 60),      # fits the 4x4 always-on mode
+    }
+    for name, (max_p, min_r) in cases.items():
+        cfg = get_config(name)
+        bundle = build_bundle(cfg)
+        n = param_count(bundle.param_defs)
+        assert n <= max_p, f"{name}: {n} params > {max_p}"
+        assert receptive_field(cfg) >= min_r
+
+
+def test_mla_absorbed_decode_matches_baseline():
+    """Beyond-paper lever (EXPERIMENTS §Perf): decode-time MLA weight
+    absorption attends in the latent space; logits must match the
+    up-projection baseline to bf16 reassociation tolerance."""
+    cfg = get_config("deepseek-v2-lite-16b").smoke()
+    b0 = build_bundle(cfg)
+    b1 = build_bundle(cfg.replace(mla_absorb=True))
+    params = b0.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 17), 0, cfg.vocab_size)
+    _, cache = jax.jit(b0.prefill_fn)(params, {"tokens": toks[:, :-1]})
+    grow = lambda l: (jnp.pad(l, [(0, 0), (0, 0), (0, 1)] + [(0, 0)] * (l.ndim - 3))
+                      if l.ndim >= 3 and l.shape[2] == 16 else l)
+    cache = jax.tree.map(grow, cache)
+    batch = {"tokens": toks[:, -1:], "pos": jnp.asarray(16, jnp.int32)}
+    l0, _ = jax.jit(b0.decode_fn)(params, jax.tree.map(lambda x: x, cache), batch)
+    l1, _ = jax.jit(b1.decode_fn)(params, cache, batch)
+    assert bool(jnp.all(jnp.argmax(l0, -1) == jnp.argmax(l1, -1)))
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=0.06)

@@ -1,0 +1,159 @@
+"""Attention / norm / sequence-mixer correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import (
+    attention_chunked,
+    attention_dense,
+    layernorm,
+    rmsnorm,
+    rope_angles,
+    apply_rope,
+)
+from repro.models.rwkv import wkv_chunked, wkv_step
+from repro.models.ssm import ssd_chunked, ssd_step
+
+
+class TestAttention:
+    @pytest.mark.parametrize("hq,hkv,chunk", [(4, 4, 16), (4, 2, 24), (8, 1, 32)])
+    def test_chunked_equals_dense(self, hq, hkv, chunk):
+        B, S, Dh = 2, 64, 16
+        q = jax.random.normal(jax.random.key(0), (B, S, hq, Dh))
+        k = jax.random.normal(jax.random.key(1), (B, S, hkv, Dh))
+        v = jax.random.normal(jax.random.key(2), (B, S, hkv, Dh))
+        a = attention_dense(q, k, v, causal=True)
+        b = attention_chunked(q, k, v, causal=True, kv_chunk=chunk)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    def test_chunked_noncausal(self):
+        B, S = 2, 40
+        q = jax.random.normal(jax.random.key(0), (B, S, 2, 8))
+        k = jax.random.normal(jax.random.key(1), (B, S, 2, 8))
+        v = jax.random.normal(jax.random.key(2), (B, S, 2, 8))
+        a = attention_dense(q, k, v, causal=False)
+        b = attention_chunked(q, k, v, causal=False, kv_chunk=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    def test_chunked_gradients_match(self):
+        """The remat'd flash body must differentiate to the same grads."""
+        B, S = 1, 32
+        q = jax.random.normal(jax.random.key(0), (B, S, 2, 8))
+        k = jax.random.normal(jax.random.key(1), (B, S, 2, 8))
+        v = jax.random.normal(jax.random.key(2), (B, S, 2, 8))
+        f1 = lambda q: jnp.sum(attention_dense(q, k, v, causal=True) ** 2)
+        f2 = lambda q: jnp.sum(attention_chunked(q, k, v, causal=True, kv_chunk=8) ** 2)
+        g1, g2 = jax.grad(f1)(q), jax.grad(f2)(q)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=5e-4)
+
+    def test_decode_masking(self):
+        """kv_len masks unwritten cache slots."""
+        B, S = 2, 16
+        q = jax.random.normal(jax.random.key(0), (B, 1, 2, 8))
+        k = jax.random.normal(jax.random.key(1), (B, S, 2, 8))
+        v = jax.random.normal(jax.random.key(2), (B, S, 2, 8))
+        out_full = attention_dense(q, k[:, :5], v[:, :5], causal=True, q_offset=4)
+        k2 = k.at[:, 5:].set(99.0)  # garbage beyond kv_len
+        out_masked = attention_dense(q, k2, v, causal=True, q_offset=4, kv_len=5)
+        np.testing.assert_allclose(np.asarray(out_full), np.asarray(out_masked),
+                                   atol=1e-5)
+
+
+class TestNorms:
+    def test_rmsnorm_matches_f32_reference(self):
+        x = jax.random.normal(jax.random.key(0), (4, 8, 64))
+        w = 1 + 0.1 * jax.random.normal(jax.random.key(1), (64,))
+        ref = (x / jnp.sqrt(jnp.mean(x ** 2, -1, keepdims=True) + 1e-6)) * w
+        np.testing.assert_allclose(np.asarray(rmsnorm(x, w)), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_layernorm_grads_match_autodiff_reference(self):
+        x = jax.random.normal(jax.random.key(0), (4, 8, 32))
+        w = 1 + 0.1 * jax.random.normal(jax.random.key(1), (32,))
+        b = 0.1 * jax.random.normal(jax.random.key(2), (32,))
+
+        def ref(x, w, b):
+            mu = x.mean(-1, keepdims=True)
+            return ((x - mu) / jnp.sqrt(x.var(-1, keepdims=True) + 1e-5)) * w + b
+
+        for arg in range(3):
+            g1 = jax.grad(lambda *a: jnp.sum(jnp.sin(layernorm(*a))), arg)(x, w, b)
+            g2 = jax.grad(lambda *a: jnp.sum(jnp.sin(ref(*a))), arg)(x, w, b)
+            np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                       rtol=1e-3, atol=1e-4)
+
+    def test_bf16_activations_keep_bf16_cotangents(self):
+        """The custom VJP exists to keep x-shaped tensors out of f32
+        (EXPERIMENTS §Perf) — pin that contract."""
+        x = jax.random.normal(jax.random.key(0), (4, 16), jnp.bfloat16)
+        w = jnp.ones((16,))
+        g = jax.grad(lambda x: jnp.sum(rmsnorm(x, w).astype(jnp.float32)))(x)
+        assert g.dtype == jnp.bfloat16
+
+
+class TestRope:
+    def test_rotation_preserves_norm(self):
+        cos, sin = rope_angles(jnp.arange(10), 16, 1e4)
+        x = jax.random.normal(jax.random.key(0), (2, 10, 4, 16))
+        y = apply_rope(x, cos, sin)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(x), axis=-1),
+            np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+    def test_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n."""
+        D = 16
+        q = jax.random.normal(jax.random.key(0), (1, 1, 1, D))
+        k = jax.random.normal(jax.random.key(1), (1, 1, 1, D))
+        def score(m, n):
+            cm, sm = rope_angles(jnp.array([m]), D, 1e4)
+            cn, sn = rope_angles(jnp.array([n]), D, 1e4)
+            return float(jnp.sum(apply_rope(q, cm, sm) * apply_rope(k, cn, sn)))
+        assert abs(score(3, 1) - score(10, 8)) < 1e-4
+
+    def test_partial_rotary(self):
+        """rotary_frac < 1 (stablelm) leaves the tail untouched."""
+        D = 16
+        cos, sin = rope_angles(jnp.arange(4), D // 4, 1e4)
+        x = jax.random.normal(jax.random.key(0), (1, 4, 1, D))
+        y = apply_rope(x, cos, sin)
+        np.testing.assert_allclose(np.asarray(x[..., D // 4:]),
+                                   np.asarray(y[..., D // 4:]))
+
+
+class TestSequenceMixers:
+    def test_wkv6_chunked_equals_recurrence(self):
+        B, T, H, Dh = 2, 75, 2, 8
+        ks = jax.random.split(jax.random.key(0), 6)
+        r, k, v = (jax.random.normal(ks[i], (B, T, H, Dh)) for i in range(3))
+        log_w = -jnp.exp(jax.random.normal(ks[3], (B, T, H, Dh)) * 0.5)
+        u = jax.random.normal(ks[4], (H, Dh)) * 0.1
+        S0 = jax.random.normal(ks[5], (B, H, Dh, Dh)) * 0.1
+        ys, S = [], S0
+        for t in range(T):
+            y, S = wkv_step(r[:, t], k[:, t], v[:, t], log_w[:, t], u, S)
+            ys.append(y)
+        y_ref = jnp.stack(ys, 1)
+        y_c, S_c = wkv_chunked(r, k, v, log_w, u, S0)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_c), atol=5e-4)
+        np.testing.assert_allclose(np.asarray(S), np.asarray(S_c), atol=5e-4)
+
+    def test_ssd_chunked_equals_recurrence(self):
+        B, T, H, P, N = 2, 70, 2, 8, 8
+        ks = jax.random.split(jax.random.key(1), 6)
+        x = jax.random.normal(ks[0], (B, T, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (B, T, N))
+        Cm = jax.random.normal(ks[4], (B, T, N))
+        S0 = jax.random.normal(ks[5], (B, H, N, P)) * 0.1
+        ys, S = [], S0
+        for t in range(T):
+            y, S = ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], S)
+            ys.append(y)
+        y_ref = jnp.stack(ys, 1)
+        y_c, S_c = ssd_chunked(x, dt, A, Bm, Cm, S0)
+        np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_c), atol=5e-4)
+        np.testing.assert_allclose(np.asarray(S), np.asarray(S_c), atol=5e-4)

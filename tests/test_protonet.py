@@ -1,0 +1,111 @@
+"""PN-as-FC reformulation (paper Eq. 3-8) — the central correctness claims."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import protonet as pn
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _episode(seed, N, k, V):
+    key = jax.random.key(seed)
+    emb = jax.random.normal(key, (N * k, V))
+    labels = jnp.repeat(jnp.arange(N), k)
+    return emb, labels
+
+
+@given(st.integers(0, 10 ** 6), st.integers(2, 12), st.integers(1, 7),
+       st.integers(4, 48))
+def test_fc_argmax_equals_l2_argmin(seed, N, k, V):
+    """Eq. 6: the FC layer's argmax IS the prototype argmin — exactly."""
+    emb, labels = _episode(seed, N, k, V)
+    s = pn.support_sums(emb, labels, N)
+    w, b = pn.pn_fc_from_sums(s, k)
+    x = jax.random.normal(jax.random.key(seed + 1), (16, V))
+    logits = pn.pn_logits(x, w, b)
+    cls, d2 = pn.l2_classify(x, s / k)
+    assert jnp.all(jnp.argmax(logits, 1) == cls)
+
+
+@given(st.integers(0, 10 ** 6))
+def test_fc_is_affine_in_squared_distance(seed):
+    """logits = -(k/2) (D^2 - ||x||^2): the reformulation is exact, not just
+    argmax-preserving."""
+    emb, labels = _episode(seed, 6, 4, 32)
+    s = pn.support_sums(emb, labels, 6)
+    w, b = pn.pn_fc_from_sums(s, 4)
+    x = jax.random.normal(jax.random.key(seed + 2), (8, 32))
+    logits = pn.pn_logits(x, w, b)
+    _, d2 = pn.l2_classify(x, s / 4)
+    expect = -(4 / 2.0) * (d2 - jnp.sum(x ** 2, 1, keepdims=True))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_log2_bias_equals_shift_form():
+    """Eq. 8: the bias from exponent-doubling equals -(1/2k')||w_q||^2 with
+    k' = 2^ceil(log2 k) — i.e. the square really is a bit shift."""
+    emb, labels = _episode(3, 5, 5, 64)
+    s = pn.support_sums(emb, labels, 5)
+    w, b, q, scale = pn.pn_fc_from_sums_log2(s, 5)
+    kshift = 2 ** int(np.ceil(np.log2(5)))
+    expect = -np.sum(np.asarray(w) ** 2, -1) / (2 * kshift)
+    np.testing.assert_allclose(np.asarray(b), expect, rtol=1e-5)
+
+
+def test_store_uniform_counts_matches_eq6():
+    emb, labels = _episode(4, 7, 3, 24)
+    s = pn.support_sums(emb, labels, 7)
+    w, b = pn.pn_fc_from_sums(s, 3)
+    store = pn.store_init(10, 24)
+    for j in range(7):
+        store = pn.store_add_class(store, emb[labels == j])
+    x = jax.random.normal(jax.random.key(9), (32, 24))
+    assert jnp.all(pn.store_classify(store, x) ==
+                   jnp.argmax(pn.pn_logits(x, w, b), 1))
+
+
+def test_store_refinement_more_shots_helps():
+    """Adding shots to an existing class = adding to the sum (Eq. 3)."""
+    V = 16
+    rng = jax.random.key(11)
+    centers = jax.random.normal(rng, (3, V)) * 3
+    store = pn.store_init(4, V)
+    for j in range(3):
+        shots = centers[j] + jax.random.normal(jax.random.key(j), (1, V))
+        store = pn.store_add_class(store, shots)
+    # refine class 0 with many more shots
+    more = centers[0] + jax.random.normal(jax.random.key(42), (50, V))
+    store2 = pn.store_update_class(store, 0, more)
+    q = centers[0] + jax.random.normal(jax.random.key(43), (64, V)) * 0.5
+    acc1 = float(jnp.mean(pn.store_classify(store, q) == 0))
+    acc2 = float(jnp.mean(pn.store_classify(store2, q) == 0))
+    assert acc2 >= acc1
+
+
+def test_unlearned_ways_never_predicted():
+    store = pn.store_init(8, 16)
+    store = pn.store_add_class(store, jnp.ones((2, 16)))
+    store = pn.store_add_class(store, -jnp.ones((2, 16)))
+    x = jax.random.normal(jax.random.key(5), (64, 16)) * 5
+    preds = pn.store_classify(store, x)
+    assert int(preds.max()) <= 1
+
+
+def test_adapt_through_embedder():
+    """adapt() is a pure forward pass through any bundle's embed_fn."""
+    from repro.configs import get_config
+    from repro.models import build_bundle
+    cfg = get_config("chameleon-tcn").smoke()
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (10, 64, cfg.tcn_in_channels))
+    labels = jnp.repeat(jnp.arange(5), 2)
+    w, b = pn.adapt(lambda p, bt: bundle.embed_fn(p, bt), params,
+                    {"x": x}, labels, n_ways=5, k=2)
+    assert w.shape == (5, cfg.embed_dim) and b.shape == (5,)
+    assert jnp.all(jnp.isfinite(w)) and jnp.all(jnp.isfinite(b))

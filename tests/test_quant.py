@@ -1,0 +1,119 @@
+"""log2 4-bit quantization (paper §III-C) — unit + hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    compress,
+    compute_scale,
+    dequantize_log2,
+    fake_quant_act_u4,
+    fake_quant_log2,
+    pack_nibbles,
+    quantize_log2,
+    unpack_nibbles,
+)
+
+settings.register_profile("ci", deadline=None, max_examples=30)
+settings.load_profile("ci")
+
+
+def _rand(shape, seed=0, scale=0.1):
+    return jax.random.normal(jax.random.key(seed), shape) * scale
+
+
+class TestLog2Codes:
+    def test_code_range(self):
+        w = _rand((64, 64), 1)
+        q = quantize_log2(w, compute_scale(w))
+        assert int(q.min()) >= -8 and int(q.max()) <= 7
+
+    def test_roundtrip_idempotent(self):
+        """quantize(dequantize(q)) == q — the codebook is a fixed point."""
+        w = _rand((32, 32), 2)
+        s = compute_scale(w)
+        q = quantize_log2(w, s)
+        wd = dequantize_log2(q, s)
+        q2 = quantize_log2(wd, s)
+        assert jnp.all(q == q2)
+
+    def test_relative_error_bound(self):
+        """log2 rounding: worst-case rel error on representable range is
+        sqrt(2)-1 (round-to-nearest in exponent space)."""
+        w = _rand((128, 128), 3)
+        s = compute_scale(w)
+        q = quantize_log2(w, s)
+        wd = dequantize_log2(q, s)
+        nz = q != 0
+        rel = jnp.abs(wd - w)[nz] / jnp.abs(w)[nz]
+        assert float(rel.max()) <= (2 ** 0.5 - 1) + 1e-3
+
+    def test_dynamic_range_matches_int8(self):
+        """paper claim: same dynamic range as int8 (128:1) in 4 bits."""
+        s = jnp.float32(1.0)
+        mags = dequantize_log2(jnp.arange(-8, 8, dtype=jnp.int8), s)
+        nz = jnp.abs(mags[jnp.nonzero(mags)])
+        assert float(nz.max() / nz.min()) == 128.0
+
+    def test_zero_and_signs(self):
+        s = jnp.float32(1.0)
+        w = jnp.array([0.0, 1.0, -1.0, 0.5, -0.25, 1e-9])
+        q = quantize_log2(w, s)
+        wd = dequantize_log2(q, s)
+        assert wd[0] == 0.0 and wd[5] == 0.0  # exact zero + underflow->0
+        np.testing.assert_allclose(wd[1:5], [1.0, -1.0, 0.5, -0.25])
+
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 8))
+    def test_pack_unpack_inverse(self, seed, half_cols):
+        q = np.asarray(
+            jax.random.randint(jax.random.key(seed), (4, half_cols * 2), -8, 8),
+            np.int8)
+        assert np.array_equal(np.asarray(unpack_nibbles(pack_nibbles(q))), q)
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_ste_fake_quant_matches_decode(self, seed):
+        w = np.asarray(jax.random.normal(jax.random.key(seed), (16, 16))) * 0.3
+        fq = fake_quant_log2(jnp.asarray(w))
+        s = compute_scale(jnp.asarray(w))
+        ref = dequantize_log2(quantize_log2(jnp.asarray(w), s), s)
+        np.testing.assert_allclose(np.asarray(fq), np.asarray(ref), rtol=1e-6)
+
+    def test_ste_gradient_passthrough(self):
+        w = _rand((8, 8), 5)
+        g = jax.grad(lambda w: jnp.sum(fake_quant_log2(w) * 2.0))(w)
+        np.testing.assert_allclose(np.asarray(g), 2.0 * np.ones((8, 8)), rtol=1e-6)
+
+    def test_act_u4_range(self):
+        x = jnp.abs(_rand((64,), 6, scale=2.0))
+        fq = fake_quant_act_u4(x)
+        scale = float(x.max()) / 15.0
+        assert float(jnp.max(jnp.abs(fq - x))) <= scale / 2 + 1e-6
+        # 16 levels max
+        assert len(np.unique(np.asarray(fq))) <= 16
+
+
+class TestGradCompression:
+    def test_error_feedback_sums_to_truth(self):
+        """EF property: cumulative transmitted approx equals cumulative true
+        gradient (residual stays bounded)."""
+        g = _rand((256,), 7, scale=1.0)
+        err = jnp.zeros_like(g)
+        sent = jnp.zeros_like(g)
+        for t in range(20):
+            gt = g * (1 + 0.1 * t)
+            codes, scale, err = compress.compress_int8(gt, err)
+            sent = sent + compress.decompress_int8(codes, scale)
+        true_sum = sum(g * (1 + 0.1 * t) for t in range(20))
+        resid = float(jnp.max(jnp.abs(sent + err - true_sum)))
+        assert resid < 1e-3
+
+    def test_tree_roundtrip(self):
+        tree = {"a": _rand((8, 8), 8), "b": {"c": _rand((4,), 9)}}
+        err = compress.init_error_state(tree)
+        codes, scales, err2 = compress.compress_tree(tree, err)
+        dec = compress.decompress_tree(codes, scales)
+        for k, (x, y) in enumerate(zip(jax.tree.leaves(tree), jax.tree.leaves(dec))):
+            assert float(jnp.max(jnp.abs(x - y))) <= float(jnp.abs(x).max()) / 127 + 1e-6

@@ -1,0 +1,52 @@
+"""Serving engine: slotting, decode continuity, TCN streaming server."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_bundle
+from repro.models.tcn import tcn_empty_state
+from repro.serving import LMServer, ServeConfig, TCNStreamServer
+
+
+def _tiny_lm():
+    cfg = get_config("olmo-1b").smoke().replace(
+        n_layers=2, d_model=32, d_ff=64, vocab_size=64, head_dim=16)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    return cfg, bundle, params
+
+
+def test_lm_server_slots_and_outputs():
+    cfg, bundle, params = _tiny_lm()
+    srv = LMServer(bundle, params, ServeConfig(max_batch=4, seq_cap=32))
+    r1 = srv.add_request(np.array([1, 2, 3], np.int32))
+    r2 = srv.add_request(np.array([4, 5], np.int32))
+    for _ in range(6):
+        srv.step()
+    assert len(srv.outputs[r1]) == 6 and len(srv.outputs[r2]) == 6
+    assert all(0 <= t < cfg.vocab_size for t in srv.outputs[r1])
+    srv.finish(r1)
+    r3 = srv.add_request(np.array([7], np.int32))  # slot reuse
+    srv.step()
+    assert len(srv.outputs[r3]) >= 1
+
+
+def test_dual_mode_batch_sizing():
+    assert ServeConfig(max_batch=8, mode="throughput").effective_batch() == 8
+    assert ServeConfig(max_batch=8, mode="low-power").effective_batch() == 2
+
+
+def test_tcn_stream_server():
+    cfg = get_config("chameleon-tcn-kws").smoke()
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    bn = tcn_empty_state(cfg)
+    srv = TCNStreamServer(bundle, params, bn, n_streams=3)
+    for t in range(20):
+        emb, logits = srv.push(np.random.default_rng(t).normal(
+            size=(3, cfg.tcn_in_channels)).astype(np.float32))
+    assert emb.shape == (3, cfg.embed_dim)
+    assert logits.shape == (3, cfg.n_classes)
+    assert np.isfinite(logits).all()

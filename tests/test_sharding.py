@@ -1,0 +1,91 @@
+"""Sharding rules + an end-to-end mini dry-run on a subprocess mesh.
+
+Multi-device tests spawn a subprocess so the main pytest process keeps its
+single CPU device (device count is locked at first jax init).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import (
+    DEFAULT_RULES,
+    ParamDef,
+    param_pspecs,
+    pspec,
+    pspec_sized,
+)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_pspec_mapping():
+    rules = {"vocab": "model", "embed": "data", "heads": "model"}
+    assert pspec(("vocab", "embed"), rules) == P("model", "data")
+    assert pspec(("embed", None), rules) == P("data")
+    assert pspec((None, None), rules) == P()
+
+
+def test_pspec_sized_drops_indivisible():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = {"vocab": "model", "embed": "data"}
+    # 256206 % 16 != 0 -> vocab replicated; 1024 % 16 == 0 -> embed sharded
+    assert pspec_sized(("vocab", "embed"), rules, (256206, 1024), mesh) == \
+        P(None, "data")
+    assert pspec_sized(("vocab", "embed"), rules, (256000, 1024), mesh) == \
+        P("model", "data")
+
+
+def test_param_pspecs_tree():
+    defs = {"e": ParamDef((100, 32), ("vocab", "embed")),
+            "n": {"w": ParamDef((32,), ("embed",))}}
+    specs = param_pspecs(defs, {"vocab": "model", "embed": None})
+    assert specs["e"] == P("model") and specs["n"]["w"] == P()
+
+
+def test_fsdp_rule_is_default():
+    """Params' d_model rows shard over data (ZeRO-3) by default."""
+    assert DEFAULT_RULES["embed"] == "data"
+    assert DEFAULT_RULES["heads"] == "model"
+
+
+SUBPROC = """
+import sys
+sys.argv = ["dryrun", "--mesh", "2x2", "--smoke", "--arch", "%s",
+            "--shape", "%s", "--out", "%s", "--force"]
+from repro.launch import dryrun
+dryrun.os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+dryrun.main()
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("olmo-1b", "train_4k"),
+    ("deepseek-v2-lite-16b", "decode_32k"),
+    ("rwkv6-1.6b", "long_500k"),
+])
+def test_mini_dryrun_subprocess(tmp_path, arch, shape):
+    """The full launcher path (specs, lowering, compile, roofline record)
+    on a 2x2 host mesh with reduced configs."""
+    code = SUBPROC % (arch, shape, tmp_path)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout + out.stderr
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    assert len(files) == 1
+    rec = json.load(open(tmp_path / files[0]))
+    assert rec["n_chips"] == 4
+    assert rec["flops_global_analytic"] > 0
+    assert "argument_size_in_bytes" in rec["memory_analysis"]

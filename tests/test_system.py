@@ -1,0 +1,138 @@
+"""End-to-end behaviour: the paper's full loop on synthetic data.
+
+Meta-train a small TCN embedder with the prototypical episodic loss, then
+perform gradient-free on-device FSL via the PN-as-FC head and CL via the
+prototype store — asserting the paper's qualitative claims (FSL accuracy >>
+chance, more shots help, accuracy decays gracefully with more ways, the QAT
+log2 path stays close to fp32).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import protonet as pn
+from repro.data import EpisodicSampler, GlyphClasses, split_classes
+from repro.models import build_bundle
+from repro.models.tcn import tcn_empty_state
+from repro.training.optim import adamw, apply_updates
+
+IMG = 12  # reduced glyph size -> seq len 144
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """Meta-train a tiny TCN PN embedder on synthetic glyph episodes."""
+    cfg = get_config("chameleon-tcn").replace(
+        tcn_channels=(16, 16, 16), tcn_kernel=5, embed_dim=32, n_classes=5)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    state = tcn_empty_state(cfg)
+    ds = GlyphClasses(30, seed=0, size=IMG)
+    train_cls, test_cls = split_classes(30, 0.67, seed=0)
+    sampler = EpisodicSampler(ds, train_cls, seed=1)
+
+    opt_init, opt_update = adamw(2e-3)
+    opt_state = opt_init(params)
+
+    from repro.models.tcn import tcn_forward
+
+    def episode_loss(params, state, sx, sy, qx, qy, n_ways):
+        emb_s, _, new_state = tcn_forward(params, state, bundle.cfg, sx, train=True)
+        emb_q, _, _ = tcn_forward(params, new_state, bundle.cfg, qx, train=True)
+        s = pn.support_sums(emb_s, sy, n_ways)
+        w, b = pn.pn_fc_from_sums(s, sx.shape[0] // n_ways)
+        logits = pn.pn_logits(emb_q, w, b)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, qy[:, None], 1)[:, 0]
+        return jnp.mean(lse - gold), new_state
+
+    @jax.jit
+    def step(params, state, opt_state, sx, sy, qx, qy):
+        (loss, new_state), grads = jax.value_and_grad(
+            episode_loss, has_aux=True)(params, state, sx, sy, qx, qy, 5)
+        updates, opt_state, _ = opt_update(grads, opt_state, params)
+        return apply_updates(params, updates), new_state, opt_state, loss
+
+    losses = []
+    for ep in range(110):
+        sx, sy, qx, qy = sampler.episode(ep, n_ways=5, k_shots=3, n_query=3)
+        params, state, opt_state, loss = step(
+            params, state, opt_state, jnp.asarray(sx), jnp.asarray(sy),
+            jnp.asarray(qx), jnp.asarray(qy))
+        losses.append(float(loss))
+    return cfg, bundle, params, state, ds, test_cls, losses
+
+
+def _fsl_accuracy(bundle, params, state, ds, classes, n_ways, k, n_ep=8,
+                  quantize=False):
+    from repro.models.tcn import tcn_forward
+    sampler = EpisodicSampler(ds, classes, seed=99)
+    accs = []
+    for ep in range(n_ep):
+        sx, sy, qx, qy = sampler.episode(ep, n_ways, k, n_query=4)
+        emb_s, _, _ = tcn_forward(params, state, bundle.cfg, jnp.asarray(sx),
+                                  train=False, quantize=quantize)
+        emb_q, _, _ = tcn_forward(params, state, bundle.cfg, jnp.asarray(qx),
+                                  train=False, quantize=quantize)
+        if quantize:
+            w, b, _, _ = pn.pn_fc_from_sums_log2(
+                pn.support_sums(emb_s, jnp.asarray(sy), n_ways), k)
+        else:
+            w, b = pn.pn_fc_from_sums(
+                pn.support_sums(emb_s, jnp.asarray(sy), n_ways), k)
+        pred = jnp.argmax(pn.pn_logits(emb_q, w, b), axis=-1)
+        accs.append(float(jnp.mean(pred == jnp.asarray(qy))))
+    return float(np.mean(accs))
+
+
+def test_meta_training_reduces_loss(trained):
+    *_, losses = trained
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.1
+
+
+def test_fsl_beats_chance_on_unseen_classes(trained):
+    cfg, bundle, params, state, ds, test_cls, _ = trained
+    acc = _fsl_accuracy(bundle, params, state, ds, test_cls, n_ways=5, k=3)
+    assert acc > 0.45, f"5-way acc {acc} (chance 0.2)"
+
+
+def test_more_shots_help(trained):
+    cfg, bundle, params, state, ds, test_cls, _ = trained
+    a1 = _fsl_accuracy(bundle, params, state, ds, test_cls, 5, 1)
+    a5 = _fsl_accuracy(bundle, params, state, ds, test_cls, 5, 5)
+    assert a5 >= a1 - 0.05, (a1, a5)
+
+
+def test_qat_log2_close_to_fp32(trained):
+    cfg, bundle, params, state, ds, test_cls, _ = trained
+    fp = _fsl_accuracy(bundle, params, state, ds, test_cls, 5, 3)
+    q = _fsl_accuracy(bundle, params, state, ds, test_cls, 5, 3, quantize=True)
+    assert q > fp - 0.25, f"log2 path collapsed: fp32={fp} log2={q}"
+
+
+def test_continual_learning_curve(trained):
+    """Fig. 15 shape: accuracy decays gracefully as ways grow; the store
+    classifies all previously learned classes."""
+    cfg, bundle, params, state, ds, test_cls, _ = trained
+    from repro.models.tcn import tcn_forward
+    n_total = min(8, len(test_cls))
+    store = pn.store_init(n_total, cfg.embed_dim)
+    accs = []
+    for j in range(n_total):
+        shots = ds.sample(int(test_cls[j]), 3, seed=1000 + j)
+        emb, _, _ = tcn_forward(params, state, cfg, jnp.asarray(shots), train=False)
+        store = pn.store_add_class(store, emb)
+        # evaluate on all classes learned so far
+        correct, total = 0, 0
+        for jj in range(j + 1):
+            q = ds.sample(int(test_cls[jj]), 4, seed=2000 + jj)
+            embq, _, _ = tcn_forward(params, state, cfg, jnp.asarray(q), train=False)
+            pred = pn.store_classify(store, embq)
+            correct += int(jnp.sum(pred == jj))
+            total += 4
+        accs.append(correct / total)
+    assert accs[0] > 0.9                      # 1-way is trivial
+    assert accs[-1] > 1.2 / n_total           # well above chance at max ways
