@@ -1,0 +1,101 @@
+"""Multi-tenant streaming session subsystem: throughput, tail latency, and
+park/resume cost over one fixed compiled slot grid.
+
+Demonstrates the subsystem's contract at serving scale:
+  * >=64 concurrent sessions advance through ONE jitted batched call/tick;
+  * p50/p99 per-tick step latency and aggregate sessions x samples/s;
+  * evicting a session to the host parking lot and resuming it later is
+    bit-identical to an uninterrupted run (asserted, not just reported);
+  * pack/unpack cost and per-session parked-state bytes (the O(R) claim).
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import build_bundle
+from repro.models.tcn import tcn_empty_state
+from repro.sessions import StreamSessionService
+
+N_SLOTS = 64
+TICKS = 40
+
+
+def _service(bundle, params, bn, **kw):
+    return StreamSessionService(bundle, params, bn, n_slots=N_SLOTS,
+                                max_tenants=8, max_ways=4, **kw)
+
+
+def run():
+    cfg = get_config("chameleon-tcn-kws").smoke()
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    bn = tcn_empty_state(cfg)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(N_SLOTS, TICKS + 8, cfg.tcn_in_channels)).astype(np.float32)
+
+    # -- steady-state: 64 sessions, one batched call per tick ---------------
+    svc = _service(bundle, params, bn)
+    # 60 anonymous streams + 4 personalized tenants (the FSL/CL path)
+    sids = [svc.open_session() for _ in range(N_SLOTS - 4)]
+    sids += [svc.open_session(tenant=None) for _ in range(4)]
+    shots = rng.normal(size=(3, 12, cfg.tcn_in_channels)).astype(np.float32)
+    svc.push_audio({sid: x[i, 0] for i, sid in enumerate(sids)})  # compile
+    lat = []
+    for t in range(1, TICKS + 1):
+        if t == 5:  # tenants enroll keywords mid-stream, streams stay live
+            for sid in sids[-4:]:
+                svc.enroll_shots(sid, shots)
+        t0 = time.perf_counter()
+        svc.push_audio({sid: x[i, t] for i, sid in enumerate(sids)})
+        lat.append((time.perf_counter() - t0) * 1e6)
+    lat = np.sort(np.asarray(lat))
+    p50 = float(np.percentile(lat, 50))
+    p99 = float(np.percentile(lat, 99))
+    rate = N_SLOTS / (lat.mean() * 1e-6)
+    emit("sessions/steady_64", lat.mean(),
+         f"{rate:.0f} sessions*samples/s p50={p50:.0f}us p99={p99:.0f}us")
+
+    # -- park / resume cost -------------------------------------------------
+    st = svc.stats()
+    victim = sids[0]
+    t0 = time.perf_counter()
+    svc.park(victim)
+    park_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    svc.push_audio({victim: x[0, TICKS + 1]})
+    resume_us = (time.perf_counter() - t0) * 1e6
+    emit("sessions/park", park_us, f"parked_state={st['slot_state_bytes']}B")
+    emit("sessions/resume_push", resume_us, "unpack+step")
+
+    # -- evict -> park -> resume is bit-identical ---------------------------
+    xa = x[0]
+    control = _service(bundle, params, bn)
+    c = control.open_session()
+    control_out = [control.push_audio({c: xa[t]})[c] for t in range(30)]
+
+    svc2 = _service(bundle, params, bn, max_sessions=N_SLOTS + 8)
+    others = [svc2.open_session() for _ in range(N_SLOTS - 1)]
+    a = svc2.open_session()
+    out = [svc2.push_audio({a: xa[t], **{s: x[j + 1, t] for j, s in
+                                         enumerate(others)}})[a]
+           for t in range(15)]
+    # opening one more session must evict the LRU idle session == a
+    for t in range(3):
+        svc2.push_audio({s: x[j + 1, 15 + t] for j, s in enumerate(others)})
+    extra = svc2.open_session()
+    assert svc2.poll(a)["state"] == "parked", "expected LRU eviction of idle session"
+    svc2.push_audio({extra: x[0, TICKS]})
+    svc2.close(extra)
+    for t in range(15, 30):  # resume mid-stream (different slot is fine)
+        out.append(svc2.push_audio({a: xa[t]})[a])
+    exact = all(
+        np.array_equal(out[t]["emb"], control_out[t]["emb"])
+        and np.array_equal(out[t]["logits"], control_out[t]["logits"])
+        for t in range(30))
+    assert exact, "park/resume must be bit-identical to the uninterrupted run"
+    emit("sessions/park_resume_exact", 0.0,
+         f"bit_identical=True evictions={svc2.stats()['evictions']}")

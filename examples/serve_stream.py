@@ -1,5 +1,7 @@
-"""Serving example: (a) real-time streaming KWS through the ring-buffer TCN
-(the paper's deployment), and (b) batched LM serving with slot reuse.
+"""Serving example: (a) real-time streaming KWS through the session-service
+façade (the blessed entry point — sessions/service.py), and (b) batched LM
+serving with slot reuse.  For multi-tenant personalization, eviction, and
+park/resume see examples/serve_multitenant.py.
 
     PYTHONPATH=src python examples/serve_stream.py
 """
@@ -12,7 +14,8 @@ from repro.configs import get_config
 from repro.data import KeywordAudio
 from repro.models import build_bundle
 from repro.models.tcn import tcn_empty_state
-from repro.serving import LMServer, ServeConfig, TCNStreamServer
+from repro.serving import LMServer, ServeConfig
+from repro.sessions import StreamSessionService
 
 
 def main():
@@ -20,14 +23,17 @@ def main():
     cfg = get_config("chameleon-tcn-kws").smoke()
     bundle = build_bundle(cfg)
     params = bundle.init(jax.random.key(0))
-    srv = TCNStreamServer(bundle, params, tcn_empty_state(cfg), n_streams=2)
+    svc = StreamSessionService(bundle, params, tcn_empty_state(cfg),
+                               n_slots=2, max_tenants=1)
     audio = KeywordAudio(n_classes=4, seed=0)
     clips = np.concatenate([audio.sample(0, 1, seed=1),
                             audio.sample(2, 1, seed=2)])
     frames = audio.mfcc(clips)  # (2, 63, 28)
+    streams = [svc.open_session() for _ in range(2)]
     for t in range(frames.shape[1]):
-        emb, logits = srv.push(frames[:, t, :])
-    print(f"   streamed {frames.shape[1]} frames x2 streams -> "
+        res = svc.push_audio({sid: frames[i, t] for i, sid in enumerate(streams)})
+    logits = np.stack([res[sid]["logits"] for sid in streams])
+    print(f"   streamed {frames.shape[1]} frames x2 sessions -> "
           f"logits {logits.shape}, argmax {logits.argmax(-1)}")
 
     print("== batched LM serving (slot reuse) ==")

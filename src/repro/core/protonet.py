@@ -70,6 +70,21 @@ def pn_logits(x: jax.Array, w: jax.Array, b: jax.Array):
     return jnp.einsum("bv,nv->bn", x, w) + b[None, :]
 
 
+def pn_logits_banked(x: jax.Array, w: jax.Array, b: jax.Array,
+                     bank_ids: jax.Array):
+    """Batched multi-store distance: each query row classifies against ITS
+    OWN stacked FC rows.  x: (S, V); w: (T, N, V); b: (T, N); bank_ids: (S,)
+    int32 selecting the bank row per query (negative ids clamp to 0 — callers
+    mask those rows out).  Returns (S, N) logits.
+
+    This is the multi-tenant form of Eq. 6: the gather + einsum stay one
+    fused batched contraction, so S concurrent personalized classifiers cost
+    one matmul — the software analogue of the ASIC swapping FC rows per
+    user (26 B/way) without touching the shared embedder."""
+    ids = jnp.clip(bank_ids, 0, w.shape[0] - 1)
+    return jnp.einsum("sv,snv->sn", x, w[ids]) + b[ids]
+
+
 def l2_classify(x: jax.Array, prototypes: jax.Array):
     """Oracle: argmin_j ||P_j - x||^2 (used by tests/benchmarks only)."""
     d2 = jnp.sum(jnp.square(x[:, None, :] - prototypes[None]), axis=-1)

@@ -57,6 +57,37 @@ def stream_init(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
     return state
 
 
+def stream_init_single(cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    """Single-session streaming state with NO batch axis: rings (n, c), t ().
+
+    This is the vmappable pytree unit the sessions subsystem stacks into a
+    structure-of-arrays slot grid — one leaf set per session, so a session's
+    entire stream position is capturable/restorable as one small pytree."""
+    state = {"t": jnp.zeros((), jnp.int32), "blocks": {}}
+    for name, rs in ring_sizes(cfg).items():
+        (n1, c1), (n2, c2) = rs["ring1"], rs["ring2"]
+        state["blocks"][name] = {"ring1": jnp.zeros((n1, c1), dtype),
+                                 "ring2": jnp.zeros((n2, c2), dtype)}
+    return state
+
+
+def stream_step_single(params, bn_state, cfg: ArchConfig, state: dict,
+                       x_t: jax.Array, *, quantize: bool = False):
+    """``stream_step`` for one session: x_t (C_in,), rings (n, c).
+
+    Designed to sit under ``jax.vmap`` (sessions/state.py): vmapping this
+    over a stacked state recovers exactly the batched math of
+    ``stream_step``, but with an *independent* step counter per session —
+    streams admitted at different times stay phase-correct."""
+    st = {"t": state["t"],
+          "blocks": jax.tree.map(lambda a: a[None], state["blocks"])}
+    new, emb, logits = stream_step(params, bn_state, cfg, st, x_t[None],
+                                   quantize=quantize)
+    return ({"t": new["t"],
+             "blocks": jax.tree.map(lambda a: a[0], new["blocks"])},
+            emb[0], logits[0])
+
+
 def _taps(ring, x_t, t, dilation: int, k: int):
     """Collect the k conv taps for the current step: x_{t-(k-1-j)d}, j=0..k-1.
 

@@ -10,18 +10,26 @@ state (device count is locked at first backend init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; Auto is the pre-0.5 default anyway
+    from jax.sharding import AxisType
+
+    def _axis_kw(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:
+    def _axis_kw(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_mesh(shape: tuple, axes: tuple):
     """Arbitrary test meshes (e.g. (2, 2) on 4 host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def dp_axes(mesh) -> tuple:

@@ -1,19 +1,20 @@
-"""Batched serving engine.
+"""Batched serving engines — thin clients of the sessions subsystem.
 
-Continuous-batching-lite over a fixed slot grid: every LM bundle serves a
-(B, S_cap) cache; requests occupy slots with their own positions and an
-active mask, so finished requests free slots for new ones between steps
-without recompiling (pos is a traced per-slot vector in the sampler only;
-the model decode step itself is batch-synchronized per the bundle API and
-per-slot answers are masked).
+Slot lifecycle (admission, reuse, LRU bookkeeping) lives in
+``sessions/scheduler.SlotScheduler``; both servers here keep a fixed
+compiled batch shape and move requests on/off slots between steps without
+recompiling.
 
 The dual-mode idea from the paper maps here to two engine presets:
   * "low-power"  — small batch, latency-optimized (the 4x4 array analogue),
   * "throughput" — full batch, maximize tokens/s (the 16x16 analogue).
 
-For the TCN architecture serving means *streaming*: core/streaming.py state
-advanced one audio sample per step; `TCNStreamServer` wraps it with the same
-slot semantics.
+For the TCN architecture serving means *streaming*: ``TCNStreamServer`` is
+now a façade over ``sessions/service.StreamSessionService`` — one session
+per stream, all advanced by the service's single jitted batched step.  Use
+the service directly for multi-tenant personalization, park/resume, and
+session churn; this class keeps the historical push(x_t)->(emb, logits)
+surface for fixed lockstep stream grids.
 """
 
 from __future__ import annotations
@@ -24,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.streaming import stream_init, stream_step
+from repro.sessions.scheduler import SlotScheduler
+from repro.sessions.service import StreamSessionService
 
 
 @dataclass
@@ -45,28 +47,53 @@ class LMServer:
         B, S = cfg.effective_batch(), cfg.seq_cap
         self.cache = bundle.empty_cache(B, S)
         self.pos = np.zeros(B, np.int64)
-        self.active = np.zeros(B, bool)
         self.tokens = np.zeros((B, 1), np.int32)
         self.outputs: dict[int, list] = {}
         self._decode = jax.jit(bundle.decode_fn)
+        self.sched = SlotScheduler(B)
         self._next_id = 0
-        self._slot_req = [-1] * B
+        # per-leaf batch axis, derived from the bundle (the axis whose extent
+        # tracks B) — no shape-sniffing against concrete dims that might
+        # coincide with B.  -1 marks leaves without a per-slot column.
+        sa = jax.eval_shape(lambda: bundle.empty_cache(B, S))
+        sb = jax.eval_shape(lambda: bundle.empty_cache(B + 1, S))
+        def axis_of(a, b):
+            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return i
+            return -1
+        self._cache_axes = jax.tree.leaves(jax.tree.map(axis_of, sa, sb))
+
+    @staticmethod
+    def _col(ax: int, slot: int):
+        return (slice(None),) * ax + (slot,)
 
     def add_request(self, prompt: np.ndarray) -> int:
-        """Admit a request into a free slot (prefill via step-wise decode)."""
-        free = [i for i in range(len(self.active)) if not self.active[i]]
-        if not free:
+        """Admit a request into a free slot (prefill via step-wise decode).
+
+        LM slots hold a KV cache that is not parked to host (unlike TCN
+        stream state), so admission is free-slot-only — no eviction.
+        Step-wise prefill is batch-synchronized (every slot's cache row is
+        written at the prompt's low positions), so live slots' cache columns
+        are snapshotted before and restored after — admission never perturbs
+        in-flight requests."""
+        if not self.sched.free_slots:
             raise RuntimeError("no free slots")
-        slot = free[0]
         rid = self._next_id
         self._next_id += 1
-        # per-slot prefill: feed prompt tokens one at a time (slot-local pos);
-        # bulk prefill via bundle.prefill_fn is used when batch arrives empty.
-        for t, tok in enumerate(prompt):
+        self.sched.admit(rid)
+        slot, _ = self.sched.bind(rid)
+        # jax arrays are immutable: the pre-prefill cache stays intact, so
+        # after prefill we graft ONLY the new slot's column onto it — one
+        # on-device column copy, live slots untouched by construction.
+        before, treedef = jax.tree.flatten(self.cache)
+        for tok in prompt:
             self.tokens[slot, 0] = tok
             self._step_single(slot)
-        self.active[slot] = True
-        self._slot_req[slot] = rid
+        after = jax.tree.leaves(self.cache)
+        self.cache = jax.tree.unflatten(treedef, [
+            a if ax < 0 else b.at[self._col(ax, slot)].set(a[self._col(ax, slot)])
+            for b, a, ax in zip(before, after, self._cache_axes)])
         self.outputs[rid] = []
         return rid
 
@@ -80,46 +107,61 @@ class LMServer:
         self.pos[slot] += 1
         return np.asarray(logits[slot])
 
-    def step(self, greedy: bool = True):
-        """One decode step for every active slot."""
-        if not self.active.any():
+    def step(self):
+        """One greedy decode step for every active slot."""
+        if not self.sched.sid_of:
             return
         pos = int(self.pos.max())
         logits, self.cache = self._decode(
             self.params, self.cache,
             {"tokens": jnp.asarray(self.tokens), "pos": jnp.asarray(pos, jnp.int32)})
-        logits = np.asarray(logits)
-        nxt = logits.argmax(-1) if greedy else logits.argmax(-1)
-        for i in range(len(self.active)):
-            if self.active[i]:
-                tok = int(nxt[i])
-                self.outputs[self._slot_req[i]].append(tok)
-                self.tokens[i, 0] = tok
-                self.pos[i] = pos + 1
-                if self.pos[i] >= self.cfg.seq_cap - 1:
-                    self.active[i] = False  # slot freed
+        nxt = np.asarray(logits).argmax(-1)
+        for slot, rid in list(self.sched.sid_of.items()):
+            tok = int(nxt[slot])
+            self.outputs[rid].append(tok)
+            self.tokens[slot, 0] = tok
+            self.pos[slot] = pos + 1
+            # no touch(): LM admission is free-slot-only, LRU never consulted
+            if self.pos[slot] >= self.cfg.seq_cap - 1:
+                self._release(rid)  # slot freed
+
+    def _release(self, rid: int):
+        """Free a request's slot AND scrub it: reset its position/token and
+        zero its cache column, so the next occupant prefills from position 0
+        like a fresh slot (and a capped slot can't pin step()'s shared
+        max-pos forever)."""
+        slot = self.sched.release(rid)
+        if slot is None:
+            return
+        self.pos[slot] = 0
+        self.tokens[slot, 0] = 0
+        leaves, treedef = jax.tree.flatten(self.cache)
+        self.cache = jax.tree.unflatten(treedef, [
+            l if ax < 0 else l.at[self._col(ax, slot)].set(0)
+            for l, ax in zip(leaves, self._cache_axes)])
 
     def finish(self, rid: int):
-        for i, r in enumerate(self._slot_req):
-            if r == rid:
-                self.active[i] = False
-                self._slot_req[i] = -1
+        self._release(rid)
 
 
 class TCNStreamServer:
     """Real-time streaming classification (the paper's KWS deployment):
-    one jitted step advances all streams one sample; O(R) state per stream."""
+    one jitted step advances all streams one sample; O(R) state per stream.
+
+    Thin client of StreamSessionService: n_streams lockstep sessions on an
+    n_streams-slot grid (no churn, no tenants — the historical surface)."""
 
     def __init__(self, bundle, params, bn_state, n_streams: int, quantize=False):
         self.cfg = bundle.cfg
-        self.params = params
-        self.bn_state = bn_state
-        self.state = stream_init(self.cfg, n_streams)
-        self._step = jax.jit(
-            lambda st, x: stream_step(params, bn_state, self.cfg, st, x,
-                                      quantize=quantize))
+        self.service = StreamSessionService(
+            bundle, params, bn_state, n_slots=n_streams, max_tenants=1,
+            max_ways=1, quantize=quantize)
+        self.sids = [self.service.open_session() for _ in range(n_streams)]
 
     def push(self, x_t: np.ndarray):
         """x_t: (n_streams, C_in) one sample per stream -> (emb, logits)."""
-        self.state, emb, logits = self._step(self.state, jnp.asarray(x_t))
-        return np.asarray(emb), np.asarray(logits)
+        res = self.service.push_audio(
+            {sid: x_t[i] for i, sid in enumerate(self.sids)})
+        emb = np.stack([res[sid]["emb"] for sid in self.sids])
+        logits = np.stack([res[sid]["logits"] for sid in self.sids])
+        return emb, logits

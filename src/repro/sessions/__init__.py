@@ -1,0 +1,42 @@
+"""Multi-tenant streaming session subsystem.
+
+Virtualizes the paper's per-user deployment (shared TCN embedder + per-user
+prototype classifiers + O(R) stream state) over a fixed compiled slot grid:
+
+  * state.py     — structure-of-arrays vmapped session state, pack/unpack
+  * tenancy.py   — stacked per-tenant PrototypeStore banks
+  * scheduler.py — admission control, LRU eviction, slot reuse
+  * service.py   — open_session / push_audio / enroll_shots / poll / close
+"""
+
+from repro.sessions.scheduler import AdmissionError, CapacityError, SlotScheduler
+from repro.sessions.service import NO_TENANT, StreamSessionService
+from repro.sessions.state import (
+    grid_init,
+    grid_step,
+    pack_slot,
+    reset_slot,
+    slot_state_bytes,
+    unpack_slot,
+)
+from repro.sessions.tenancy import (
+    TenantBank,
+    bank_add_class,
+    bank_clear_tenant,
+    bank_fc,
+    bank_init,
+    bank_pack_tenant,
+    bank_store,
+    bank_unpack_tenant,
+    bank_update_class,
+)
+
+__all__ = [
+    "AdmissionError", "CapacityError", "SlotScheduler",
+    "NO_TENANT", "StreamSessionService",
+    "grid_init", "grid_step", "pack_slot", "reset_slot", "slot_state_bytes",
+    "unpack_slot",
+    "TenantBank", "bank_add_class", "bank_clear_tenant", "bank_fc",
+    "bank_init", "bank_pack_tenant", "bank_store", "bank_unpack_tenant",
+    "bank_update_class",
+]

@@ -1,0 +1,272 @@
+"""Request-loop façade over the multi-tenant streaming session subsystem.
+
+``StreamSessionService`` virtualizes the paper's deployment — one shared TCN
+embedder, many per-user prototype classifiers, O(receptive-field) stream
+state per user — behind five verbs:
+
+    open_session / push_audio / enroll_shots / poll / close
+
+All active sessions advance through ONE jitted batched call per tick over a
+fixed compiled shape (sessions/state.grid_step): admission, eviction to the
+host-side parking lot, slot reuse, and mid-stream tenant enrollment all
+happen without recompiling.  A parked session resumes bit-identically in
+any free slot because its entire stream position is its packed pytree.
+
+Built for the TCN bundle (models/build.build_tcn_bundle); the LM slot grid
+in serving/engine.py shares the same SlotScheduler.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.protonet import pn_logits_banked
+from repro.models.tcn import tcn_empty_state
+from repro.sessions.scheduler import SlotScheduler
+from repro.sessions.state import (
+    grid_init,
+    grid_step,
+    pack_slot,
+    reset_slot,
+    slot_state_bytes,
+    unpack_slot,
+)
+from repro.sessions.tenancy import (
+    bank_add_class,
+    bank_clear_tenant,
+    bank_fc,
+    bank_init,
+    bank_update_class,
+)
+
+NO_TENANT = -1
+
+
+@dataclass
+class _Session:
+    tenant: int = NO_TENANT
+    dedicated: bool = False  # tenant row was created for this session
+    steps: int = 0
+    last: dict | None = None
+
+
+class StreamSessionService:
+    """Multi-tenant streaming TCN service over a fixed slot grid."""
+
+    def __init__(self, bundle, params, bn_state=None, *, n_slots: int = 8,
+                 max_tenants: int = 8, max_ways: int = 8,
+                 max_sessions: int | None = None, quantize: bool = False):
+        cfg = bundle.cfg
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_ways = max_ways
+        bn_state = bn_state if bn_state is not None else tcn_empty_state(cfg)
+
+        self.states = grid_init(cfg, n_slots)
+        self.bank = bank_init(max_tenants, max_ways, cfg.embed_dim)
+        self.sched = SlotScheduler(n_slots, max_sessions)
+        self.parking: dict[int, dict] = {}        # sid -> host pytree
+        self.sessions: dict[int, _Session] = {}
+        self.tenant_of_slot = np.full(n_slots, NO_TENANT, np.int32)
+        self._free_tenants = list(range(max_tenants))
+        self._tenant_ways = np.zeros(max_tenants, np.int32)  # host mirror
+        self._next_sid = 0
+        self.evictions = 0
+
+        def _step(states, x, active, bank, tenant_ids):
+            new_states, emb, logits = grid_step(
+                params, bn_state, cfg, states, x, active, quantize=quantize)
+            w, b = bank_fc(bank)
+            return new_states, emb, logits, pn_logits_banked(emb, w, b, tenant_ids)
+
+        self._step = jax.jit(_step)
+        # shot embedding for enrollment — the TCN bundle's embed_fn honours
+        # the service's BN stats and quantize mode
+        self._embed = jax.jit(lambda x: bundle.embed_fn(
+            params, {"x": x}, state=bn_state, quantize=quantize))
+
+    # -- tenants ------------------------------------------------------------
+    def create_tenant(self) -> int:
+        if not self._free_tenants:
+            raise RuntimeError("tenant bank full")
+        return self._free_tenants.pop(0)
+
+    def close_tenant(self, tenant: int) -> None:
+        if any(s.tenant == tenant for s in self.sessions.values()):
+            raise RuntimeError(f"tenant {tenant} still has open sessions")
+        self.bank = bank_clear_tenant(self.bank, tenant)
+        self._tenant_ways[tenant] = 0
+        self._free_tenants.append(tenant)
+
+    # -- session lifecycle --------------------------------------------------
+    def open_session(self, tenant: int | None = NO_TENANT) -> int:
+        """Admit a session.  ``tenant=None`` creates a dedicated tenant
+        (freed again when the session closes); ``NO_TENANT`` (default)
+        classifies with the shared global head."""
+        dedicated = tenant is None
+        claimed = dedicated
+        if dedicated:
+            tenant = self.create_tenant()
+        elif tenant != NO_TENANT:
+            if not 0 <= tenant < len(self._tenant_ways):
+                raise ValueError(
+                    f"tenant {tenant} out of range [0, {len(self._tenant_ways)})")
+            if tenant in self._free_tenants:  # claim an uncreated row
+                self._free_tenants.remove(tenant)
+                claimed = True
+        sid = self._next_sid
+        self._next_sid += 1
+        try:
+            self.sched.admit(sid)  # may raise AdmissionError (back-pressure)
+        except Exception:
+            if claimed:  # don't leak the tenant row on refused admission
+                self._free_tenants.insert(0, tenant)
+            raise
+        self.sessions[sid] = _Session(tenant=tenant, dedicated=dedicated)
+        self._bind(sid)
+        return sid
+
+    def _bind(self, sid: int, pinned: set[int] = frozenset()) -> int:
+        slot, evicted = self.sched.bind(sid, pinned)
+        if evicted is not None:
+            self.parking[evicted] = pack_slot(self.states, slot)
+            self.evictions += 1
+        if sid in self.parking:
+            self.states = unpack_slot(self.states, slot, self.parking.pop(sid))
+        elif self.sessions[sid].steps == 0:
+            self.states = reset_slot(self.states, slot)
+        else:  # rebinding after evicted==None cannot lose state
+            raise AssertionError("bound session missing parked state")
+        self.tenant_of_slot[slot] = self.sessions[sid].tenant
+        return slot
+
+    def park(self, sid: int) -> None:
+        """Explicitly swap a session's stream state to host memory."""
+        slot = self.sched.park(sid)
+        if slot is not None:
+            self.parking[sid] = pack_slot(self.states, slot)
+            self.tenant_of_slot[slot] = NO_TENANT
+
+    def close(self, sid: int) -> None:
+        slot = self.sched.release(sid)
+        if slot is not None:
+            self.tenant_of_slot[slot] = NO_TENANT
+        self.parking.pop(sid, None)
+        sess = self.sessions.pop(sid)
+        # a dedicated tenant row dies with its last session: if other
+        # sessions share the row, ownership passes to one of them so the
+        # row is still freed when the final sharer closes
+        if sess.dedicated:
+            sharers = [s for s in self.sessions.values()
+                       if s.tenant == sess.tenant]
+            if sharers:
+                sharers[0].dedicated = True
+            else:
+                self.close_tenant(sess.tenant)
+
+    # -- the hot path -------------------------------------------------------
+    def push_audio(self, samples: dict[int, Any]) -> dict[int, dict]:
+        """Advance every session in ``samples`` one timestep.
+
+        samples: {sid: (C_in,) sample}.  All pushed sessions step in ONE
+        jitted batched call; parked sessions are resumed first (possibly
+        evicting idle ones).  Returns {sid: {emb, logits, tenant_logits,
+        pred, step}}."""
+        if len(samples) > self.n_slots:
+            raise ValueError(
+                f"{len(samples)} sessions pushed but only {self.n_slots} slots; "
+                "split the push or grow the grid")
+        pinned = set(samples)
+        for sid in samples:
+            if sid not in self.sessions:
+                raise KeyError(f"unknown session {sid}")
+            self.sched.touch(sid)
+            if not self.sched.is_bound(sid):
+                self._bind(sid, pinned)
+
+        x = np.zeros((self.n_slots, self.cfg.tcn_in_channels), np.float32)
+        active = np.zeros(self.n_slots, bool)
+        slot_of = {}
+        for sid, sample in samples.items():
+            slot = self.sched.slot_of[sid]
+            slot_of[sid] = slot
+            x[slot] = np.asarray(sample, np.float32).reshape(-1)
+            active[slot] = True
+
+        self.states, emb, logits, tlogits = self._step(
+            self.states, jnp.asarray(x), jnp.asarray(active), self.bank,
+            jnp.asarray(self.tenant_of_slot))
+        emb, logits, tlogits = (np.asarray(emb), np.asarray(logits),
+                                np.asarray(tlogits))
+
+        out = {}
+        for sid, slot in slot_of.items():
+            sess = self.sessions[sid]
+            sess.steps += 1
+            personalized = (sess.tenant != NO_TENANT
+                            and self._tenant_ways[sess.tenant] > 0)
+            res = {
+                "emb": emb[slot],
+                "logits": logits[slot],
+                "tenant_logits": tlogits[slot] if personalized else None,
+                "pred": int(tlogits[slot].argmax()) if personalized
+                        else int(logits[slot].argmax()),
+                "step": sess.steps,
+            }
+            sess.last = res
+            out[sid] = res
+        return out
+
+    # -- FSL / CL enrollment (live, mid-stream) -----------------------------
+    def enroll_shots(self, sid: int, shots, *, embedded: bool = False,
+                     way: int | None = None) -> int:
+        """Enroll k shots as a new way (or refine ``way``) for the session's
+        tenant.  shots: (k, T, C_in) raw clips (embedded via the shared
+        backbone) or (k, V) embeddings when ``embedded=True``.  The tenant's
+        very next ``push_audio`` classifies against the updated bank."""
+        tenant = self.sessions[sid].tenant
+        if tenant == NO_TENANT:
+            raise ValueError("session has no tenant; open with tenant=None "
+                             "or an explicit tenant id to personalize")
+        emb = jnp.asarray(shots) if embedded else self._embed(jnp.asarray(shots))
+        if way is None:
+            if self._tenant_ways[tenant] >= self.max_ways:
+                raise RuntimeError(f"tenant {tenant} at max_ways={self.max_ways}")
+            self.bank = bank_add_class(self.bank, tenant, emb)
+            way = int(self._tenant_ways[tenant])
+            self._tenant_ways[tenant] += 1
+        else:
+            if not 0 <= way < self._tenant_ways[tenant]:
+                raise ValueError(
+                    f"way {way} not enrolled for tenant {tenant} "
+                    f"({self._tenant_ways[tenant]} ways); omit way= to enroll")
+            self.bank = bank_update_class(self.bank, tenant, way, emb)
+        return way
+
+    # -- introspection ------------------------------------------------------
+    def poll(self, sid: int) -> dict:
+        sess = self.sessions[sid]
+        return {
+            "state": "active" if self.sched.is_bound(sid) else "parked",
+            "slot": self.sched.slot_of.get(sid),
+            "tenant": None if sess.tenant == NO_TENANT else sess.tenant,
+            "n_ways": int(self._tenant_ways[sess.tenant])
+                      if sess.tenant != NO_TENANT else 0,
+            "steps": sess.steps,
+            "last": sess.last,
+        }
+
+    def stats(self) -> dict:
+        return {
+            "n_slots": self.n_slots,
+            "bound": len(self.sched.slot_of),
+            "parked": len(self.parking),
+            "live_sessions": self.sched.live_sessions,
+            "evictions": self.evictions,
+            "slot_state_bytes": slot_state_bytes(self.states),
+        }

@@ -1,0 +1,76 @@
+"""Structure-of-arrays session state for the multi-tenant streaming layer.
+
+A *slot grid* stacks ``n_slots`` independent single-session streaming
+pytrees (core/streaming.stream_init_single) leaf-wise: rings become
+(S, n, c), step counters (S,).  One ``jax.vmap`` of ``stream_step_single``
+advances every slot in a single jitted call — the batched math is identical
+to ``stream_step`` but each slot keeps its OWN step counter, so sessions
+admitted at different wall-clock times stay phase-correct.
+
+Inactive slots are *bit-frozen*: the vmapped step still computes them (the
+compiled shape is fixed — that is the whole point, no recompiles as sessions
+come and go), but a ``jnp.where`` on the active mask discards their writes,
+so a parked/free slot's state is exactly the state at its last active step.
+
+``pack_slot``/``unpack_slot`` move one slot's column of the SoA to/from host
+memory (numpy) — the parking lot for evicted sessions.  Because a session's
+state is position-independent (no leaf encodes the slot index), a parked
+session can resume in ANY free slot bit-identically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.streaming import stream_init_single, stream_step_single
+from repro.models.config import ArchConfig
+
+
+def grid_init(cfg: ArchConfig, n_slots: int, dtype=jnp.float32) -> dict:
+    """Stacked session state: every single-session leaf gains a leading
+    (n_slots,) axis."""
+    one = stream_init_single(cfg, dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((n_slots,) + a.shape, a.dtype), one)
+
+
+def grid_step(params, bn_state, cfg: ArchConfig, states: dict, x: jax.Array,
+              active: jax.Array, *, quantize: bool = False):
+    """Advance all S slots one sample.  x: (S, C_in); active: (S,) bool.
+
+    Returns (new_states, emb (S, V), logits (S, n_classes)).  Slots with
+    active=False keep their previous state bit-exactly (outputs for those
+    rows are computed but meaningless — callers mask them)."""
+    step = lambda st, xt: stream_step_single(
+        params, bn_state, cfg, st, xt, quantize=quantize)
+    stepped, emb, logits = jax.vmap(step)(states, x)
+    keep = lambda new, old: jnp.where(
+        jnp.reshape(active, active.shape + (1,) * (new.ndim - 1)), new, old)
+    return jax.tree.map(keep, stepped, states), emb, logits
+
+
+def pack_slot(states: dict, slot: int) -> dict:
+    """Copy one slot's session state to host memory (the parking lot)."""
+    return jax.tree.map(lambda a: np.asarray(a[slot]), states)
+
+
+def unpack_slot(states: dict, slot: int, parked: dict) -> dict:
+    """Restore a parked session into ``slot`` (any free slot works — state
+    is slot-position independent)."""
+    return jax.tree.map(
+        lambda a, p: a.at[slot].set(jnp.asarray(p, a.dtype)), states, parked)
+
+
+def reset_slot(states: dict, slot: int) -> dict:
+    """Zero one slot (fresh session: empty rings, t=0)."""
+    return jax.tree.map(lambda a: a.at[slot].set(jnp.zeros_like(a[slot])),
+                        states)
+
+
+def slot_state_bytes(states: dict) -> int:
+    """Per-slot parked-state footprint in bytes (host copy of one column)."""
+    n_slots = jax.tree.leaves(states)[0].shape[0]
+    total = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(states))
+    return total // n_slots

@@ -1,0 +1,114 @@
+"""Per-tenant prototype banks — the FSL/CL personalization layer (§III-A).
+
+Each tenant owns a ``PrototypeStore`` (core/protonet.py): FC rows extracted
+from its enrolled keyword shots.  ``TenantBank`` stacks up to ``max_tenants``
+stores into one (T, max_ways, V) table so that every active session slot can
+classify against *its own* tenant's personalized keyword set inside the same
+batched contraction (core/protonet.pn_logits_banked) — no per-tenant
+dispatch, no recompile when a tenant enrolls a new way mid-stream.
+
+Enrollment is the paper's CL path verbatim: appending a way is writing one
+(V,) sum row + one count (26 B/way on the ASIC); refining a way is adding to
+the sum (Eq. 3).  Both are ``.at[]`` updates on the stacked arrays, so a
+live stream sees its new class on the very next step.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.protonet import PrototypeStore, store_fc
+
+
+class TenantBank(NamedTuple):
+    """Stacked PrototypeStores: one row per tenant."""
+    s_sums: jax.Array   # (T, max_ways, V)
+    counts: jax.Array   # (T, max_ways)
+    n_ways: jax.Array   # (T,) int32
+
+
+def bank_init(max_tenants: int, max_ways: int, dim: int) -> TenantBank:
+    return TenantBank(
+        s_sums=jnp.zeros((max_tenants, max_ways, dim), jnp.float32),
+        counts=jnp.zeros((max_tenants, max_ways), jnp.float32),
+        n_ways=jnp.zeros((max_tenants,), jnp.int32),
+    )
+
+
+def bank_store(bank: TenantBank, tenant: int) -> PrototypeStore:
+    """View one tenant's row as a standalone PrototypeStore."""
+    return PrototypeStore(s_sums=bank.s_sums[tenant],
+                          counts=bank.counts[tenant],
+                          n_ways=bank.n_ways[tenant])
+
+
+def bank_set_store(bank: TenantBank, tenant: int,
+                   store: PrototypeStore) -> TenantBank:
+    return TenantBank(
+        s_sums=bank.s_sums.at[tenant].set(store.s_sums),
+        counts=bank.counts.at[tenant].set(store.counts),
+        n_ways=bank.n_ways.at[tenant].set(store.n_ways),
+    )
+
+
+def bank_add_class(bank: TenantBank, tenant: int,
+                   shot_embeddings: jax.Array) -> TenantBank:
+    """Enroll one new way for ``tenant`` from its (k, V) shot embeddings."""
+    way = bank.n_ways[tenant]
+    s = shot_embeddings.astype(jnp.float32).sum(axis=0)
+    return TenantBank(
+        # .set (not .add) on BOTH leaves: a new way must not inherit residue
+        # from a previously cleared or misused row
+        s_sums=bank.s_sums.at[tenant, way].set(s),
+        counts=bank.counts.at[tenant, way].set(shot_embeddings.shape[0]),
+        n_ways=bank.n_ways.at[tenant].add(1),
+    )
+
+
+def bank_update_class(bank: TenantBank, tenant: int, way,
+                      shot_embeddings: jax.Array) -> TenantBank:
+    """Refine an existing way with more shots (prototype refinement, Eq. 3)."""
+    s = shot_embeddings.astype(jnp.float32).sum(axis=0)
+    return TenantBank(
+        s_sums=bank.s_sums.at[tenant, way].add(s),
+        counts=bank.counts.at[tenant, way].add(shot_embeddings.shape[0]),
+        n_ways=bank.n_ways,
+    )
+
+
+def bank_clear_tenant(bank: TenantBank, tenant: int) -> TenantBank:
+    """Free a tenant row (tenant closed) for reuse."""
+    return TenantBank(
+        s_sums=bank.s_sums.at[tenant].set(0.0),
+        counts=bank.counts.at[tenant].set(0.0),
+        n_ways=bank.n_ways.at[tenant].set(0),
+    )
+
+
+def bank_fc(bank: TenantBank):
+    """Stacked FC tables: W (T, max_ways, V), b (T, max_ways).
+
+    ``store_fc`` vmapped over the tenant axis — unlearned ways get bias
+    -inf per tenant, so a tenant with 3 enrolled ways never predicts way 5
+    even though neighbors in the bank may have it."""
+    stacked = PrototypeStore(bank.s_sums, bank.counts, bank.n_ways)
+    return jax.vmap(store_fc)(stacked)
+
+
+def bank_pack_tenant(bank: TenantBank, tenant: int) -> dict:
+    """Host-side copy of one tenant's row (for spilling a cold tenant)."""
+    return {"s_sums": np.asarray(bank.s_sums[tenant]),
+            "counts": np.asarray(bank.counts[tenant]),
+            "n_ways": np.asarray(bank.n_ways[tenant])}
+
+
+def bank_unpack_tenant(bank: TenantBank, tenant: int, packed: dict) -> TenantBank:
+    return TenantBank(
+        s_sums=bank.s_sums.at[tenant].set(jnp.asarray(packed["s_sums"])),
+        counts=bank.counts.at[tenant].set(jnp.asarray(packed["counts"])),
+        n_ways=bank.n_ways.at[tenant].set(jnp.asarray(packed["n_ways"])),
+    )

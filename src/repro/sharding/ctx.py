@@ -31,8 +31,12 @@ def shard_ctx(mesh, rules):
     resolved = resolve_rules(rules, mesh)
     prev = getattr(_state, "rules", None)
     _state.rules = resolved
+    # jax.set_mesh is the post-0.5 spelling; on 0.4.x the Mesh context
+    # manager provides the same ambient mesh for bare-PartitionSpec
+    # with_sharding_constraint calls.
+    set_mesh = getattr(jax, "set_mesh", None)
     try:
-        with jax.set_mesh(mesh):
+        with (set_mesh(mesh) if set_mesh is not None else mesh):
             yield resolved
     finally:
         _state.rules = prev

@@ -1,0 +1,62 @@
+"""`hypothesis` import shim: real library when available, else a tiny
+deterministic fallback so the tier-1 suite runs without the optional dep.
+
+The fallback implements just what these tests use — ``given`` over
+``strategies.integers`` ranges plus a no-op ``settings`` profile registry —
+drawing a fixed number of seeded pseudo-random examples per test.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _MAX_EXAMPLES = 10
+
+    class _IntStrategy:
+        def __init__(self, min_value: int, max_value: int):
+            self.lo, self.hi = int(min_value), int(max_value)
+
+        def example(self, rng) -> int:
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+    st = _Strategies()
+
+    class settings:  # noqa: N801 - mirrors the hypothesis API
+        _profiles: dict[str, dict] = {}
+
+        @classmethod
+        def register_profile(cls, name: str, **kwargs):
+            cls._profiles[name] = kwargs
+
+        @classmethod
+        def load_profile(cls, name: str):
+            global _MAX_EXAMPLES
+            _MAX_EXAMPLES = int(cls._profiles.get(name, {}).get(
+                "max_examples", _MAX_EXAMPLES))
+
+    def given(*strategies_):
+        def deco(fn):
+            # NB: no functools.wraps — copying the signature would make
+            # pytest treat the drawn arguments as fixtures.
+            def wrapper(*args, **kwargs):
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(_MAX_EXAMPLES):
+                    fn(*args, *[s.example(rng) for s in strategies_], **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -6,7 +6,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_bundle
-from repro.models.tcn import tcn_empty_state
+from repro.models.tcn import tcn_empty_state, tcn_forward
 from repro.serving import LMServer, ServeConfig, TCNStreamServer
 
 
@@ -36,6 +36,79 @@ def test_lm_server_slots_and_outputs():
 def test_dual_mode_batch_sizing():
     assert ServeConfig(max_batch=8, mode="throughput").effective_batch() == 8
     assert ServeConfig(max_batch=8, mode="low-power").effective_batch() == 2
+
+
+def test_lm_server_slot_reused_after_finish():
+    """finish() frees the physical slot; the next request lands on it."""
+    cfg, bundle, params = _tiny_lm()
+    srv = LMServer(bundle, params, ServeConfig(max_batch=2, seq_cap=32))
+    r1 = srv.add_request(np.array([1, 2], np.int32))
+    r2 = srv.add_request(np.array([3], np.int32))
+    slot1 = srv.sched.slot_of[r1]
+    with np.testing.assert_raises(RuntimeError):  # grid full
+        srv.add_request(np.array([4], np.int32))
+    srv.finish(r1)
+    assert not srv.sched.is_bound(r1)
+    assert srv.pos[slot1] == 0  # scrubbed: next occupant prefills fresh
+    r3 = srv.add_request(np.array([5], np.int32))
+    assert srv.sched.slot_of[r3] == slot1  # physical slot reuse
+    srv.step()
+    assert len(srv.outputs[r3]) == 1 and len(srv.outputs[r2]) >= 1
+
+
+def test_lm_server_mid_decode_admission_preserves_live_requests():
+    """Admitting a new request must not perturb in-flight requests: the
+    batch-synchronized prefill's cache writes to live slots are rolled back."""
+    cfg, bundle, params = _tiny_lm()
+    ctl = LMServer(bundle, params, ServeConfig(max_batch=2, seq_cap=48))
+    c = ctl.add_request(np.array([7, 9, 4], np.int32))
+    for _ in range(8):
+        ctl.step()
+    srv = LMServer(bundle, params, ServeConfig(max_batch=2, seq_cap=48))
+    r = srv.add_request(np.array([7, 9, 4], np.int32))
+    for _ in range(3):
+        srv.step()
+    srv.add_request(np.array([1, 2], np.int32))  # mid-decode admission
+    for _ in range(5):
+        srv.step()
+    assert srv.outputs[r] == ctl.outputs[c]
+
+
+def test_lm_server_reused_slot_decodes_like_fresh_slot():
+    """A reused slot must not see the previous occupant's KV entries: the
+    same prompt yields the same first token as on a fresh server."""
+    cfg, bundle, params = _tiny_lm()
+    fresh = LMServer(bundle, params, ServeConfig(max_batch=2, seq_cap=32))
+    rf = fresh.add_request(np.array([5], np.int32))
+    fresh.step()
+    srv = LMServer(bundle, params, ServeConfig(max_batch=2, seq_cap=32))
+    r1 = srv.add_request(np.array([1, 2], np.int32))
+    srv.step()
+    srv.finish(r1)
+    r2 = srv.add_request(np.array([5], np.int32))  # lands on r1's slot
+    srv.step()
+    assert srv.outputs[r2][0] == fresh.outputs[rf][0]
+
+
+def test_tcn_stream_server_matches_full_sequence():
+    """push()-ing a whole clip sample-by-sample ends at the same embedding/
+    logits as the full-sequence TCN forward (paper Fig. 8c through the
+    serving surface)."""
+    cfg = get_config("chameleon-tcn-kws").smoke()
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    bn = tcn_empty_state(cfg)
+    srv = TCNStreamServer(bundle, params, bn, n_streams=2)
+    T = 25
+    x = np.random.default_rng(3).normal(
+        size=(2, T, cfg.tcn_in_channels)).astype(np.float32)
+    for t in range(T):
+        emb, logits = srv.push(x[:, t])
+    emb_full, logits_full, _ = tcn_forward(params, bn, cfg, jnp.asarray(x),
+                                           train=False)
+    np.testing.assert_allclose(emb, np.asarray(emb_full), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(logits, np.asarray(logits_full),
+                               rtol=2e-4, atol=2e-5)
 
 
 def test_tcn_stream_server():

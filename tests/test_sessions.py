@@ -1,0 +1,397 @@
+"""Multi-tenant streaming session subsystem: batched-step exactness,
+park/resume round-trips, tenant isolation, scheduler policy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import protonet as pn
+from repro.core.streaming import stream_init, stream_step
+from repro.models import build_bundle
+from repro.models.tcn import tcn_empty_state, tcn_forward
+from repro.sessions import (
+    AdmissionError,
+    CapacityError,
+    SlotScheduler,
+    StreamSessionService,
+    bank_add_class,
+    bank_fc,
+    bank_init,
+    bank_store,
+    grid_init,
+    grid_step,
+    pack_slot,
+    unpack_slot,
+)
+
+
+def _setup(seed=0):
+    cfg = get_config("chameleon-tcn").replace(
+        tcn_channels=(8, 8), tcn_kernel=3, tcn_in_channels=2,
+        embed_dim=12, n_classes=4)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(seed))
+    bn = tcn_empty_state(cfg)
+    bn = jax.tree.map(
+        lambda a: a + 0.05 * jnp.abs(jax.random.normal(jax.random.key(7), a.shape)),
+        bn)
+    return cfg, bundle, params, bn
+
+
+# ---------------------------------------------------------------------------
+# state.py: vmapped grid step
+# ---------------------------------------------------------------------------
+
+def test_grid_step_bit_exact_vs_batched_stream_step():
+    """The vmapped SoA step IS the batched stream_step, bit for bit."""
+    cfg, bundle, params, bn = _setup()
+    S, T = 4, 20
+    x = np.random.default_rng(0).normal(size=(S, T, 2)).astype(np.float32)
+    states = grid_init(cfg, S)
+    active = jnp.ones(S, bool)
+    gstep = jax.jit(lambda st, xt: grid_step(params, bn, cfg, st, xt, active))
+    bstate = stream_init(cfg, S)
+    bstep = jax.jit(lambda st, xt: stream_step(params, bn, cfg, st, xt))
+    for t in range(T):
+        states, emb_g, log_g = gstep(states, jnp.asarray(x[:, t]))
+        bstate, emb_b, log_b = bstep(bstate, jnp.asarray(x[:, t]))
+        np.testing.assert_array_equal(np.asarray(emb_g), np.asarray(emb_b))
+        np.testing.assert_array_equal(np.asarray(log_g), np.asarray(log_b))
+
+
+def test_grid_step_matches_sequential_single_streams():
+    """vs N separate B=1 stream_step runs: numerically identical up to CPU
+    matmul-width reassociation (and to the full-sequence conv)."""
+    cfg, bundle, params, bn = _setup()
+    S, T = 3, 25
+    x = np.random.default_rng(1).normal(size=(S, T, 2)).astype(np.float32)
+    states = grid_init(cfg, S)
+    active = jnp.ones(S, bool)
+    gstep = jax.jit(lambda st, xt: grid_step(params, bn, cfg, st, xt, active))
+    for t in range(T):
+        states, emb_g, _ = gstep(states, jnp.asarray(x[:, t]))
+    step1 = jax.jit(lambda st, xt: stream_step(params, bn, cfg, st, xt))
+    for i in range(S):
+        sti = stream_init(cfg, 1)
+        for t in range(T):
+            sti, e, _ = step1(sti, jnp.asarray(x[i:i + 1, t]))
+        np.testing.assert_allclose(np.asarray(emb_g[i]), np.asarray(e[0]),
+                                   rtol=1e-4, atol=1e-5)
+    emb_full, _, _ = tcn_forward(params, bn, cfg, jnp.asarray(x), train=False)
+    np.testing.assert_allclose(np.asarray(emb_g), np.asarray(emb_full),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_inactive_slots_bit_frozen():
+    """Stepping a subset leaves every other slot's state untouched."""
+    cfg, bundle, params, bn = _setup()
+    S = 4
+    x = np.random.default_rng(2).normal(size=(S, 2)).astype(np.float32)
+    states = grid_init(cfg, S)
+    for t in range(5):  # warm all slots so rings are non-trivial
+        states, _, _ = grid_step(params, bn, cfg, states,
+                                 jnp.asarray(x), jnp.ones(S, bool))
+    before = jax.tree.map(np.asarray, states)
+    active = jnp.asarray([True, False, True, False])
+    after, _, _ = grid_step(params, bn, cfg, states, jnp.asarray(x), active)
+    for leaf_b, leaf_a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(leaf_b[1], np.asarray(leaf_a)[1])
+        np.testing.assert_array_equal(leaf_b[3], np.asarray(leaf_a)[3])
+    # ...while active slots' step counters ticked
+    assert np.asarray(after["t"])[0] == before["t"][0] + 1
+    assert np.asarray(after["t"])[1] == before["t"][1]
+
+
+def test_pack_unpack_roundtrip_any_slot():
+    """Session state is slot-position independent: pack from slot i, unpack
+    into slot j, identical leaves."""
+    cfg, bundle, params, bn = _setup()
+    states = grid_init(cfg, 3)
+    x = np.random.default_rng(3).normal(size=(3, 2)).astype(np.float32)
+    for t in range(7):
+        states, _, _ = grid_step(params, bn, cfg, states,
+                                 jnp.asarray(x), jnp.ones(3, bool))
+    parked = pack_slot(states, 0)
+    states2 = unpack_slot(states, 2, parked)
+    for a, b in zip(jax.tree.leaves(pack_slot(states2, 2)),
+                    jax.tree.leaves(parked)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# service.py: park -> evict -> resume bit-identical
+# ---------------------------------------------------------------------------
+
+def test_evict_park_resume_bit_identical():
+    """A session evicted mid-stream and resumed (in a different slot) emits
+    bit-identical outputs to an uninterrupted control run."""
+    cfg, bundle, params, bn = _setup()
+    T = 30
+    rng = np.random.default_rng(4)
+    xa = rng.normal(size=(T, 2)).astype(np.float32)
+    xb = rng.normal(size=(T, 2)).astype(np.float32)
+
+    control = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1)
+    c = control.open_session()
+    control_out = [control.push_audio({c: xa[t]})[c] for t in range(T)]
+
+    svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1)
+    a = svc.open_session()
+    victim_out = [svc.push_audio({a: xa[t]})[a] for t in range(10)]
+    # two newer sessions force slot pressure; a is LRU -> evicted
+    b1 = svc.open_session()
+    b2 = svc.open_session()
+    assert svc.poll(a)["state"] == "parked"
+    for t in range(5):
+        svc.push_audio({b1: xb[t], b2: xb[t]})
+    # resuming a evicts an idle neighbor and lands in SOME slot
+    for t in range(10, T):
+        victim_out.append(svc.push_audio({a: xa[t]})[a])
+    assert svc.stats()["evictions"] >= 2
+    for t in (0, 9, 10, 15, T - 1):
+        np.testing.assert_array_equal(victim_out[t]["emb"], control_out[t]["emb"])
+        np.testing.assert_array_equal(victim_out[t]["logits"],
+                                      control_out[t]["logits"])
+
+
+def test_explicit_park_resume_roundtrip():
+    cfg, bundle, params, bn = _setup()
+    svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1)
+    control = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1)
+    x = np.random.default_rng(5).normal(size=(20, 2)).astype(np.float32)
+    s, c = svc.open_session(), control.open_session()
+    for t in range(8):
+        r1 = svc.push_audio({s: x[t]})[s]
+        r2 = control.push_audio({c: x[t]})[c]
+    svc.park(s)
+    assert svc.poll(s)["state"] == "parked"
+    for t in range(8, 20):
+        r1 = svc.push_audio({s: x[t]})[s]
+        r2 = control.push_audio({c: x[t]})[c]
+    np.testing.assert_array_equal(r1["emb"], r2["emb"])
+
+
+# ---------------------------------------------------------------------------
+# tenancy: per-tenant prototype banks
+# ---------------------------------------------------------------------------
+
+def test_bank_fc_matches_per_store():
+    """Stacked bank FC rows == each tenant's standalone store_fc."""
+    V = 8
+    rng = np.random.default_rng(6)
+    bank = bank_init(3, 4, V)
+    stores = [pn.store_init(4, V) for _ in range(3)]
+    for tid, nw in enumerate([1, 3, 2]):
+        for _ in range(nw):
+            shots = jnp.asarray(rng.normal(size=(2, V)).astype(np.float32))
+            bank = bank_add_class(bank, tid, shots)
+            stores[tid] = pn.store_add_class(stores[tid], shots)
+    w, b = bank_fc(bank)
+    for tid in range(3):
+        ws, bs = pn.store_fc(stores[tid])
+        np.testing.assert_array_equal(np.asarray(w[tid]), np.asarray(ws))
+        np.testing.assert_array_equal(np.asarray(b[tid]), np.asarray(bs))
+        sv = bank_store(bank, tid)
+        np.testing.assert_array_equal(np.asarray(sv.s_sums),
+                                      np.asarray(stores[tid].s_sums))
+
+
+def test_pn_logits_banked_gathers_per_row():
+    V, W = 6, 3
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.normal(size=(2, W, V)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(2, W)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(4, V)).astype(np.float32))
+    ids = jnp.asarray([0, 1, 1, 0])
+    out = pn.pn_logits_banked(x, w, b, ids)
+    for i, tid in enumerate([0, 1, 1, 0]):
+        np.testing.assert_allclose(
+            np.asarray(out[i]),
+            np.asarray(pn.pn_logits(x[i:i + 1], w[tid], b[tid])[0]),
+            rtol=1e-6)
+
+
+def test_mid_stream_enrollment_isolated():
+    """A tenant enrolled mid-stream classifies with its own prototypes;
+    a neighbor tenant's outputs are bit-unchanged by the enrollment."""
+    cfg, bundle, params, bn = _setup()
+    T = 16
+    rng = np.random.default_rng(8)
+    xa = rng.normal(size=(T, 2)).astype(np.float32)
+    xb = rng.normal(size=(T, 2)).astype(np.float32)
+    shots_a = rng.normal(size=(3, 12, 2)).astype(np.float32)
+    shots_a2 = rng.normal(size=(2, 12, 2)).astype(np.float32)
+    shots_b = rng.normal(size=(2, 12, 2)).astype(np.float32)
+
+    def run(enroll):
+        svc = StreamSessionService(bundle, params, bn, n_slots=4,
+                                   max_tenants=4, max_ways=4)
+        sa = svc.open_session(tenant=None)
+        sb = svc.open_session(tenant=None)
+        svc.enroll_shots(sb, shots_b)
+        outs_b, outs_a = [], []
+        for t in range(T):
+            if enroll and t == 5:
+                svc.enroll_shots(sa, shots_a)
+            if enroll and t == 10:
+                svc.enroll_shots(sa, shots_a2)  # CL: append a second way live
+            r = svc.push_audio({sa: xa[t], sb: xb[t]})
+            outs_a.append(r[sa])
+            outs_b.append(r[sb])
+        return svc, sa, outs_a, outs_b
+
+    svc1, sa1, a1, b1 = run(enroll=False)
+    svc2, sa2, a2, b2 = run(enroll=True)
+
+    # neighbor unaffected, bit for bit
+    for t in range(T):
+        np.testing.assert_array_equal(b1[t]["emb"], b2[t]["emb"])
+        np.testing.assert_array_equal(b1[t]["tenant_logits"],
+                                      b2[t]["tenant_logits"])
+    # before enrollment sa has no personalized head; after, it classifies
+    # against its own growing way set
+    assert a2[4]["tenant_logits"] is None
+    assert a2[5]["tenant_logits"] is not None
+    assert np.isfinite(a2[9]["tenant_logits"][0])
+    assert not np.isfinite(a2[9]["tenant_logits"][1])  # way 1 not yet enrolled
+    assert np.isfinite(a2[10]["tenant_logits"][1])     # live CL append
+    assert svc2.poll(sa2)["n_ways"] == 2
+    # the personalized prediction equals the tenant's own store argmax
+    store = bank_store(svc2.bank, svc2.sessions[sa2].tenant)
+    expect = int(np.asarray(pn.store_classify(
+        store, jnp.asarray(a2[T - 1]["emb"][None])))[0])
+    assert a2[T - 1]["pred"] == expect
+
+
+def test_tenant_personalization_predicts_enrolled_keyword():
+    """End-to-end FSL sanity: after enrolling class prototypes through the
+    shared embedder, a query clip of an enrolled class is predicted as the
+    matching way."""
+    from repro.data import KeywordAudio
+    cfg = get_config("chameleon-tcn-kws").smoke()
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    bn = tcn_empty_state(cfg)
+    svc = StreamSessionService(bundle, params, bn, n_slots=2,
+                               max_tenants=2, max_ways=4)
+    audio = KeywordAudio(n_classes=4, seed=0)
+    sid = svc.open_session(tenant=None)
+    for cls in (0, 2):
+        clips = audio.mfcc(audio.sample(cls, 3, seed=10 + cls))
+        svc.enroll_shots(sid, clips)
+    q = audio.mfcc(audio.sample(0, 1, seed=99))[0]  # (63, 28)
+    for t in range(q.shape[0]):
+        res = svc.push_audio({sid: q[t]})[sid]
+    assert res["tenant_logits"].shape == (4,)
+    assert np.isfinite(res["tenant_logits"][:2]).all()
+    assert not np.isfinite(res["tenant_logits"][2:]).any()
+    assert res["pred"] in (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# scheduler policy
+# ---------------------------------------------------------------------------
+
+def test_scheduler_lru_eviction_order():
+    sched = SlotScheduler(2)
+    for sid in (1, 2):
+        sched.admit(sid)
+        sched.bind(sid)
+    sched.touch(1)  # 2 is now LRU
+    sched.admit(3)
+    slot, evicted = sched.bind(3)
+    assert evicted == 2 and sched.is_parked(2) and not sched.is_bound(2)
+    assert sched.is_bound(3)
+
+
+def test_scheduler_admission_control_and_release():
+    sched = SlotScheduler(2, max_sessions=3)
+    for sid in (1, 2, 3):
+        sched.admit(sid)
+    with pytest.raises(AdmissionError):
+        sched.admit(4)
+    sched.release(1)
+    sched.admit(4)  # capacity freed
+    assert sched.live_sessions == 3
+
+
+def test_scheduler_pinned_slots_not_evicted():
+    sched = SlotScheduler(1)
+    sched.admit(1)
+    sched.bind(1)
+    sched.admit(2)
+    with pytest.raises(CapacityError):
+        sched.bind(2, pinned={1})
+    slot, evicted = sched.bind(2)  # unpinned: 1 is evictable
+    assert evicted == 1
+
+
+def test_scheduler_slot_reuse_after_release():
+    sched = SlotScheduler(2)
+    sched.admit(1)
+    s1, _ = sched.bind(1)
+    sched.admit(2)
+    sched.bind(2)
+    sched.release(1)
+    sched.admit(3)
+    s3, evicted = sched.bind(3)
+    assert s3 == s1 and evicted is None
+
+
+def test_service_admission_error():
+    cfg, bundle, params, bn = _setup()
+    svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1,
+                               max_sessions=2)
+    svc.open_session()
+    svc.open_session()
+    with pytest.raises(AdmissionError):
+        svc.open_session()
+
+
+def test_dedicated_tenants_recycled():
+    """open(tenant=None)/close churn must not exhaust the tenant bank, and a
+    refused admission must not leak the tenant row it allocated."""
+    cfg, bundle, params, bn = _setup()
+    svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=2,
+                               max_sessions=2, max_ways=2)
+    for _ in range(5):  # > max_tenants iterations
+        sid = svc.open_session(tenant=None)
+        svc.enroll_shots(sid, np.zeros((1, 8, 2), np.float32))
+        svc.close(sid)
+    assert len(svc._free_tenants) == 2
+    assert int(svc._tenant_ways.sum()) == 0  # rows cleared on recycle
+    svc.open_session()
+    svc.open_session()
+    with pytest.raises(AdmissionError):
+        svc.open_session(tenant=None)
+    assert len(svc._free_tenants) == 2  # no leak on refused admission
+    with pytest.raises(AdmissionError):
+        svc.open_session(tenant=1)  # explicit claim must roll back too
+    assert len(svc._free_tenants) == 2
+
+
+def test_dedicated_tenant_freed_after_sharer_closes():
+    """Ownership of a dedicated tenant row passes to a sharing session, so
+    the row is freed whichever session closes last."""
+    cfg, bundle, params, bn = _setup()
+    svc = StreamSessionService(bundle, params, bn, n_slots=4, max_tenants=2)
+    s1 = svc.open_session(tenant=None)
+    tid = svc.sessions[s1].tenant
+    s2 = svc.open_session(tenant=tid)  # shares the dedicated row
+    svc.close(s1)
+    assert tid not in svc._free_tenants  # sharer still using it
+    svc.close(s2)
+    assert tid in svc._free_tenants  # freed by the last sharer
+
+
+def test_enroll_refine_rejects_unenrolled_way():
+    cfg, bundle, params, bn = _setup()
+    svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1,
+                               max_ways=4)
+    sid = svc.open_session(tenant=None)
+    svc.enroll_shots(sid, np.zeros((1, 8, 2), np.float32))
+    with pytest.raises(ValueError):
+        svc.enroll_shots(sid, np.zeros((1, 8, 2), np.float32), way=3)
+    svc.enroll_shots(sid, np.zeros((1, 8, 2), np.float32), way=0)  # valid
