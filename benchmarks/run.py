@@ -13,8 +13,8 @@ SUITES = [
     ("activation_memory", "Fig 9b: FIFO vs ping-pong/triple buffers"),
     ("kws_efficiency", "Fig 11/12 + Table II: dual-mode PE array model"),
     ("kernel_bench", "kernels: packed-log2 byte savings"),
-    ("session_throughput", "multi-tenant sessions: 64-way batched step, "
-                           "p50/p99 latency, park/resume"),
+    ("session_throughput", "multi-tenant sessions: chunked scan sweep "
+                           "(T_chunk 1/16/160), p50/p99 latency, park/resume"),
     ("fsl_accuracy", "Table I: FSL accuracy (synthetic-Omniglot)"),
     ("cl_curve", "Fig 15: continual-learning curve"),
     ("roofline", "dry-run roofline terms (EXPERIMENTS §Roofline)"),

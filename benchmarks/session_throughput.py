@@ -1,51 +1,141 @@
-"""Multi-tenant streaming session subsystem: throughput, tail latency, and
-park/resume cost over one fixed compiled slot grid.
+"""Multi-tenant streaming session subsystem: throughput, tail latency,
+chunked-dispatch amortization, and park/resume cost over one fixed
+compiled slot grid.
 
 Demonstrates the subsystem's contract at serving scale:
   * >=64 concurrent sessions advance through ONE jitted batched call/tick;
+  * chunk sweep (T_chunk in {1, 16, 160}): samples/sec/session as the
+    host<->device dispatch cost is amortized over lax.scan time chunks —
+    the per-sample baseline pays one dispatch per sample, T_chunk=160 pays
+    one per 160 (the 16 kHz raw-audio serving wall is dispatch, not math);
+  * grid_scan at T_chunk=160 is asserted bit-exact vs 160 sequential
+    grid_step calls (not just reported);
   * p50/p99 per-tick step latency and aggregate sessions x samples/s;
   * evicting a session to the host parking lot and resuming it later is
     bit-identical to an uninterrupted run (asserted, not just reported);
   * pack/unpack cost and per-session parked-state bytes (the O(R) claim).
+
+Emits ``BENCH_session_throughput.json`` next to the cwd so CI can track
+the samples/sec trajectory per chunk size.  ``--smoke`` shrinks the grid
+for CI runtime; the asserted properties are identical.
+
+    PYTHONPATH=src python -m benchmarks.session_throughput [--smoke]
 """
 
+import argparse
+import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config
 from repro.models import build_bundle
 from repro.models.tcn import tcn_empty_state
-from repro.sessions import StreamSessionService
+from repro.sessions import (
+    StreamSessionService,
+    grid_init,
+    grid_scan,
+    grid_step,
+    lengths_to_valid,
+)
 
 N_SLOTS = 64
 TICKS = 40
+CHUNK_SWEEP = (1, 16, 160)
+SWEEP_SAMPLES = 320  # samples/session per sweep point (divisible by all)
 
 
-def _service(bundle, params, bn, **kw):
-    return StreamSessionService(bundle, params, bn, n_slots=N_SLOTS,
+def _service(bundle, params, bn, *, n_slots, **kw):
+    return StreamSessionService(bundle, params, bn, n_slots=n_slots,
                                 max_tenants=8, max_ways=4, **kw)
 
 
-def run():
+def _chunk_sweep(cfg, bundle, params, bn, *, n_slots, n_samples):
+    """samples/sec/session at each compiled chunk size (same total work)."""
+    rng = np.random.default_rng(1)
+    out = {}
+    for t_chunk in CHUNK_SWEEP:
+        svc = _service(bundle, params, bn, n_slots=n_slots, t_chunk=t_chunk)
+        sids = [svc.open_session() for _ in range(n_slots)]
+        x = rng.normal(size=(n_slots, t_chunk, cfg.tcn_in_channels)
+                       ).astype(np.float32)
+        chunk = {sid: x[i] if t_chunk > 1 else x[i, 0]
+                 for i, sid in enumerate(sids)}
+        svc.push_audio(chunk)  # compile
+        ticks = max(n_samples // t_chunk, 1)
+        t0 = time.perf_counter()
+        for _ in range(ticks):
+            svc.push_audio(chunk)
+        dt = time.perf_counter() - t0
+        rate = ticks * t_chunk / dt  # samples/sec/session
+        out[t_chunk] = {"samples_per_sec_per_session": rate,
+                        "dispatches": svc.dispatches - 1,
+                        "us_per_tick": dt / ticks * 1e6}
+        emit(f"sessions/chunk_T{t_chunk}", dt / ticks * 1e6,
+             f"{rate:.0f} samples/s/session over {n_slots} sessions")
+    speedup = (out[160]["samples_per_sec_per_session"]
+               / out[1]["samples_per_sec_per_session"])
+    emit("sessions/chunk_speedup_160v1", 0.0, f"{speedup:.1f}x")
+    assert speedup >= 5.0, (
+        f"chunked dispatch amortization regressed: T_chunk=160 is only "
+        f"{speedup:.1f}x the per-sample baseline (contract: >=5x)")
+    return out, speedup
+
+
+def _assert_scan_matches_steps(cfg, bundle, params, bn, *, n_slots):
+    """grid_scan over a 160-sample chunk == 160 sequential grid_step calls,
+    bit for bit (ragged: half the slots stop at 87 samples)."""
+    T = 160
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(n_slots, T, cfg.tcn_in_channels)).astype(np.float32)
+    lens = np.where(np.arange(n_slots) % 2 == 0, T, 87)
+    states_a = grid_init(cfg, n_slots)
+    # params/bn as jit ARGUMENTS: the cross-program exactness discipline
+    states_a, emb_a, _ = jax.jit(
+        lambda p, b, s, xx, v: grid_scan(p, b, cfg, s, xx, v))(
+            params, bn, states_a, jnp.asarray(x), lengths_to_valid(lens, T))
+    states_b = grid_init(cfg, n_slots)
+    gstep = jax.jit(lambda p, b, s, xx, a: grid_step(p, b, cfg, s, xx, a))
+    emb_b = np.zeros((n_slots, T, cfg.embed_dim), np.float32)
+    for t in range(T):
+        states_b, e, _ = gstep(params, bn, states_b, jnp.asarray(x[:, t]),
+                               jnp.asarray(t < lens))
+        emb_b[:, t] = np.asarray(e)
+    emb_a = np.asarray(emb_a)
+    for i in range(n_slots):
+        assert np.array_equal(emb_a[i, :lens[i]], emb_b[i, :lens[i]]), \
+            f"grid_scan diverged from sequential grid_step at slot {i}"
+    for a, b in zip(jax.tree.leaves(states_a), jax.tree.leaves(states_b)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "grid_scan end state diverged from sequential grid_step"
+    emit("sessions/scan_bit_exact_T160", 0.0,
+         f"ragged {n_slots}-slot scan == 160 sequential steps")
+
+
+def run(smoke: bool = False):
+    n_slots = 16 if smoke else N_SLOTS
+    ticks = 10 if smoke else TICKS
+    n_samples = 160 if smoke else SWEEP_SAMPLES
     cfg = get_config("chameleon-tcn-kws").smoke()
     bundle = build_bundle(cfg)
     params = bundle.init(jax.random.key(0))
     bn = tcn_empty_state(cfg)
     rng = np.random.default_rng(0)
-    x = rng.normal(size=(N_SLOTS, TICKS + 8, cfg.tcn_in_channels)).astype(np.float32)
+    x = rng.normal(size=(n_slots, ticks + 8, cfg.tcn_in_channels)
+                   ).astype(np.float32)
 
-    # -- steady-state: 64 sessions, one batched call per tick ---------------
-    svc = _service(bundle, params, bn)
-    # 60 anonymous streams + 4 personalized tenants (the FSL/CL path)
-    sids = [svc.open_session() for _ in range(N_SLOTS - 4)]
+    # -- steady-state: one batched per-sample call per tick (T=1 path) ------
+    svc = _service(bundle, params, bn, n_slots=n_slots)
+    # anonymous streams + 4 personalized tenants (the FSL/CL path)
+    sids = [svc.open_session() for _ in range(n_slots - 4)]
     sids += [svc.open_session(tenant=None) for _ in range(4)]
     shots = rng.normal(size=(3, 12, cfg.tcn_in_channels)).astype(np.float32)
     svc.push_audio({sid: x[i, 0] for i, sid in enumerate(sids)})  # compile
     lat = []
-    for t in range(1, TICKS + 1):
+    for t in range(1, ticks + 1):
         if t == 5:  # tenants enroll keywords mid-stream, streams stay live
             for sid in sids[-4:]:
                 svc.enroll_shots(sid, shots)
@@ -55,9 +145,15 @@ def run():
     lat = np.sort(np.asarray(lat))
     p50 = float(np.percentile(lat, 50))
     p99 = float(np.percentile(lat, 99))
-    rate = N_SLOTS / (lat.mean() * 1e-6)
-    emit("sessions/steady_64", lat.mean(),
+    rate = n_slots / (lat.mean() * 1e-6)
+    emit(f"sessions/steady_{n_slots}", lat.mean(),
          f"{rate:.0f} sessions*samples/s p50={p50:.0f}us p99={p99:.0f}us")
+
+    # -- chunked dispatch amortization (the tentpole metric) ----------------
+    sweep, speedup = _chunk_sweep(cfg, bundle, params, bn,
+                                  n_slots=n_slots, n_samples=n_samples)
+    _assert_scan_matches_steps(cfg, bundle, params, bn,
+                               n_slots=4 if smoke else 8)
 
     # -- park / resume cost -------------------------------------------------
     st = svc.stats()
@@ -66,36 +162,57 @@ def run():
     svc.park(victim)
     park_us = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
-    svc.push_audio({victim: x[0, TICKS + 1]})
+    svc.push_audio({victim: x[0, ticks + 1]})
     resume_us = (time.perf_counter() - t0) * 1e6
     emit("sessions/park", park_us, f"parked_state={st['slot_state_bytes']}B")
     emit("sessions/resume_push", resume_us, "unpack+step")
 
-    # -- evict -> park -> resume is bit-identical ---------------------------
+    # -- evict -> park -> resume is bit-identical (chunked pushes) ----------
     xa = x[0]
-    control = _service(bundle, params, bn)
+    control = _service(bundle, params, bn, n_slots=n_slots)
     c = control.open_session()
-    control_out = [control.push_audio({c: xa[t]})[c] for t in range(30)]
+    control_out = control.push_audio({c: xa[:30]})[c]
 
-    svc2 = _service(bundle, params, bn, max_sessions=N_SLOTS + 8)
-    others = [svc2.open_session() for _ in range(N_SLOTS - 1)]
+    svc2 = _service(bundle, params, bn, n_slots=n_slots,
+                    max_sessions=n_slots + 8)
+    others = [svc2.open_session() for _ in range(n_slots - 1)]
     a = svc2.open_session()
-    out = [svc2.push_audio({a: xa[t], **{s: x[j + 1, t] for j, s in
-                                         enumerate(others)}})[a]
-           for t in range(15)]
+    out = svc2.push_audio({a: xa[:15], **{s: x[j + 1, :15] for j, s in
+                                          enumerate(others)}})[a]
     # opening one more session must evict the LRU idle session == a
-    for t in range(3):
-        svc2.push_audio({s: x[j + 1, 15 + t] for j, s in enumerate(others)})
+    svc2.push_audio({s: x[j + 1, 15:18] for j, s in enumerate(others)})
     extra = svc2.open_session()
     assert svc2.poll(a)["state"] == "parked", "expected LRU eviction of idle session"
-    svc2.push_audio({extra: x[0, TICKS]})
+    svc2.push_audio({extra: x[0, ticks]})
     svc2.close(extra)
-    for t in range(15, 30):  # resume mid-stream (different slot is fine)
-        out.append(svc2.push_audio({a: xa[t]})[a])
-    exact = all(
-        np.array_equal(out[t]["emb"], control_out[t]["emb"])
-        and np.array_equal(out[t]["logits"], control_out[t]["logits"])
-        for t in range(30))
+    tail = svc2.push_audio({a: xa[15:30]})[a]  # resume mid-stream, new slot ok
+    emb = np.concatenate([out["emb"], tail["emb"]])
+    logits = np.concatenate([out["logits"], tail["logits"]])
+    exact = (np.array_equal(emb, control_out["emb"])
+             and np.array_equal(logits, control_out["logits"]))
     assert exact, "park/resume must be bit-identical to the uninterrupted run"
     emit("sessions/park_resume_exact", 0.0,
          f"bit_identical=True evictions={svc2.stats()['evictions']}")
+
+    with open("BENCH_session_throughput.json", "w") as f:
+        json.dump({
+            "config": cfg.name, "smoke": smoke, "n_slots": n_slots,
+            "steady_p50_us": p50, "steady_p99_us": p99,
+            "chunk_sweep": {str(k): v for k, v in sweep.items()},
+            "speedup_160_vs_1": speedup,
+            "parked_state_bytes": st["slot_state_bytes"],
+        }, f, indent=2)
+    print("# wrote BENCH_session_throughput.json", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid for CI (same asserted properties)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,10 +19,13 @@ from repro.sessions import StreamSessionService
 
 
 def stream_clip(svc, sid, frames):
-    res = None
-    for t in range(frames.shape[0]):
-        res = svc.push_audio({sid: frames[t]})[sid]
-    return res
+    """Push a whole (T, C_in) clip as ONE ragged chunk (ceil(T / t_chunk)
+    jitted dispatches) and return the end-of-chunk view of the result."""
+    res = svc.push_audio({sid: frames})[sid]
+    tl = res["tenant_logits"]
+    return {"pred": res["pred"], "step": res["step"],
+            "emb": res["emb"][-1], "logits": res["logits"][-1],
+            "tenant_logits": None if tl is None else tl[-1]}
 
 
 def main():
@@ -58,8 +61,7 @@ def main():
 
     print("== slot pressure: 6 more sessions on a 4-slot grid ==")
     burst = [svc.open_session() for _ in range(6)]
-    for t in range(10):
-        svc.push_audio({sid: qa[t] for sid in burst[:4]})
+    svc.push_audio({sid: qa[:10] for sid in burst[:4]})  # one chunked tick
     print(f"   stats: {svc.stats()}")
     print(f"   alice is {svc.poll(alice)['state']} (evicted to the parking lot)")
     ra2 = svc.push_audio({alice: qa[0]})[alice]  # resumes bit-exactly

@@ -138,6 +138,72 @@ def gc_checkpoints(ckpt_dir: str, keep: int = 3):
         shutil.rmtree(path, ignore_errors=True)
 
 
+# ---------------------------------------------------------------------------
+# Session parking-lot persistence (sessions/service.StreamSessionService)
+# ---------------------------------------------------------------------------
+#
+# A parking lot is {sid: parked pytree of np arrays} — nested dicts whose
+# leaves may be raw fp32 rings or nibble-packed {"u4c": uint8, "scale": f32}
+# records (sessions/state.pack_slot).  One .npz with "/"-joined path keys
+# holds the whole lot; a "__meta__" JSON blob carries the service-side
+# session/tenant bookkeeping.  Written atomically (tmp + os.replace), same
+# crash guarantee as the model checkpoints above.
+
+_META_KEY = "__meta__"
+
+
+def _flatten_parking(parking: dict) -> dict:
+    flat = {}
+
+    def rec(prefix: str, obj):
+        if isinstance(obj, dict):
+            for k, v in obj.items():
+                rec(f"{prefix}/{k}", v)
+        else:
+            flat[prefix] = np.asarray(obj)
+
+    for sid, tree in parking.items():
+        rec(str(int(sid)), tree)
+    return flat
+
+
+def save_sessions(path: str, parking: dict, meta: dict | None = None) -> str:
+    """Atomically spill a session parking lot (+ optional metadata) to disk."""
+    flat = _flatten_parking(parking)
+    if meta is not None:
+        flat[_META_KEY] = np.frombuffer(
+            json.dumps(meta).encode(), dtype=np.uint8)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def load_sessions(path: str):
+    """Restore (parking, meta) written by ``save_sessions``.
+
+    Leaves come back as np arrays (0-d for scalars); nibble-packed leaves
+    keep their {"u4c", "scale"} record shape — sessions/state.unpack_slot
+    decodes either form, so the round trip is bit-identical."""
+    parking: dict[int, dict] = {}
+    meta = None
+    with np.load(path) as z:
+        for key in z.files:
+            if key == _META_KEY:
+                meta = json.loads(bytes(z[key]).decode())
+                continue
+            parts = key.split("/")
+            node = parking.setdefault(int(parts[0]), {})
+            for p in parts[1:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = z[key]
+    return parking, meta
+
+
 class AsyncCheckpointer:
     """Snapshot-on-call, serialize-in-background checkpoint writer."""
 

@@ -88,6 +88,43 @@ def stream_step_single(params, bn_state, cfg: ArchConfig, state: dict,
             emb[0], logits[0])
 
 
+def stream_scan_single(params, bn_state, cfg: ArchConfig, state: dict,
+                       x_chunk: jax.Array, valid: jax.Array, *,
+                       quantize: bool = False):
+    """Advance one session over a whole time chunk INSIDE jit.
+
+    x_chunk: (T, C_in); valid: (T,) bool.  Runs ``jax.lax.scan`` over the T
+    samples so a chunk costs ONE dispatch instead of T — the host<->device
+    round trip per 16 kHz sample is the serving wall, not the compute
+    (ReckOn makes the same amortization argument in hardware).
+
+    ``valid`` handles ragged per-session chunk lengths: steps with
+    valid=False leave the state bit-frozen (the same ``jnp.where``
+    discipline grid_step uses for inactive slots), so padding a short
+    chunk to the compiled T never perturbs the stream.  Outputs at invalid
+    steps are computed but meaningless — callers mask them.
+
+    Returns (new_state, embs (T, V), logits (T, n_classes)); step t of the
+    outputs is bit-exact vs a ``stream_step_single`` call at that step
+    (T=1 is exactly that special case; tests/test_streaming_chunk.py).
+
+    Bit-exactness across SEPARATELY JITTED programs (e.g. a T=160 scan vs
+    160 single steps) additionally requires params/bn_state to enter jit
+    as arguments, not closure constants — XLA constant-folds a captured
+    BN chain differently per program, reassociating the multiplies by one
+    ULP.  Runtime data is never reassociated.
+    """
+    def body(st, inp):
+        x_t, v = inp
+        stepped, emb, logits = stream_step_single(
+            params, bn_state, cfg, st, x_t, quantize=quantize)
+        st2 = jax.tree.map(lambda n, o: jnp.where(v, n, o), stepped, st)
+        return st2, (emb, logits)
+
+    new_state, (embs, logits) = jax.lax.scan(body, state, (x_chunk, valid))
+    return new_state, embs, logits
+
+
 def _taps(ring, x_t, t, dilation: int, k: int):
     """Collect the k conv taps for the current step: x_{t-(k-1-j)d}, j=0..k-1.
 

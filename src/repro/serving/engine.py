@@ -11,10 +11,11 @@ The dual-mode idea from the paper maps here to two engine presets:
 
 For the TCN architecture serving means *streaming*: ``TCNStreamServer`` is
 now a façade over ``sessions/service.StreamSessionService`` — one session
-per stream, all advanced by the service's single jitted batched step.  Use
-the service directly for multi-tenant personalization, park/resume, and
-session churn; this class keeps the historical push(x_t)->(emb, logits)
-surface for fixed lockstep stream grids.
+per stream, all advanced by the service's chunked ``grid_scan`` (a whole
+time chunk per jitted dispatch).  Use the service directly for multi-tenant
+personalization, park/resume, and session churn; this class keeps the
+historical push(x_t)->(emb, logits) surface for fixed lockstep stream
+grids and adds push_chunk(x (S, T, C)) as the amortized hot path.
 """
 
 from __future__ import annotations
@@ -146,16 +147,19 @@ class LMServer:
 
 class TCNStreamServer:
     """Real-time streaming classification (the paper's KWS deployment):
-    one jitted step advances all streams one sample; O(R) state per stream.
+    one jitted chunked scan advances all streams; O(R) state per stream.
 
     Thin client of StreamSessionService: n_streams lockstep sessions on an
-    n_streams-slot grid (no churn, no tenants — the historical surface)."""
+    n_streams-slot grid (no churn, no tenants — the historical surface).
+    ``push_chunk`` is the dispatch-amortized hot path (T samples per jitted
+    call); ``push`` keeps the per-sample surface as its T=1 special case."""
 
-    def __init__(self, bundle, params, bn_state, n_streams: int, quantize=False):
+    def __init__(self, bundle, params, bn_state, n_streams: int, quantize=False,
+                 t_chunk: int = 16):
         self.cfg = bundle.cfg
         self.service = StreamSessionService(
             bundle, params, bn_state, n_slots=n_streams, max_tenants=1,
-            max_ways=1, quantize=quantize)
+            max_ways=1, quantize=quantize, t_chunk=t_chunk)
         self.sids = [self.service.open_session() for _ in range(n_streams)]
 
     def push(self, x_t: np.ndarray):
@@ -165,3 +169,14 @@ class TCNStreamServer:
         emb = np.stack([res[sid]["emb"] for sid in self.sids])
         logits = np.stack([res[sid]["logits"] for sid in self.sids])
         return emb, logits
+
+    def push_chunk(self, x: np.ndarray):
+        """x: (n_streams, T, C_in) a time chunk per stream.  Returns
+        per-sample (embs (n_streams, T, V), logits (n_streams, T, n)) —
+        bit-exact vs T sequential push() calls, at a fraction of the
+        dispatches (ceil(T / t_chunk) jitted calls total)."""
+        res = self.service.push_audio(
+            {sid: x[i] for i, sid in enumerate(self.sids)})
+        embs = np.stack([res[sid]["emb"] for sid in self.sids])
+        logits = np.stack([res[sid]["logits"] for sid in self.sids])
+        return embs, logits

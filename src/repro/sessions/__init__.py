@@ -12,10 +12,16 @@ prototype classifiers + O(R) stream state) over a fixed compiled slot grid:
 from repro.sessions.scheduler import AdmissionError, CapacityError, SlotScheduler
 from repro.sessions.service import NO_TENANT, StreamSessionService
 from repro.sessions.state import (
+    decode_parked,
     grid_init,
+    grid_pspecs,
+    grid_scan,
     grid_step,
+    lengths_to_valid,
     pack_slot,
+    parked_bytes,
     reset_slot,
+    slot_park_bytes,
     slot_state_bytes,
     unpack_slot,
 )
@@ -26,6 +32,7 @@ from repro.sessions.tenancy import (
     bank_fc,
     bank_init,
     bank_pack_tenant,
+    bank_pspecs,
     bank_store,
     bank_unpack_tenant,
     bank_update_class,
@@ -34,9 +41,10 @@ from repro.sessions.tenancy import (
 __all__ = [
     "AdmissionError", "CapacityError", "SlotScheduler",
     "NO_TENANT", "StreamSessionService",
-    "grid_init", "grid_step", "pack_slot", "reset_slot", "slot_state_bytes",
-    "unpack_slot",
+    "decode_parked", "grid_init", "grid_pspecs", "grid_scan", "grid_step",
+    "lengths_to_valid", "pack_slot", "parked_bytes", "reset_slot",
+    "slot_park_bytes", "slot_state_bytes", "unpack_slot",
     "TenantBank", "bank_add_class", "bank_clear_tenant", "bank_fc",
-    "bank_init", "bank_pack_tenant", "bank_store", "bank_unpack_tenant",
-    "bank_update_class",
+    "bank_init", "bank_pack_tenant", "bank_pspecs", "bank_store",
+    "bank_unpack_tenant", "bank_update_class",
 ]

@@ -13,12 +13,20 @@ Policies:
   * placement — a free slot if any, else evict the least-recently-touched
     *idle* bound session (sessions being stepped this tick are pinned by
     the caller via ``touch``);
+  * cost-aware eviction — an optional ``cost_fn(sid) -> bytes`` callback
+    breaks staleness near-ties in favour of the cheapest-to-park session:
+    among candidates whose last_used clock is within ``stale_window`` of
+    the oldest (window 0 = exact LRU ties only), the minimum park cost
+    wins.  Parked-state bytes are uniform across fp32 sessions, but the
+    quantized service's nibble-packed parkings make them differ — this is
+    the policy hook that exploits that;
   * release — closing a session frees its slot for immediate reuse.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Callable
 
 
 class AdmissionError(RuntimeError):
@@ -33,6 +41,8 @@ class CapacityError(RuntimeError):
 class SlotScheduler:
     n_slots: int
     max_sessions: int | None = None  # None = unlimited live sessions
+    cost_fn: Callable[[int], float] | None = None  # sid -> park cost (bytes)
+    stale_window: int = 0  # staleness tolerance for cost-aware tie-breaks
 
     clock: int = 0
     slot_of: dict[int, int] = field(default_factory=dict)   # bound sid -> slot
@@ -85,7 +95,13 @@ class SlotScheduler:
             victims = [s for s in self.slot_of if s != sid and s not in pinned]
             if not victims:
                 raise CapacityError("all slots pinned; cannot place session")
-            evicted = min(victims, key=lambda s: self.last_used.get(s, 0))
+            lu = lambda s: self.last_used.get(s, 0)
+            if self.cost_fn is None:
+                evicted = min(victims, key=lu)
+            else:
+                oldest = min(lu(s) for s in victims)
+                pool = [s for s in victims if lu(s) - oldest <= self.stale_window]
+                evicted = min(pool, key=lambda s: (self.cost_fn(s), lu(s)))
             slot = self.slot_of.pop(evicted)
             del self.sid_of[slot]
             self.parked.add(evicted)

@@ -6,11 +6,28 @@ state per user — behind five verbs:
 
     open_session / push_audio / enroll_shots / poll / close
 
-All active sessions advance through ONE jitted batched call per tick over a
-fixed compiled shape (sessions/state.grid_step): admission, eviction to the
-host-side parking lot, slot reuse, and mid-stream tenant enrollment all
-happen without recompiling.  A parked session resumes bit-identically in
-any free slot because its entire stream position is its packed pytree.
+The hot path is *chunk-native*: ``push_audio`` takes ragged per-session
+time chunks {sid: (t_i, C_in)}, pads them onto the compiled (S, T_chunk)
+grid, and advances every pushed session through ``sessions/state.grid_scan``
+— a ``lax.scan`` over time inside ONE jitted dispatch, so a tick costs one
+host↔device round trip for S×T_chunk samples instead of S.  Ragged lengths
+become per-step validity masks, so short chunks and absent sessions stay
+bit-frozen.  A single (C_in,) sample is the T=1 special case and keeps the
+historical per-sample result surface.
+
+Admission, eviction to the host-side parking lot, slot reuse, and
+mid-stream tenant enrollment all happen without recompiling; chunk padding
+is bucketed to powers of two capped at T_chunk, so the number of compiled
+programs is bounded by log2(T_chunk)+1.  A parked session resumes
+bit-identically in any free slot because its entire stream position is its
+packed pytree; with ``quantize=True`` parkings are nibble-packed (~8x
+smaller, still bit-identical).  ``spill_parking``/``restore_parking``
+persist the lot through checkpoint/store so sessions survive restarts.
+
+Passing a ``mesh`` shards the slot grid over the mesh's ``data`` axis and
+the tenant banks over ``model`` (sessions/state.grid_pspecs,
+sessions/tenancy.bank_pspecs); on a 1-device mesh everything degenerates
+to replicated and behaviour is unchanged.
 
 Built for the TCN bundle (models/build.build_tcn_bundle); the LM slot grid
 in serving/engine.py shares the same SlotScheduler.
@@ -19,21 +36,23 @@ in serving/engine.py shares the same SlotScheduler.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.store import load_sessions, save_sessions
 from repro.core.protonet import pn_logits_banked
 from repro.models.tcn import tcn_empty_state
-from repro.sessions.scheduler import SlotScheduler
+from repro.sessions.scheduler import AdmissionError, SlotScheduler
 from repro.sessions.state import (
     grid_init,
-    grid_step,
+    grid_pspecs,
+    grid_scan,
     pack_slot,
     reset_slot,
-    slot_state_bytes,
+    slot_park_bytes,
     unpack_slot,
 )
 from repro.sessions.tenancy import (
@@ -41,6 +60,8 @@ from repro.sessions.tenancy import (
     bank_clear_tenant,
     bank_fc,
     bank_init,
+    bank_pspecs,
+    bank_unpack_tenant,
     bank_update_class,
 )
 
@@ -60,16 +81,32 @@ class StreamSessionService:
 
     def __init__(self, bundle, params, bn_state=None, *, n_slots: int = 8,
                  max_tenants: int = 8, max_ways: int = 8,
-                 max_sessions: int | None = None, quantize: bool = False):
+                 max_sessions: int | None = None, quantize: bool = False,
+                 t_chunk: int = 16, mesh=None,
+                 cost_fn: Callable[[int], float] | None = None,
+                 stale_window: int = 0):
         cfg = bundle.cfg
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_ways = max_ways
+        self.quantize = quantize
+        if t_chunk < 1:
+            raise ValueError(f"t_chunk must be >= 1, got {t_chunk}")
+        self.t_chunk = t_chunk
         bn_state = bn_state if bn_state is not None else tcn_empty_state(cfg)
 
         self.states = grid_init(cfg, n_slots)
         self.bank = bank_init(max_tenants, max_ways, cfg.embed_dim)
-        self.sched = SlotScheduler(n_slots, max_sessions)
+        if mesh is not None:  # shard slots over data, banks over model
+            from jax.sharding import NamedSharding
+            nd = lambda p: NamedSharding(mesh, p)
+            self.states = jax.device_put(
+                self.states, jax.tree.map(nd, grid_pspecs(cfg, mesh, n_slots)))
+            self.bank = jax.device_put(
+                self.bank, jax.tree.map(nd, bank_pspecs(self.bank, mesh)))
+        self.mesh = mesh
+        self.sched = SlotScheduler(n_slots, max_sessions, cost_fn=cost_fn,
+                                   stale_window=stale_window)
         self.parking: dict[int, dict] = {}        # sid -> host pytree
         self.sessions: dict[int, _Session] = {}
         self.tenant_of_slot = np.full(n_slots, NO_TENANT, np.int32)
@@ -77,14 +114,26 @@ class StreamSessionService:
         self._tenant_ways = np.zeros(max_tenants, np.int32)  # host mirror
         self._next_sid = 0
         self.evictions = 0
+        self.dispatches = 0  # jitted scan calls (the amortization metric)
 
-        def _step(states, x, active, bank, tenant_ids):
-            new_states, emb, logits = grid_step(
-                params, bn_state, cfg, states, x, active, quantize=quantize)
+        # params/bn enter the jitted scan as ARGUMENTS, not closure
+        # constants: XLA constant-folds closure BN chains differently per
+        # compiled chunk bucket, which would break the bit-exactness
+        # contract between the T=1 and T=t_chunk programs (runtime data is
+        # never reassociated; verified in tests/test_streaming_chunk.py).
+        self._params = params
+        self._bn = bn_state
+
+        def _scan(p, bn, states, x, valid, bank, tenant_ids):
+            new_states, emb, logits = grid_scan(
+                p, bn, cfg, states, x, valid, quantize=quantize)
             w, b = bank_fc(bank)
-            return new_states, emb, logits, pn_logits_banked(emb, w, b, tenant_ids)
+            s, t = x.shape[0], x.shape[1]
+            tl = pn_logits_banked(emb.reshape(s * t, emb.shape[-1]), w, b,
+                                  jnp.repeat(tenant_ids, t))
+            return new_states, emb, logits, tl.reshape(s, t, -1)
 
-        self._step = jax.jit(_step)
+        self._scan = jax.jit(_scan)
         # shot embedding for enrollment — the TCN bundle's embed_fn honours
         # the service's BN stats and quantize mode
         self._embed = jax.jit(lambda x: bundle.embed_fn(
@@ -131,10 +180,14 @@ class StreamSessionService:
         self._bind(sid)
         return sid
 
+    def _pack(self, slot: int) -> dict:
+        return pack_slot(self.states, slot, pack_u4=self.quantize,
+                         act_scale=self.cfg.act_scale)
+
     def _bind(self, sid: int, pinned: set[int] = frozenset()) -> int:
         slot, evicted = self.sched.bind(sid, pinned)
         if evicted is not None:
-            self.parking[evicted] = pack_slot(self.states, slot)
+            self.parking[evicted] = self._pack(slot)
             self.evictions += 1
         if sid in self.parking:
             self.states = unpack_slot(self.states, slot, self.parking.pop(sid))
@@ -149,7 +202,7 @@ class StreamSessionService:
         """Explicitly swap a session's stream state to host memory."""
         slot = self.sched.park(sid)
         if slot is not None:
-            self.parking[sid] = pack_slot(self.states, slot)
+            self.parking[sid] = self._pack(slot)
             self.tenant_of_slot[slot] = NO_TENANT
 
     def close(self, sid: int) -> None:
@@ -169,55 +222,178 @@ class StreamSessionService:
             else:
                 self.close_tenant(sess.tenant)
 
-    # -- the hot path -------------------------------------------------------
-    def push_audio(self, samples: dict[int, Any]) -> dict[int, dict]:
-        """Advance every session in ``samples`` one timestep.
+    # -- persistence --------------------------------------------------------
+    def spill_parking(self, path: str, *, include_bound: bool = False) -> str:
+        """Persist the parking lot (and each parked session's tenant row) to
+        disk through checkpoint/store, so sessions survive process restarts.
+        ``include_bound=True`` parks every bound session first — a full
+        drain for planned shutdown."""
+        if include_bound:
+            for sid in list(self.sched.slot_of):
+                self.park(sid)
+        sess_meta, tenant_meta = {}, {}
+        for sid in self.parking:
+            s = self.sessions[sid]
+            sess_meta[str(sid)] = {"tenant": s.tenant,
+                                   "dedicated": s.dedicated, "steps": s.steps}
+            if s.tenant != NO_TENANT:
+                tenant_meta[str(s.tenant)] = {
+                    "s_sums": np.asarray(self.bank.s_sums[s.tenant]).tolist(),
+                    "counts": np.asarray(self.bank.counts[s.tenant]).tolist(),
+                    "n_ways": int(self._tenant_ways[s.tenant]),
+                }
+        meta = {"next_sid": self._next_sid, "sessions": sess_meta,
+                "tenants": tenant_meta}
+        return save_sessions(path, self.parking, meta)
 
-        samples: {sid: (C_in,) sample}.  All pushed sessions step in ONE
-        jitted batched call; parked sessions are resumed first (possibly
-        evicting idle ones).  Returns {sid: {emb, logits, tenant_logits,
-        pred, step}}."""
-        if len(samples) > self.n_slots:
+    def restore_parking(self, path: str) -> list[int]:
+        """Adopt a spilled parking lot into this (possibly fresh) service:
+        sessions re-enter parked, with their sids, step counts, tenant
+        bindings, and prototype rows intact; the next push_audio resumes
+        them bit-identically.  Returns the restored sids.
+
+        All-or-nothing: every check (sid collisions, admission capacity,
+        tenant-row availability) runs BEFORE the first mutation, so a
+        refused restore leaves the service untouched."""
+        parking, meta = load_sessions(path)
+        meta = meta or {"next_sid": 0, "sessions": {}, "tenants": {}}
+        for sid in sorted(parking):
+            if sid in self.sessions:
+                raise ValueError(f"session {sid} already live; refuse to "
+                                 "overwrite on restore")
+        cap = self.sched.max_sessions
+        if cap is not None and self.sched.live_sessions + len(parking) > cap:
+            raise AdmissionError(
+                f"restoring {len(parking)} sessions would exceed capacity "
+                f"({self.sched.live_sessions}/{cap} live)")
+        for t_str in meta.get("tenants", {}):
+            t = int(t_str)
+            if t >= len(self._tenant_ways):
+                raise ValueError(f"spill references tenant {t} beyond "
+                                 f"max_tenants={len(self._tenant_ways)}")
+            if t not in self._free_tenants:
+                raise ValueError(f"tenant {t} already in use; refuse to "
+                                 "overwrite its prototype row on restore")
+        for t_str, row in meta.get("tenants", {}).items():
+            t = int(t_str)
+            self._free_tenants.remove(t)
+            self.bank = bank_unpack_tenant(self.bank, t, {
+                "s_sums": np.asarray(row["s_sums"], np.float32),
+                "counts": np.asarray(row["counts"], np.float32),
+                "n_ways": np.asarray(row["n_ways"], np.int32)})
+            self._tenant_ways[t] = int(row["n_ways"])
+        restored = []
+        for sid, parked in sorted(parking.items()):
+            info = meta["sessions"].get(str(sid), {})
+            self.sched.admit(sid)
+            self.sessions[sid] = _Session(
+                tenant=int(info.get("tenant", NO_TENANT)),
+                dedicated=bool(info.get("dedicated", False)),
+                steps=int(info.get("steps", 0)))
+            self.parking[sid] = parked
+            restored.append(sid)
+        self._next_sid = max(self._next_sid, int(meta.get("next_sid", 0)))
+        return restored
+
+    # -- the hot path -------------------------------------------------------
+    def _tick_len(self, remaining: int) -> int:
+        """Bucketed tick length: full T_chunk while enough samples remain,
+        else the next power of two — bounds compiled programs to
+        log2(T_chunk)+1 shapes instead of one per ragged length."""
+        if remaining >= self.t_chunk:
+            return self.t_chunk
+        n = 1
+        while n < remaining:
+            n <<= 1
+        return min(n, self.t_chunk)
+
+    def push_audio(self, chunks: dict[int, Any]) -> dict[int, dict]:
+        """Advance sessions by ragged time chunks.
+
+        chunks: {sid: x} where x is a (t_i, C_in) chunk or a single (C_in,)
+        sample (the T=1 special case).  All pushed sessions advance through
+        chunked ``grid_scan`` dispatches over the compiled (S, T_chunk)
+        grid; sessions absent from ``chunks`` (and the padded tail of short
+        chunks) stay bit-frozen.  Parked sessions are resumed first
+        (possibly evicting idle ones).
+
+        Returns {sid: result}.  For a (t_i, C_in) chunk the result carries
+        per-sample sequences — emb (t_i, V), logits (t_i, n),
+        tenant_logits (t_i, ways) | None — plus the end-of-chunk
+        classification ``pred`` and cumulative ``step``.  For a (C_in,)
+        sample the historical surface is kept: emb (V,), logits (n,)."""
+        if len(chunks) > self.n_slots:
             raise ValueError(
-                f"{len(samples)} sessions pushed but only {self.n_slots} slots; "
+                f"{len(chunks)} sessions pushed but only {self.n_slots} slots; "
                 "split the push or grow the grid")
-        pinned = set(samples)
-        for sid in samples:
+        c_in = self.cfg.tcn_in_channels
+        arrs, scalar = {}, {}
+        for sid, v in chunks.items():
+            a = np.asarray(v, np.float32)
+            scalar[sid] = a.ndim == 1
+            if a.ndim == 1:
+                a = a[None]
+            if a.ndim != 2 or a.shape[1] != c_in:
+                raise ValueError(
+                    f"session {sid}: expected (C_in,) or (t, C_in) with "
+                    f"C_in={c_in}, got shape {np.asarray(v).shape}")
+            if a.shape[0] == 0:
+                raise ValueError(f"session {sid}: empty chunk")
+            arrs[sid] = a
+        pinned = set(chunks)
+        for sid in chunks:
             if sid not in self.sessions:
                 raise KeyError(f"unknown session {sid}")
             self.sched.touch(sid)
             if not self.sched.is_bound(sid):
                 self._bind(sid, pinned)
 
-        x = np.zeros((self.n_slots, self.cfg.tcn_in_channels), np.float32)
-        active = np.zeros(self.n_slots, bool)
-        slot_of = {}
-        for sid, sample in samples.items():
-            slot = self.sched.slot_of[sid]
-            slot_of[sid] = slot
-            x[slot] = np.asarray(sample, np.float32).reshape(-1)
-            active[slot] = True
-
-        self.states, emb, logits, tlogits = self._step(
-            self.states, jnp.asarray(x), jnp.asarray(active), self.bank,
-            jnp.asarray(self.tenant_of_slot))
-        emb, logits, tlogits = (np.asarray(emb), np.asarray(logits),
-                                np.asarray(tlogits))
+        slot_of = {sid: self.sched.slot_of[sid] for sid in arrs}
+        lens = {sid: a.shape[0] for sid, a in arrs.items()}
+        max_len = max(lens.values())
+        pieces = {sid: [] for sid in arrs}  # per-tick (emb, logits, tl) slices
+        off = 0
+        while off < max_len:
+            t_pad = self._tick_len(max_len - off)
+            x = np.zeros((self.n_slots, t_pad, c_in), np.float32)
+            valid = np.zeros((self.n_slots, t_pad), bool)
+            for sid, a in arrs.items():
+                seg = a[off:off + t_pad]
+                if seg.shape[0]:
+                    x[slot_of[sid], :seg.shape[0]] = seg
+                    valid[slot_of[sid], :seg.shape[0]] = True
+            self.states, emb, logits, tlogits = self._scan(
+                self._params, self._bn, self.states, jnp.asarray(x),
+                jnp.asarray(valid), self.bank,
+                jnp.asarray(self.tenant_of_slot))
+            self.dispatches += 1
+            emb, logits, tlogits = (np.asarray(emb), np.asarray(logits),
+                                    np.asarray(tlogits))
+            for sid in arrs:
+                n = min(max(lens[sid] - off, 0), t_pad)
+                if n:
+                    s = slot_of[sid]
+                    pieces[sid].append(
+                        (emb[s, :n], logits[s, :n], tlogits[s, :n]))
+            off += t_pad
 
         out = {}
-        for sid, slot in slot_of.items():
+        for sid in arrs:
             sess = self.sessions[sid]
-            sess.steps += 1
+            sess.steps += lens[sid]
+            e, l, tl = (np.concatenate([p[i] for p in pieces[sid]])
+                        for i in range(3))
             personalized = (sess.tenant != NO_TENANT
                             and self._tenant_ways[sess.tenant] > 0)
-            res = {
-                "emb": emb[slot],
-                "logits": logits[slot],
-                "tenant_logits": tlogits[slot] if personalized else None,
-                "pred": int(tlogits[slot].argmax()) if personalized
-                        else int(logits[slot].argmax()),
-                "step": sess.steps,
-            }
+            head = tl if personalized else l
+            if scalar[sid]:
+                res = {"emb": e[-1], "logits": l[-1],
+                       "tenant_logits": tl[-1] if personalized else None,
+                       "pred": int(head[-1].argmax()), "step": sess.steps}
+            else:
+                res = {"emb": e, "logits": l,
+                       "tenant_logits": tl if personalized else None,
+                       "pred": int(head[-1].argmax()), "step": sess.steps}
             sess.last = res
             out[sid] = res
         return out
@@ -264,9 +440,15 @@ class StreamSessionService:
     def stats(self) -> dict:
         return {
             "n_slots": self.n_slots,
+            "t_chunk": self.t_chunk,
             "bound": len(self.sched.slot_of),
             "parked": len(self.parking),
             "live_sessions": self.sched.live_sessions,
             "evictions": self.evictions,
-            "slot_state_bytes": slot_state_bytes(self.states),
+            "dispatches": self.dispatches,
+            # parked footprint: what one session costs in the parking lot
+            # (nibble-packed when the service runs quantize=True).
+            # Structural, not content-dependent — stable for CI tracking.
+            "slot_state_bytes": slot_park_bytes(self.cfg,
+                                                quantize=self.quantize),
         }

@@ -7,15 +7,32 @@ advances every slot in a single jitted call — the batched math is identical
 to ``stream_step`` but each slot keeps its OWN step counter, so sessions
 admitted at different wall-clock times stay phase-correct.
 
-Inactive slots are *bit-frozen*: the vmapped step still computes them (the
-compiled shape is fixed — that is the whole point, no recompiles as sessions
-come and go), but a ``jnp.where`` on the active mask discards their writes,
-so a parked/free slot's state is exactly the state at its last active step.
+``grid_scan`` is the chunk-native hot path: ``vmap(stream_scan_single)``
+runs a ``lax.scan`` over a whole (S, T, C_in) time chunk inside ONE jitted
+dispatch — S×T samples per host↔device round trip instead of S.  Ragged
+per-slot chunk lengths become a (S, T) validity mask (``lengths_to_valid``)
+so short chunks pad to the compiled T without perturbing any stream.
+
+Inactive slots / invalid steps are *bit-frozen*: the vmapped step still
+computes them (the compiled shape is fixed — that is the whole point, no
+recompiles as sessions come and go), but a ``jnp.where`` on the mask
+discards their writes, so a parked/free slot's state is exactly the state
+at its last active step.
 
 ``pack_slot``/``unpack_slot`` move one slot's column of the SoA to/from host
 memory (numpy) — the parking lot for evicted sessions.  Because a session's
 state is position-independent (no leaf encodes the slot index), a parked
-session can resume in ANY free slot bit-identically.
+session can resume in ANY free slot bit-identically.  With ``pack_u4=True``
+ring leaves that sit exactly on the u4 fake-quant grid (the quantized
+service's case) are stored as packed nibbles — ~8x fewer parking-lot bytes,
+still bit-identical on resume (exactness is *verified per leaf* at pack
+time; non-representable leaves, e.g. block 0's raw-input ring, stay fp32).
+
+``grid_pspecs`` shards the slot axis over the mesh's ``data`` axis through
+the same logical-axis rules table the rest of the codebase uses
+(sharding/rules: "slots" -> "data", "tenants" -> "model"), so one service
+spans a mesh without recompiles; on a 1-device mesh everything degenerates
+to replicated and the service runs unchanged.
 """
 
 from __future__ import annotations
@@ -24,8 +41,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.streaming import stream_init_single, stream_step_single
+from repro.core.streaming import (
+    stream_init_single,
+    stream_scan_single,
+    stream_step_single,
+)
 from repro.models.config import ArchConfig
+from repro.sharding.rules import DEFAULT_RULES, pspec_sized, resolve_rules
 
 
 def grid_init(cfg: ArchConfig, n_slots: int, dtype=jnp.float32) -> dict:
@@ -51,16 +73,122 @@ def grid_step(params, bn_state, cfg: ArchConfig, states: dict, x: jax.Array,
     return jax.tree.map(keep, stepped, states), emb, logits
 
 
-def pack_slot(states: dict, slot: int) -> dict:
-    """Copy one slot's session state to host memory (the parking lot)."""
-    return jax.tree.map(lambda a: np.asarray(a[slot]), states)
+def lengths_to_valid(lengths, t_chunk: int) -> jax.Array:
+    """Per-slot chunk lengths (S,) -> (S, T) step-validity mask."""
+    return jnp.arange(t_chunk)[None, :] < jnp.asarray(lengths)[:, None]
+
+
+def grid_scan(params, bn_state, cfg: ArchConfig, states: dict, x: jax.Array,
+              valid: jax.Array, *, quantize: bool = False):
+    """Advance all S slots over a T-sample chunk in ONE dispatch.
+
+    x: (S, T, C_in); valid: (S, T) bool (``lengths_to_valid`` of the ragged
+    per-slot lengths).  Returns (new_states, embs (S, T, V), logits
+    (S, T, n_classes)).
+
+    Bit-exactness contract: step t of a slot whose valid[s, :t+1] is all
+    True matches the t-th of T sequential ``grid_step`` calls exactly
+    (the scan body IS the vmapped single step; invalid steps freeze state
+    through the same ``jnp.where`` discipline).  T=1 with valid=active
+    recovers ``grid_step``.  When jitting, pass params/bn_state as jit
+    ARGUMENTS (see stream_scan_single) so the contract holds across
+    separately compiled chunk sizes."""
+    scan1 = lambda st, xc, vc: stream_scan_single(
+        params, bn_state, cfg, st, xc, vc, quantize=quantize)
+    return jax.vmap(scan1)(states, x, valid)
+
+
+def grid_pspecs(cfg: ArchConfig, mesh, n_slots: int, rules: dict | None = None):
+    """PartitionSpec tree for the slot grid: the leading slot axis goes to
+    the mesh axis the "slots" logical rule names (``data`` by default); all
+    per-session dims stay replicated.  Divisibility-gated (pspec_sized):
+    a grid that doesn't divide the data axis falls back to replicated, so
+    the same service construction works on ANY mesh, including 1 device."""
+    rules = resolve_rules(DEFAULT_RULES if rules is None else rules, mesh)
+    one = jax.eval_shape(lambda: stream_init_single(cfg))
+
+    def spec(leaf):
+        shape = (n_slots,) + leaf.shape
+        axes = ("slots",) + (None,) * leaf.ndim
+        return pspec_sized(axes, rules, shape, mesh)
+
+    return jax.tree.map(spec, one)
+
+
+# ---------------------------------------------------------------------------
+# Parking lot: host-side pack/unpack of one slot's column
+# ---------------------------------------------------------------------------
+
+_U4_KEY = "u4c"
+
+
+def _is_packed(x) -> bool:
+    return isinstance(x, dict) and _U4_KEY in x
+
+
+def _pack_leaf_u4(a: np.ndarray, act_scale: float):
+    """Pack one host leaf to nibbles IFF that is exactly invertible.
+
+    The quantized service's ring contents are fake-quant u4 activations —
+    values on the grid {0, s, 2s, ..., 15s} — so round(a/s) recovers the
+    4-bit codes and ``codes * s`` rebuilds the identical fp32 bits.  The
+    reconstruction is *checked here*; any leaf off the grid (block 0's
+    ring1 holds the raw unquantized input) is left as-is, keeping
+    park/resume unconditionally bit-identical."""
+    a = np.asarray(a)
+    if a.ndim < 1 or a.shape[-1] % 2 != 0 or a.dtype != np.float32:
+        return None
+    s = np.float32(act_scale)
+    q = np.round(a / s)
+    if not ((q >= 0) & (q <= 15)).all():
+        return None
+    if not np.array_equal(q.astype(np.float32) * s, a):
+        return None
+    u = q.astype(np.uint8)
+    return {_U4_KEY: (u[..., 0::2] | (u[..., 1::2] << 4)).astype(np.uint8),
+            "scale": s}
+
+
+def _unpack_leaf(p) -> np.ndarray:
+    if not _is_packed(p):
+        return np.asarray(p)
+    packed = np.asarray(p[_U4_KEY])
+    s = np.float32(p["scale"])
+    lo = packed & 0xF
+    hi = packed >> 4
+    q = np.stack([lo, hi], axis=-1).reshape(
+        *packed.shape[:-1], packed.shape[-1] * 2)
+    return q.astype(np.float32) * s
+
+
+def pack_slot(states: dict, slot: int, *, pack_u4: bool = False,
+              act_scale: float = 0.25) -> dict:
+    """Copy one slot's session state to host memory (the parking lot).
+
+    pack_u4=True additionally stores u4-grid ring leaves as packed nibbles
+    (2 codes/byte) — the quantized service's ~8x parking-lot compression."""
+    parked = jax.tree.map(lambda a: np.asarray(a[slot]), states)
+    if not pack_u4:
+        return parked
+
+    def enc(a):
+        p = _pack_leaf_u4(a, act_scale)
+        return a if p is None else p
+
+    return {"t": parked["t"], "blocks": jax.tree.map(enc, parked["blocks"])}
+
+
+def decode_parked(parked: dict) -> dict:
+    """Plain fp32-array view of a parked pytree (nibble leaves expanded)."""
+    return jax.tree.map(_unpack_leaf, parked, is_leaf=_is_packed)
 
 
 def unpack_slot(states: dict, slot: int, parked: dict) -> dict:
     """Restore a parked session into ``slot`` (any free slot works — state
-    is slot-position independent)."""
+    is slot-position independent).  Accepts raw or nibble-packed parkings."""
     return jax.tree.map(
-        lambda a, p: a.at[slot].set(jnp.asarray(p, a.dtype)), states, parked)
+        lambda a, p: a.at[slot].set(jnp.asarray(p, a.dtype)),
+        states, decode_parked(parked))
 
 
 def reset_slot(states: dict, slot: int) -> dict:
@@ -69,8 +197,31 @@ def reset_slot(states: dict, slot: int) -> dict:
                         states)
 
 
+def parked_bytes(parked: dict) -> int:
+    """Host bytes of one parked session (packed leaves count packed)."""
+    return int(sum(np.asarray(a).nbytes for a in jax.tree.leaves(parked)))
+
+
 def slot_state_bytes(states: dict) -> int:
     """Per-slot parked-state footprint in bytes (host copy of one column)."""
     n_slots = jax.tree.leaves(states)[0].shape[0]
     total = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(states))
     return total // n_slots
+
+
+def slot_park_bytes(cfg: ArchConfig, *, quantize: bool = False) -> int:
+    """STRUCTURAL parked footprint of one session — content-independent,
+    so it is a stable metric (the actual ``parked_bytes`` of a given
+    parking can only be <= this: packing is decided per leaf at pack time
+    and an off-grid leaf stays fp32).  Under ``quantize=True`` every ring
+    that carries fake-quant u4 activations nibble-packs (n * c/2 bytes
+    + a 4-byte scale); block 0's ring1 holds the RAW input and never
+    packs, nor does any odd-channel ring; the step counter is int32."""
+    from repro.core.streaming import ring_sizes
+    total = 4  # t (int32)
+    for i, rs in enumerate(ring_sizes(cfg).values()):
+        for ring, (n, c) in rs.items():
+            packable = (quantize and c % 2 == 0
+                        and not (i == 0 and ring == "ring1"))
+            total += n * (c // 2) + 4 if packable else n * c * 4
+    return total

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.protonet import PrototypeStore, store_fc
+from repro.sharding.rules import DEFAULT_RULES, pspec_sized, resolve_rules
 
 
 class TenantBank(NamedTuple):
@@ -37,6 +38,21 @@ def bank_init(max_tenants: int, max_ways: int, dim: int) -> TenantBank:
         counts=jnp.zeros((max_tenants, max_ways), jnp.float32),
         n_ways=jnp.zeros((max_tenants,), jnp.int32),
     )
+
+
+def bank_pspecs(bank: TenantBank, mesh, rules: dict | None = None) -> TenantBank:
+    """PartitionSpec tree for a TenantBank: the leading tenant axis goes to
+    the mesh axis the "tenants" logical rule names (``model`` by default,
+    matching the psum path protonet documents for the distributed segment
+    sum); ways/embedding dims stay replicated.  Divisibility-gated, so a
+    bank that doesn't divide the model axis replicates instead of failing."""
+    rules = resolve_rules(DEFAULT_RULES if rules is None else rules, mesh)
+
+    def spec(leaf):
+        axes = ("tenants",) + (None,) * (leaf.ndim - 1)
+        return pspec_sized(axes, rules, leaf.shape, mesh)
+
+    return jax.tree.map(spec, bank)
 
 
 def bank_store(bank: TenantBank, tenant: int) -> PrototypeStore:

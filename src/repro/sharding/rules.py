@@ -55,6 +55,9 @@ DEFAULT_RULES: dict = {
     "state": None,             # SSM/RWKV state dims
     "kv_lora": None,           # MLA compressed-kv rank
     "proto": None,             # prototype store (ways)
+    # --- streaming sessions (sessions/state.py, sessions/tenancy.py) ---
+    "slots": "data",           # session slot-grid leading axis
+    "tenants": "model",        # stacked per-tenant prototype banks
     # --- activations ---
     "batch": "dp",             # expands to ("pod","data") on multi-pod meshes
     "seq": None,               # sequence dim of *inputs* (tokens)

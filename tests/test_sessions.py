@@ -395,3 +395,187 @@ def test_enroll_refine_rejects_unenrolled_way():
     with pytest.raises(ValueError):
         svc.enroll_shots(sid, np.zeros((1, 8, 2), np.float32), way=3)
     svc.enroll_shots(sid, np.zeros((1, 8, 2), np.float32), way=0)  # valid
+
+
+# ---------------------------------------------------------------------------
+# cost-aware eviction
+# ---------------------------------------------------------------------------
+
+def test_scheduler_cost_aware_eviction_prefers_cheapest():
+    """Within the staleness window the cheapest-to-park session is evicted;
+    with window 0 the policy degenerates to pure LRU."""
+    costs = {1: 100, 2: 10}
+    sched = SlotScheduler(2, cost_fn=costs.get, stale_window=1 << 30)
+    for sid in (1, 2):
+        sched.admit(sid)
+        sched.bind(sid)
+    sched.touch(2)  # 1 is LRU, but 2 is far cheaper and "equally stale"
+    sched.admit(3)
+    _, evicted = sched.bind(3)
+    assert evicted == 2
+
+    costs = {1: 10, 2: 100}
+    sched = SlotScheduler(2, cost_fn=costs.get)  # stale_window=0
+    for sid in (1, 2):
+        sched.admit(sid)
+        sched.bind(sid)
+    sched.touch(1)  # 2 is LRU and expensive; window 0 evicts it anyway
+    sched.admit(3)
+    _, evicted = sched.bind(3)
+    assert evicted == 2
+
+
+def test_service_cost_aware_eviction():
+    cfg, bundle, params, bn = _setup()
+    costs = {}
+    svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1,
+                               cost_fn=lambda sid: costs.get(sid, 0),
+                               stale_window=1 << 30)
+    a = svc.open_session()
+    b = svc.open_session()
+    costs[a], costs[b] = 5, 1
+    svc.open_session()  # grid full: parks the cheapest (b), not the LRU (a)
+    assert svc.poll(b)["state"] == "parked"
+    assert svc.poll(a)["state"] == "active"
+
+
+# ---------------------------------------------------------------------------
+# packed-nibble parking (quantized service)
+# ---------------------------------------------------------------------------
+
+def test_quantized_parking_nibble_packed_bit_identical():
+    """quantize=True parks rings as packed u4 nibbles: much smaller on
+    host, still bit-identical on resume."""
+    from repro.sessions import parked_bytes
+    cfg, bundle, params, bn = _setup()
+    mk = lambda: StreamSessionService(bundle, params, bn, n_slots=2,
+                                      max_tenants=1, quantize=True, t_chunk=8)
+    svc, ctl = mk(), mk()
+    x = np.random.default_rng(11).normal(size=(40, 2)).astype(np.float32)
+    s, c = svc.open_session(), ctl.open_session()
+    svc.push_audio({s: x[:17]})
+    ctl.push_audio({c: x[:17]})
+    svc.park(s)
+    packed = parked_bytes(svc.parking[s])
+    raw = StreamSessionService(bundle, params, bn, n_slots=2,
+                               max_tenants=1).stats()["slot_state_bytes"]
+    # interior rings pack 8x; block 0's raw-input ring and the step counter
+    # stay fp32/int32, so the whole-state ratio lands between 4x and 8x here
+    assert packed * 4 <= raw, (packed, raw)
+    assert svc.stats()["slot_state_bytes"] == packed
+    r1 = svc.push_audio({s: x[17:]})[s]   # unpack + resume
+    r2 = ctl.push_audio({c: x[17:]})[c]   # uninterrupted control
+    np.testing.assert_array_equal(r1["emb"], r2["emb"])
+    np.testing.assert_array_equal(r1["logits"], r2["logits"])
+
+
+# ---------------------------------------------------------------------------
+# parking-lot persistence (checkpoint/store spill)
+# ---------------------------------------------------------------------------
+
+def test_parking_persistence_roundtrip(tmp_path):
+    """Sessions spilled to disk survive a process restart (fresh service)
+    and resume bit-identically, tenant prototypes included."""
+    cfg, bundle, params, bn = _setup()
+    mk = lambda: StreamSessionService(bundle, params, bn, n_slots=2,
+                                      max_tenants=2, max_ways=2, t_chunk=8)
+    ctl = mk()
+    svc = mk()
+    x = np.random.default_rng(12).normal(size=(40, 2)).astype(np.float32)
+    shots = np.random.default_rng(13).normal(size=(2, 10, 2)).astype(np.float32)
+    c = ctl.open_session(tenant=None)
+    s = svc.open_session(tenant=None)
+    ctl.enroll_shots(c, shots)
+    svc.enroll_shots(s, shots)
+    ctl.push_audio({c: x[:25]})
+    svc.push_audio({s: x[:25]})
+    path = str(tmp_path / "sessions.npz")
+    svc.spill_parking(path, include_bound=True)  # drain: parks s first
+    assert svc.poll(s)["state"] == "parked"
+
+    fresh = mk()  # "restart": brand-new service, same weights
+    restored = fresh.restore_parking(path)
+    assert restored == [s]
+    assert fresh.poll(s)["steps"] == 25
+    assert fresh.poll(s)["n_ways"] == 1  # tenant prototypes came back
+    r1 = fresh.push_audio({s: x[25:]})[s]
+    r2 = ctl.push_audio({c: x[25:]})[c]
+    np.testing.assert_array_equal(r1["emb"], r2["emb"])
+    np.testing.assert_array_equal(r1["logits"], r2["logits"])
+    np.testing.assert_array_equal(r1["tenant_logits"], r2["tenant_logits"])
+    # restored sids stay unique: the next open_session must not collide
+    assert fresh.open_session() not in restored
+
+
+def test_restore_refuses_live_sid_collision(tmp_path):
+    cfg, bundle, params, bn = _setup()
+    svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1)
+    s = svc.open_session()
+    svc.push_audio({s: np.zeros(2, np.float32)})
+    path = str(tmp_path / "p.npz")
+    svc.spill_parking(path, include_bound=True)
+    with pytest.raises(ValueError):
+        svc.restore_parking(path)  # s is still live here
+
+
+def test_restore_refuses_tenant_in_use_and_leaves_no_trace(tmp_path):
+    """A refused restore must not corrupt live tenants: validation runs
+    before ANY mutation (tenant rows, scheduler, sessions)."""
+    cfg, bundle, params, bn = _setup()
+    mk = lambda: StreamSessionService(bundle, params, bn, n_slots=2,
+                                      max_tenants=1, max_ways=2)
+    src = mk()
+    throwaway = src.open_session()     # sid 0: keep spilled sids != dst's
+    s = src.open_session(tenant=None)  # sid 1 claims tenant 0
+    src.enroll_shots(s, np.ones((1, 8, 2), np.float32))
+    src.push_audio({s: np.zeros(2, np.float32)})
+    src.close(throwaway)
+    path = str(tmp_path / "p.npz")
+    src.spill_parking(path, include_bound=True)
+
+    dst = mk()
+    d = dst.open_session(tenant=None)  # also claims tenant 0 — collision
+    dst.enroll_shots(d, np.full((1, 8, 2), 2.0, np.float32))
+    bank_before = np.asarray(dst.bank.s_sums).copy()
+    live_before = dst.sched.live_sessions
+    with pytest.raises(ValueError, match="tenant 0 already in use"):
+        dst.restore_parking(path)
+    np.testing.assert_array_equal(np.asarray(dst.bank.s_sums), bank_before)
+    assert dst.sched.live_sessions == live_before
+    assert s not in dst.sessions
+
+
+def test_restore_refuses_over_capacity_atomically(tmp_path):
+    cfg, bundle, params, bn = _setup()
+    from repro.sessions import AdmissionError
+    src = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1)
+    throwaway = src.open_session()  # sid 0: keep spilled sids != dst's
+    src.close(throwaway)
+    sids = [src.open_session() for _ in range(2)]
+    src.push_audio({sid: np.zeros(2, np.float32) for sid in sids})
+    path = str(tmp_path / "p.npz")
+    src.spill_parking(path, include_bound=True)
+    dst = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1,
+                               max_sessions=2)
+    keep = dst.open_session()
+    with pytest.raises(AdmissionError):
+        dst.restore_parking(path)  # 1 live + 2 restored > 2
+    assert dst.sched.live_sessions == 1  # nothing half-admitted
+    assert list(dst.sessions) == [keep]
+
+
+# ---------------------------------------------------------------------------
+# chunked push: dispatch accounting through the public surface
+# ---------------------------------------------------------------------------
+
+def test_push_audio_accepts_mixed_scalar_and_chunk():
+    """One call may mix (C_in,) samples and (t, C_in) chunks; each session
+    advances by its own length."""
+    cfg, bundle, params, bn = _setup()
+    svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1,
+                               t_chunk=4)
+    a, b = svc.open_session(), svc.open_session()
+    x = np.random.default_rng(14).normal(size=(9, 2)).astype(np.float32)
+    res = svc.push_audio({a: x, b: x[0]})
+    assert res[a]["emb"].shape == (9, 12) and res[a]["step"] == 9
+    assert res[b]["emb"].shape == (12,) and res[b]["step"] == 1
