@@ -1,0 +1,133 @@
+"""Bench regression gate: compare a fresh BENCH_session_throughput.json
+against the committed baseline and exit non-zero on regression.
+
+Gates (CI fails the job instead of merely uploading the artifact):
+
+  * TCN chunking contract — speedup_160_vs_1 >= 5x (absolute floor; the
+    bench itself asserts this too, so the gate also catches a stale file);
+  * LM chunking contract — speedup_16_vs_1 >= 3x;
+  * park/resume cost — within 2x of the baseline, measured as the
+    NORMALIZED ratio (park_us + resume_us) / us_per_dispatch(T=1) of the
+    same run: raw microseconds are machine-dependent, but the park/resume
+    cost relative to a single dispatch on the same machine is stable —
+    a 2x growth of that ratio means pack/unpack genuinely got heavier;
+  * parked-state bytes — within 2x of baseline (structural, exact on the
+    TCN side; O(pos) at the bench's fixed position on the LM side).
+
+Old-schema baselines (pre --service split: no "tcn"/"lm" sections) are
+upgraded on the fly; missing baseline metrics are reported and skipped,
+so adding metrics never requires a flag day.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        --fresh BENCH_session_throughput.json --baseline baseline.json
+"""
+
+import argparse
+import json
+import sys
+
+TCN_MIN_SPEEDUP = 5.0
+LM_MIN_SPEEDUP = 3.0
+COST_RATIO_MAX = 2.0
+BYTES_RATIO_MAX = 2.0
+NOISE_FLOOR = 4.0  # don't fail normalized-cost ratios in the noise band
+
+
+def _load(path):
+    with open(path) as f:
+        data = json.load(f)
+    if "tcn" not in data and "lm" not in data:  # pre-split schema
+        data = {"tcn": data}
+    return data
+
+
+def _tick_us(section, chunk="1"):
+    sweep = section.get("chunk_sweep", {}).get(chunk, {})
+    return sweep.get("us_per_tick") or sweep.get("us_per_dispatch")
+
+
+def _norm_cost(section):
+    """(park + resume) in units of one T=1 dispatch on the same machine."""
+    park, resume = section.get("park_us"), section.get("resume_us")
+    tick = _tick_us(section)
+    if park is None or resume is None or not tick:
+        return None
+    return (park + resume) / tick
+
+
+def check(fresh: dict, base: dict) -> list[str]:
+    errors, skipped = [], []
+
+    def gate(ok, msg):
+        if not ok:
+            errors.append(msg)
+
+    tcn, lm = fresh.get("tcn"), fresh.get("lm")
+    gate(tcn is not None, "fresh results have no 'tcn' section")
+    gate(lm is not None, "fresh results have no 'lm' section")
+
+    if tcn:
+        s = tcn.get("speedup_160_vs_1", 0.0)
+        gate(
+            s >= TCN_MIN_SPEEDUP,
+            f"tcn chunk speedup {s:.2f}x < {TCN_MIN_SPEEDUP}x (160 vs 1)",
+        )
+    if lm:
+        s = lm.get("speedup_16_vs_1", 0.0)
+        gate(
+            s >= LM_MIN_SPEEDUP,
+            f"lm chunk speedup {s:.2f}x < {LM_MIN_SPEEDUP}x (16 vs 1)",
+        )
+
+    for name in ("tcn", "lm"):
+        f, b = fresh.get(name), base.get(name)
+        if not f or not b:
+            skipped.append(f"{name}: no baseline section")
+            continue
+        fn, bn = _norm_cost(f), _norm_cost(b)
+        if fn is None or bn is None:
+            skipped.append(f"{name}: park/resume cost missing")
+        else:
+            limit = max(COST_RATIO_MAX * bn, NOISE_FLOOR)
+            gate(
+                fn <= limit,
+                f"{name} park+resume cost {fn:.2f} dispatches > "
+                f"{limit:.2f} (baseline {bn:.2f}, max {COST_RATIO_MAX}x)",
+            )
+        key = "parked_state_bytes" if name == "tcn" else "parked_blob_bytes"
+        fb, bb = f.get(key), b.get(key)
+        if fb is None or bb is None:
+            skipped.append(f"{name}: {key} missing")
+        else:
+            gate(
+                fb <= BYTES_RATIO_MAX * bb,
+                f"{name} {key} {fb} > {BYTES_RATIO_MAX}x baseline {bb}",
+            )
+
+    for msg in skipped:
+        print(f"[gate] SKIP {msg}")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="BENCH_session_throughput.json")
+    ap.add_argument("--baseline", required=True)
+    args = ap.parse_args()
+    fresh, base = _load(args.fresh), _load(args.baseline)
+    errors = check(fresh, base)
+    for name in ("tcn", "lm"):
+        f = fresh.get(name, {})
+        speedup = f.get("speedup_160_vs_1") or f.get("speedup_16_vs_1")
+        nc = _norm_cost(f)
+        cost = nc if nc is None else round(nc, 2)
+        print(f"[gate] {name}: speedup={speedup} norm_park_resume={cost}")
+    if errors:
+        for e in errors:
+            print(f"[gate] FAIL {e}", file=sys.stderr)
+        sys.exit(1)
+    print("[gate] OK: no bench regression vs baseline")
+
+
+if __name__ == "__main__":
+    main()

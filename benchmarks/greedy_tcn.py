@@ -7,7 +7,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config

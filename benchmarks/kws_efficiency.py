@@ -7,7 +7,7 @@ import time
 
 from benchmarks.common import emit
 from repro.configs import get_config
-from repro.core.costmodel import F_MAX_HZ, PEArrayMode, kws_ops_per_s
+from repro.core.costmodel import PEArrayMode, kws_ops_per_s
 from repro.core.streaming import greedy_inference_stats
 from repro.launch.analytic import param_count
 from repro.models.build import build_bundle

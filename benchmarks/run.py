@@ -14,7 +14,8 @@ SUITES = [
     ("kws_efficiency", "Fig 11/12 + Table II: dual-mode PE array model"),
     ("kernel_bench", "kernels: packed-log2 byte savings"),
     ("session_throughput", "multi-tenant sessions: chunked scan sweep "
-                           "(T_chunk 1/16/160), p50/p99 latency, park/resume"),
+                           "(audio T_chunk 1/16/160 + LM token chunks), "
+                           "p50/p99 latency, park/resume both services"),
     ("fsl_accuracy", "Table I: FSL accuracy (synthetic-Omniglot)"),
     ("cl_curve", "Fig 15: continual-learning curve"),
     ("roofline", "dry-run roofline terms (EXPERIMENTS §Roofline)"),

@@ -1,8 +1,8 @@
-"""Multi-tenant streaming session subsystem: throughput, tail latency,
-chunked-dispatch amortization, and park/resume cost over one fixed
-compiled slot grid.
+"""Session subsystem benchmarks: throughput, tail latency, chunked-dispatch
+amortization, and park/resume cost over fixed compiled slot grids — for
+BOTH services (``--service tcn|lm|both``).
 
-Demonstrates the subsystem's contract at serving scale:
+TCN streaming (--service tcn):
   * >=64 concurrent sessions advance through ONE jitted batched call/tick;
   * chunk sweep (T_chunk in {1, 16, 160}): samples/sec/session as the
     host<->device dispatch cost is amortized over lax.scan time chunks —
@@ -15,15 +15,26 @@ Demonstrates the subsystem's contract at serving scale:
     bit-identical to an uninterrupted run (asserted, not just reported);
   * pack/unpack cost and per-session parked-state bytes (the O(R) claim).
 
-Emits ``BENCH_session_throughput.json`` next to the cwd so CI can track
-the samples/sec trajectory per chunk size.  ``--smoke`` shrinks the grid
-for CI runtime; the asserted properties are identical.
+LM sessions (--service lm):
+  * token-chunk sweep (T_chunk in {1, 16}): decoded tokens/s/session as
+    dispatch is amortized over ``decode_scan`` token chunks (KV-cache
+    chunk ≙ time chunk) — >=3x at 16 vs 1 is asserted, not just reported;
+  * evict -> KV park -> resume emits a token stream bit-identical to an
+    uninterrupted run (asserted);
+  * park/resume wall time and O(pos) parked-blob bytes.
 
-    PYTHONPATH=src python -m benchmarks.session_throughput [--smoke]
+Emits ``BENCH_session_throughput.json`` ({"tcn": ..., "lm": ...}) next to
+the cwd; CI compares it against the committed baseline with
+``benchmarks.check_regression`` and fails on regression.  ``--smoke``
+shrinks the grids for CI runtime; the asserted properties are identical.
+
+    PYTHONPATH=src python -m benchmarks.session_throughput \\
+        [--smoke] [--service {tcn,lm,both}]
 """
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -35,17 +46,23 @@ from repro.configs import get_config
 from repro.models import build_bundle
 from repro.models.tcn import tcn_empty_state
 from repro.sessions import (
+    LMSessionService,
     StreamSessionService,
     grid_init,
     grid_scan,
     grid_step,
     lengths_to_valid,
+    parked_bytes,
 )
 
 N_SLOTS = 64
 TICKS = 40
 CHUNK_SWEEP = (1, 16, 160)
 SWEEP_SAMPLES = 320  # samples/session per sweep point (divisible by all)
+LM_CHUNK_SWEEP = (1, 16)
+LM_TOKENS = 48       # tokens/session per timed LM sweep pass
+LM_REPS = 7          # best-of-N passes (container timing jitter)
+OUT_PATH = "BENCH_session_throughput.json"
 
 
 def _service(bundle, params, bn, *, n_slots, **kw):
@@ -115,7 +132,7 @@ def _assert_scan_matches_steps(cfg, bundle, params, bn, *, n_slots):
          f"ragged {n_slots}-slot scan == 160 sequential steps")
 
 
-def run(smoke: bool = False):
+def run_tcn(smoke: bool = False):
     n_slots = 16 if smoke else N_SLOTS
     ticks = 10 if smoke else TICKS
     n_samples = 160 if smoke else SWEEP_SAMPLES
@@ -194,24 +211,153 @@ def run(smoke: bool = False):
     emit("sessions/park_resume_exact", 0.0,
          f"bit_identical=True evictions={svc2.stats()['evictions']}")
 
-    with open("BENCH_session_throughput.json", "w") as f:
-        json.dump({
-            "config": cfg.name, "smoke": smoke, "n_slots": n_slots,
-            "steady_p50_us": p50, "steady_p99_us": p99,
-            "chunk_sweep": {str(k): v for k, v in sweep.items()},
-            "speedup_160_vs_1": speedup,
-            "parked_state_bytes": st["slot_state_bytes"],
-        }, f, indent=2)
-    print("# wrote BENCH_session_throughput.json", flush=True)
+    return {
+        "config": cfg.name, "smoke": smoke, "n_slots": n_slots,
+        "steady_p50_us": p50, "steady_p99_us": p99,
+        "chunk_sweep": {str(k): v for k, v in sweep.items()},
+        "speedup_160_vs_1": speedup,
+        "parked_state_bytes": st["slot_state_bytes"],
+        "park_us": park_us, "resume_us": resume_us,
+    }
+
+
+# ---------------------------------------------------------------------------
+# LM sessions: chunked multi-token decode + KV park/resume
+# ---------------------------------------------------------------------------
+
+def _lm_service(bundle, params, *, n_slots, t_chunk, **kw):
+    kw.setdefault("seq_cap", 16 + (2 + LM_REPS) * LM_TOKENS)
+    return LMSessionService(bundle, params, n_slots=n_slots, t_chunk=t_chunk,
+                            **kw)
+
+
+def run_lm(smoke: bool = False):
+    n_slots = 4 if smoke else 8
+    n_tokens = 24 if smoke else LM_TOKENS
+    # deliberately tiny model: the metric is DISPATCH amortization (the
+    # serving wall this subsystem attacks), so per-step math must not
+    # drown the per-dispatch cost being amortized — same philosophy as the
+    # TCN sweep's smoke config
+    cfg = get_config("olmo-1b").smoke().replace(
+        n_layers=1, d_model=16, d_ff=32, vocab_size=32, head_dim=8)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+               for _ in range(n_slots)]
+
+    # -- token-chunk sweep: dispatch amortization (the tentpole metric) -----
+    sweep, streams = {}, {}
+    for t_chunk in LM_CHUNK_SWEEP:
+        svc = _lm_service(bundle, params, n_slots=n_slots, t_chunk=t_chunk)
+        sids = [svc.open_session(p) for p in prompts]
+        # warm run: compiles every bucket the timed runs use (prefill rides
+        # along); then best-of-N steady-state passes (container timing
+        # jitter dwarfs the single-pass signal)
+        out = svc.decode({sid: n_tokens for sid in sids})
+        best, nd = 0.0, 0
+        for _ in range(LM_REPS):
+            d0 = svc.dispatches
+            t0 = time.perf_counter()
+            out2 = svc.decode({sid: n_tokens for sid in sids})
+            dt = time.perf_counter() - t0
+            for sid in sids:
+                out[sid] += out2[sid]
+            if n_tokens / dt > best:
+                best, nd = n_tokens / dt, svc.dispatches - d0
+        sweep[t_chunk] = {"tokens_per_sec_per_session": best,
+                          "dispatches": nd,
+                          "us_per_dispatch": n_tokens / best / nd * 1e6}
+        streams[t_chunk] = [out[sid] for sid in sids]
+        emit(f"lm/chunk_T{t_chunk}", n_tokens / best / nd * 1e6,
+             f"{best:.0f} tokens/s/session over {n_slots} sessions")
+    for a, b in zip(*[streams[t] for t in LM_CHUNK_SWEEP]):
+        assert a == b, "chunked decode diverged from per-token decode"
+    speedup = (sweep[16]["tokens_per_sec_per_session"]
+               / sweep[1]["tokens_per_sec_per_session"])
+    emit("lm/chunk_speedup_16v1", 0.0, f"{speedup:.1f}x")
+    assert speedup >= 3.0, (
+        f"chunked decode amortization regressed: T_chunk=16 is only "
+        f"{speedup:.1f}x the per-token baseline (contract: >=3x)")
+
+    # -- evict -> KV park -> resume is bit-identical ------------------------
+    ctl = _lm_service(bundle, params, n_slots=2, t_chunk=8, max_sessions=8)
+    c = ctl.open_session(prompts[0])
+    want = ctl.decode({c: n_tokens})[c]
+    svc = _lm_service(bundle, params, n_slots=2, t_chunk=8, max_sessions=8)
+    a = svc.open_session(prompts[0])
+    got = svc.decode({a: n_tokens // 3})[a]
+    b1 = svc.open_session(prompts[1])   # slot pressure: a is LRU
+    b2 = svc.open_session(prompts[2])
+    assert svc.poll(a)["state"] == "parked", "expected LRU eviction"
+    svc.decode({b1: 4, b2: 4})
+    got += svc.decode({a: n_tokens - n_tokens // 3})[a]  # resume, new slot ok
+    assert got == want, "KV park/resume must be bit-identical"
+    emit("lm/park_resume_exact", 0.0,
+         f"bit_identical=True evictions={svc.stats()['evictions']}")
+
+    # -- park / resume cost (O(pos) blob) -----------------------------------
+    svc = _lm_service(bundle, params, n_slots=2, t_chunk=8, max_sessions=4)
+    s = svc.open_session(prompts[0])
+    svc.decode({s: n_tokens // 2})
+    svc.decode({s: 1})  # warm the T=1 bucket: time the dispatch, not XLA
+    t0 = time.perf_counter()
+    svc.park(s)
+    park_us = (time.perf_counter() - t0) * 1e6
+    blob = parked_bytes(svc.parking[s])
+    t0 = time.perf_counter()
+    svc.decode({s: 1})
+    resume_us = (time.perf_counter() - t0) * 1e6
+    emit("lm/park", park_us, f"parked_blob={blob}B at pos="
+         f"{svc.sessions[s].steps - 1}")
+    emit("lm/resume_decode", resume_us, "unpack+decode")
+
+    return {
+        "config": cfg.name, "smoke": smoke, "n_slots": n_slots,
+        "chunk_sweep": {str(k): v for k, v in sweep.items()},
+        "speedup_16_vs_1": speedup,
+        "parked_blob_bytes": blob,
+        "park_us": park_us, "resume_us": resume_us,
+    }
+
+
+def run(smoke: bool = False):
+    """benchmarks/run.py harness entry: both services + the JSON artifact."""
+    _write_out({"tcn": run_tcn(smoke=smoke), "lm": run_lm(smoke=smoke)})
+
+
+def _write_out(sections: dict):
+    """Merge new sections into BENCH_session_throughput.json (so
+    --service lm refreshes only the lm subtree)."""
+    out = {}
+    if os.path.exists(OUT_PATH):
+        try:
+            with open(OUT_PATH) as f:
+                prev = json.load(f)
+            if "tcn" in prev or "lm" in prev:  # ignore pre-split schema
+                out = prev
+        except (json.JSONDecodeError, OSError):
+            pass
+    out.update(sections)
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {OUT_PATH} ({', '.join(sections)})", flush=True)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced grid for CI (same asserted properties)")
+                    help="reduced grids for CI (same asserted properties)")
+    ap.add_argument("--service", choices=("tcn", "lm", "both"),
+                    default="both")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(smoke=args.smoke)
+    sections = {}
+    if args.service in ("tcn", "both"):
+        sections["tcn"] = run_tcn(smoke=args.smoke)
+    if args.service in ("lm", "both"):
+        sections["lm"] = run_lm(smoke=args.smoke)
+    _write_out(sections)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,11 @@
 """Serving example: (a) real-time streaming KWS through the session-service
 façade (the blessed entry point — sessions/service.py), and (b) batched LM
-serving with slot reuse.  For multi-tenant personalization, eviction, and
-park/resume see examples/serve_multitenant.py.
+serving with slot reuse — now chunk-native: LMServer rides
+sessions/lm.decode_scan, so each step() is ONE jitted dispatch for every
+live request and prefill is folded into the first decode chunk.  For
+multi-tenant personalization, eviction, and park/resume see
+examples/serve_multitenant.py (TCN) and examples/serve_lm_sessions.py (LM
+KV-cache park/resume + oversubscription).
 
     PYTHONPATH=src python examples/serve_stream.py
 """

@@ -143,13 +143,29 @@ def gc_checkpoints(ckpt_dir: str, keep: int = 3):
 # ---------------------------------------------------------------------------
 #
 # A parking lot is {sid: parked pytree of np arrays} — nested dicts whose
-# leaves may be raw fp32 rings or nibble-packed {"u4c": uint8, "scale": f32}
-# records (sessions/state.pack_slot).  One .npz with "/"-joined path keys
-# holds the whole lot; a "__meta__" JSON blob carries the service-side
-# session/tenant bookkeeping.  Written atomically (tmp + os.replace), same
-# crash guarantee as the model checkpoints above.
+# leaves may be raw fp32 rings, nibble-packed {"u4c": uint8, "scale": f32}
+# records (sessions/state.pack_slot), or truncated KV-cache columns
+# (sessions/state.pack_column; any dtype, including bfloat16).  One .npz
+# with "/"-joined path keys holds the whole lot; a "__meta__" JSON blob
+# carries the service-side session/tenant bookkeeping.  Written atomically
+# (tmp + os.replace), same crash guarantee as the model checkpoints above.
+#
+# Exotic dtypes: np.savez writes ml_dtypes arrays (bfloat16, fp8) with a
+# raw void descr, so np.load would hand back "|V2" bytes.  save_sessions
+# therefore records a {key: dtype_name} sidecar in the meta blob and
+# load_sessions re-views those buffers — the round trip is bit-identical
+# AND dtype-identical.
 
 _META_KEY = "__meta__"
+_DTYPES_KEY = "__dtypes__"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # jax dependency; registers bfloat16/fp8 for numpy
+        return np.dtype(getattr(ml_dtypes, name))
 
 
 def _flatten_parking(parking: dict) -> dict:
@@ -170,6 +186,16 @@ def _flatten_parking(parking: dict) -> dict:
 def save_sessions(path: str, parking: dict, meta: dict | None = None) -> str:
     """Atomically spill a session parking lot (+ optional metadata) to disk."""
     flat = _flatten_parking(parking)
+    def needs_sidecar(dt: np.dtype) -> bool:
+        try:  # native dtypes round-trip by name; ml_dtypes ones do not
+            return np.dtype(dt.name) != dt
+        except TypeError:
+            return True
+
+    dtypes = {k: a.dtype.name for k, a in flat.items()
+              if needs_sidecar(a.dtype)}
+    if dtypes:
+        meta = {**(meta or {}), _DTYPES_KEY: dtypes}
     if meta is not None:
         flat[_META_KEY] = np.frombuffer(
             json.dumps(meta).encode(), dtype=np.uint8)
@@ -192,15 +218,21 @@ def load_sessions(path: str):
     parking: dict[int, dict] = {}
     meta = None
     with np.load(path) as z:
+        dtypes = {}
+        if _META_KEY in z.files:
+            meta = json.loads(bytes(z[_META_KEY]).decode())
+            dtypes = meta.pop(_DTYPES_KEY, {})
         for key in z.files:
             if key == _META_KEY:
-                meta = json.loads(bytes(z[key]).decode())
                 continue
+            arr = z[key]
+            if key in dtypes:
+                arr = arr.view(_np_dtype(dtypes[key]))
             parts = key.split("/")
             node = parking.setdefault(int(parts[0]), {})
             for p in parts[1:-1]:
                 node = node.setdefault(p, {})
-            node[parts[-1]] = z[key]
+            node[parts[-1]] = arr
     return parking, meta
 
 

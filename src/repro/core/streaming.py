@@ -16,6 +16,12 @@ full-sequence convolution (tests/test_tcn_stream.py), reproducing the
 The residual path needs no extra buffer at all (the paper's dual-port
 register file, Fig. 9): the block input of the current step is still live
 when the residual add happens.
+
+The params-as-jit-ARGUMENTS discipline documented on ``stream_scan_single``
+is load-bearing well beyond this module: any chunked scan whose per-step
+outputs must be bit-identical across separately compiled chunk sizes needs
+it.  sessions/lm.decode_scan applies the same rule to LM serving, where the
+KV-cache token chunk is the exact analog of the time chunk here.
 """
 
 from __future__ import annotations

@@ -7,7 +7,6 @@ switches any call site to the oracle — the dry-run lowers the pure-JAX path.
 
 from __future__ import annotations
 
-import jax
 
 from repro.kernels import ref
 from repro.kernels.dilated_conv import dilated_causal_conv

@@ -14,9 +14,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.configs.shapes import ENCDEC_ENC_LEN, SHAPES, ShapeSpec
-from repro.models import rwkv as rwkv_mod
-from repro.models import ssm as ssm_mod
+from repro.configs.shapes import ENCDEC_ENC_LEN, SHAPES
 from repro.models import tcn as tcn_mod
 from repro.models.config import ArchConfig
 from repro.models.rwkv import rwkv_empty_cache, rwkv_layer, rwkv_layer_param_defs

@@ -8,8 +8,6 @@ matching TPU v5e MXU-native precision.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

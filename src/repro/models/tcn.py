@@ -156,7 +156,6 @@ def fold_bn(params, state, cfg: ArchConfig):
     BN params become identity.  Enables the pure conv streaming executor and
     the packed log2 deployment pipeline.
     """
-    import copy
     out = jax.tree.map(lambda x: x, params)  # shallow-ish copy of the tree
     for i in range(len(cfg.tcn_channels)):
         p = dict(out["blocks"][f"b{i}"])

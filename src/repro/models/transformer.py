@@ -14,7 +14,6 @@ Three execution modes share one layer body:
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

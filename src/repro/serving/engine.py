@@ -1,6 +1,6 @@
 """Batched serving engines — thin clients of the sessions subsystem.
 
-Slot lifecycle (admission, reuse, LRU bookkeeping) lives in
+Slot lifecycle (admission, reuse, LRU/cost eviction) lives in
 ``sessions/scheduler.SlotScheduler``; both servers here keep a fixed
 compiled batch shape and move requests on/off slots between steps without
 recompiling.
@@ -9,24 +9,30 @@ The dual-mode idea from the paper maps here to two engine presets:
   * "low-power"  — small batch, latency-optimized (the 4x4 array analogue),
   * "throughput" — full batch, maximize tokens/s (the 16x16 analogue).
 
-For the TCN architecture serving means *streaming*: ``TCNStreamServer`` is
-now a façade over ``sessions/service.StreamSessionService`` — one session
-per stream, all advanced by the service's chunked ``grid_scan`` (a whole
-time chunk per jitted dispatch).  Use the service directly for multi-tenant
-personalization, park/resume, and session churn; this class keeps the
-historical push(x_t)->(emb, logits) surface for fixed lockstep stream
-grids and adds push_chunk(x (S, T, C)) as the amortized hot path.
+Both engines are now façades over slot-grid services:
+
+``LMServer`` wraps ``sessions/lm.LMSessionService`` — per-lane positions,
+chunked ``decode_scan`` dispatches (prefill is the forced-token prefix of
+the same scan), KV-cache park/resume, int32 positions with a seq_cap
+retirement guard.  The historical surface is preserved: by default
+``max_sessions`` equals the batch, so admission beyond the grid raises
+(the pre-park/resume contract); pass ``ServeConfig(max_sessions=...)``
+larger than the batch — or use the service directly — to oversubscribe
+with LRU eviction to the host parking lot.
+
+``TCNStreamServer`` wraps ``sessions/service.StreamSessionService`` —
+one session per stream, all advanced by the service's chunked ``grid_scan``
+(a whole time chunk per jitted dispatch).  Use the service directly for
+multi-tenant personalization, park/resume, and session churn.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.sessions.scheduler import SlotScheduler
+from repro.sessions.lm import LMSessionService
 from repro.sessions.service import StreamSessionService
 
 
@@ -35,114 +41,64 @@ class ServeConfig:
     max_batch: int = 8
     seq_cap: int = 512
     mode: str = "throughput"  # throughput | low-power (paper's dual mode)
+    decode_chunk: int = 16    # token-chunk bucket cap per jitted dispatch
+    max_sessions: int | None = None  # None: == batch (no oversubscription)
 
     def effective_batch(self):
         return self.max_batch if self.mode == "throughput" else max(1, self.max_batch // 4)
 
 
 class LMServer:
+    """Historical add_request/step/outputs/finish surface over the LM
+    session service.  One ``step()`` greedily decodes one token for every
+    live request in a single chunked dispatch; a request's first step also
+    consumes its prompt (forced-token steps of the same scan)."""
+
     def __init__(self, bundle, params, cfg: ServeConfig):
         self.bundle = bundle
-        self.params = params
         self.cfg = cfg
-        B, S = cfg.effective_batch(), cfg.seq_cap
-        self.cache = bundle.empty_cache(B, S)
-        self.pos = np.zeros(B, np.int64)
-        self.tokens = np.zeros((B, 1), np.int32)
-        self.outputs: dict[int, list] = {}
-        self._decode = jax.jit(bundle.decode_fn)
-        self.sched = SlotScheduler(B)
-        self._next_id = 0
-        # per-leaf batch axis, derived from the bundle (the axis whose extent
-        # tracks B) — no shape-sniffing against concrete dims that might
-        # coincide with B.  -1 marks leaves without a per-slot column.
-        sa = jax.eval_shape(lambda: bundle.empty_cache(B, S))
-        sb = jax.eval_shape(lambda: bundle.empty_cache(B + 1, S))
-        def axis_of(a, b):
-            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
-                if x != y:
-                    return i
-            return -1
-        self._cache_axes = jax.tree.leaves(jax.tree.map(axis_of, sa, sb))
+        B = cfg.effective_batch()
+        self.service = LMSessionService(
+            bundle, params, n_slots=B, seq_cap=cfg.seq_cap,
+            t_chunk=cfg.decode_chunk,
+            max_sessions=B if cfg.max_sessions is None else cfg.max_sessions)
 
-    @staticmethod
-    def _col(ax: int, slot: int):
-        return (slice(None),) * ax + (slot,)
+    # historical mirrors -----------------------------------------------------
+    @property
+    def sched(self):
+        return self.service.sched
 
+    @property
+    def outputs(self) -> dict[int, list[int]]:
+        return self.service.outputs
+
+    @property
+    def pos(self) -> np.ndarray:
+        """Per-slot int32 positions (0 for free slots)."""
+        return self.service.slot_pos
+
+    # lifecycle --------------------------------------------------------------
     def add_request(self, prompt: np.ndarray) -> int:
-        """Admit a request into a free slot (prefill via step-wise decode).
-
-        LM slots hold a KV cache that is not parked to host (unlike TCN
-        stream state), so admission is free-slot-only — no eviction.
-        Step-wise prefill is batch-synchronized (every slot's cache row is
-        written at the prompt's low positions), so live slots' cache columns
-        are snapshotted before and restored after — admission never perturbs
-        in-flight requests."""
-        if not self.sched.free_slots:
-            raise RuntimeError("no free slots")
-        rid = self._next_id
-        self._next_id += 1
-        self.sched.admit(rid)
-        slot, _ = self.sched.bind(rid)
-        # jax arrays are immutable: the pre-prefill cache stays intact, so
-        # after prefill we graft ONLY the new slot's column onto it — one
-        # on-device column copy, live slots untouched by construction.
-        before, treedef = jax.tree.flatten(self.cache)
-        for tok in prompt:
-            self.tokens[slot, 0] = tok
-            self._step_single(slot)
-        after = jax.tree.leaves(self.cache)
-        self.cache = jax.tree.unflatten(treedef, [
-            a if ax < 0 else b.at[self._col(ax, slot)].set(a[self._col(ax, slot)])
-            for b, a, ax in zip(before, after, self._cache_axes)])
-        self.outputs[rid] = []
-        return rid
-
-    def _step_single(self, slot):
-        # batch-synchronized decode at this slot's position; other slots'
-        # cache rows are written but masked out of outputs.
-        logits, self.cache = self._decode(
-            self.params, self.cache,
-            {"tokens": jnp.asarray(self.tokens),
-             "pos": jnp.asarray(self.pos[slot], jnp.int32)})
-        self.pos[slot] += 1
-        return np.asarray(logits[slot])
+        """Admit a request.  With the default ``max_sessions`` (== batch)
+        a full grid raises AdmissionError (a RuntimeError) — back-pressure,
+        the historical contract; with a larger cap the LRU idle request is
+        parked to host memory instead and resumes bit-identically."""
+        return self.service.open_session(prompt)
 
     def step(self):
-        """One greedy decode step for every active slot."""
-        if not self.sched.sid_of:
-            return
-        pos = int(self.pos.max())
-        logits, self.cache = self._decode(
-            self.params, self.cache,
-            {"tokens": jnp.asarray(self.tokens), "pos": jnp.asarray(pos, jnp.int32)})
-        nxt = np.asarray(logits).argmax(-1)
-        for slot, rid in list(self.sched.sid_of.items()):
-            tok = int(nxt[slot])
-            self.outputs[rid].append(tok)
-            self.tokens[slot, 0] = tok
-            self.pos[slot] = pos + 1
-            # no touch(): LM admission is free-slot-only, LRU never consulted
-            if self.pos[slot] >= self.cfg.seq_cap - 1:
-                self._release(rid)  # slot freed
-
-    def _release(self, rid: int):
-        """Free a request's slot AND scrub it: reset its position/token and
-        zero its cache column, so the next occupant prefills from position 0
-        like a fresh slot (and a capped slot can't pin step()'s shared
-        max-pos forever)."""
-        slot = self.sched.release(rid)
-        if slot is None:
-            return
-        self.pos[slot] = 0
-        self.tokens[slot, 0] = 0
-        leaves, treedef = jax.tree.flatten(self.cache)
-        self.cache = jax.tree.unflatten(treedef, [
-            l if ax < 0 else l.at[self._col(ax, slot)].set(0)
-            for l, ax in zip(leaves, self._cache_axes)])
+        """One greedy decode step for every live request — bound AND
+        parked.  With oversubscription the live set can exceed the grid,
+        so requests advance in waves of at most ``n_slots`` (each wave's
+        binds may park the previous wave's LRU members; every request
+        still gains exactly one token per step)."""
+        live = [sid for sid, s in sorted(self.service.sessions.items())
+                if not s.done]
+        for i in range(0, len(live), self.service.n_slots):
+            self.service.decode(
+                {sid: 1 for sid in live[i:i + self.service.n_slots]})
 
     def finish(self, rid: int):
-        self._release(rid)
+        self.service.close(rid)
 
 
 class TCNStreamServer:

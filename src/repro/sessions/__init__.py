@@ -1,28 +1,41 @@
-"""Multi-tenant streaming session subsystem.
+"""Multi-tenant session subsystem over fixed compiled slot grids.
 
-Virtualizes the paper's per-user deployment (shared TCN embedder + per-user
-prototype classifiers + O(R) stream state) over a fixed compiled slot grid:
+Virtualizes the paper's per-user deployment (shared backbone + per-user
+state + many more sessions than compiled slots) for BOTH serving paths:
 
   * state.py     — structure-of-arrays vmapped session state, pack/unpack
+                   (leading-axis TCN grids and arbitrary-axis KV columns)
   * tenancy.py   — stacked per-tenant PrototypeStore banks
-  * scheduler.py — admission control, LRU eviction, slot reuse
-  * service.py   — open_session / push_audio / enroll_shots / poll / close
+  * scheduler.py — admission control, LRU/cost eviction, slot reuse
+  * service.py   — SlotGridService (service-agnostic core) + the TCN
+                   façade: open_session / push_audio / enroll_shots / poll
+  * lm.py        — LM sessions: KV-cache park/resume + decode_scan chunked
+                   multi-token decode (KV-cache chunk ≙ time chunk)
 """
 
+from repro.sessions.lm import LMSessionService, make_decode_scan
 from repro.sessions.scheduler import AdmissionError, CapacityError, SlotScheduler
-from repro.sessions.service import NO_TENANT, StreamSessionService
+from repro.sessions.service import (
+    NO_TENANT,
+    SessionRecord,
+    SlotGridService,
+    StreamSessionService,
+)
 from repro.sessions.state import (
     decode_parked,
     grid_init,
     grid_pspecs,
     grid_scan,
     grid_step,
+    leaf_axes,
     lengths_to_valid,
+    pack_column,
     pack_slot,
     parked_bytes,
     reset_slot,
     slot_park_bytes,
     slot_state_bytes,
+    unpack_column,
     unpack_slot,
 )
 from repro.sessions.tenancy import (
@@ -33,6 +46,7 @@ from repro.sessions.tenancy import (
     bank_init,
     bank_pack_tenant,
     bank_pspecs,
+    bank_row_bytes,
     bank_store,
     bank_unpack_tenant,
     bank_update_class,
@@ -40,11 +54,13 @@ from repro.sessions.tenancy import (
 
 __all__ = [
     "AdmissionError", "CapacityError", "SlotScheduler",
-    "NO_TENANT", "StreamSessionService",
+    "NO_TENANT", "SessionRecord", "SlotGridService", "StreamSessionService",
+    "LMSessionService", "make_decode_scan",
     "decode_parked", "grid_init", "grid_pspecs", "grid_scan", "grid_step",
-    "lengths_to_valid", "pack_slot", "parked_bytes", "reset_slot",
-    "slot_park_bytes", "slot_state_bytes", "unpack_slot",
+    "leaf_axes", "lengths_to_valid", "pack_column", "pack_slot",
+    "parked_bytes", "reset_slot", "slot_park_bytes", "slot_state_bytes",
+    "unpack_column", "unpack_slot",
     "TenantBank", "bank_add_class", "bank_clear_tenant", "bank_fc",
-    "bank_init", "bank_pack_tenant", "bank_pspecs", "bank_store",
-    "bank_unpack_tenant", "bank_update_class",
+    "bank_init", "bank_pack_tenant", "bank_pspecs", "bank_row_bytes",
+    "bank_store", "bank_unpack_tenant", "bank_update_class",
 ]

@@ -1,0 +1,403 @@
+"""LM serving sessions: KV-cache park/resume + chunked multi-token decode.
+
+This brings the LM path to full parity with the TCN streaming service.
+The same slot-grid virtualization applies — many more sessions than the
+compiled batch, LRU/cost eviction to a host parking lot, bit-identical
+resume in any slot — but a slot's state is a KV-cache COLUMN (every cache
+leaf sliced along its per-session axis) instead of a ring-buffer pytree,
+and a "time chunk" is a TOKEN chunk: ``decode_scan`` runs ``jax.lax.scan``
+over T masked greedy-decode steps inside one jitted dispatch, so decoding
+amortizes the host↔device round trip exactly the way ``grid_scan`` does
+for audio samples (KV-cache chunk ≙ time chunk).
+
+Key differences from the historical ``serving.LMServer`` loop:
+
+  * per-lane positions — each slot decodes at its OWN ``pos`` (the lane
+    body is ``jax.vmap`` of a B=1 decode), so admitting or resuming a
+    session can never perturb in-flight neighbors (no snapshot/rollback),
+    and prefill is just the first steps of the same scan (forced tokens
+    from the prompt instead of greedy feedback): one dispatch replaces the
+    one-dispatch-per-token prefill AND decode loops;
+  * params enter the jitted scan as ARGUMENTS (the core/streaming
+    discipline), so the T=1 and T=T_chunk programs are bit-identical per
+    step — a chunked decode emits exactly the tokens of per-step decoding;
+  * positions are int32 END TO END (host mirrors included) and guarded:
+    a lane's steps are clamped to ``seq_cap - pos`` and a session that
+    reaches the cap is *retired* (slot freed, outputs kept) instead of
+    silently wrapping its cache writes;
+  * a parked blob is the cache column truncated to the first ``pos``
+    positions (sessions/state.pack_column), so parked bytes are O(pos) —
+    per-session costs are genuinely non-uniform, which is what makes the
+    scheduler's cost-aware eviction policy bite across mixed fp32 TCN /
+    u4 TCN / KV sessions.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sessions.service import SessionRecord, SlotGridService
+from repro.sessions.state import leaf_axes, pack_column, unpack_column
+
+
+def make_decode_scan(decode_fn, batch_axes, seq_axes=None):
+    """Build a chunked greedy decoder from a bundle's single-step decode.
+
+    Returns ``scan(params, cache, tok, pos, inp, n_inp, n_steps)``:
+
+      cache               batched cache pytree (``batch_axes`` per leaf)
+      tok     (S,) i32    pending feedback token per lane
+      pos     (S,) i32    per-lane position
+      inp     (S, T) i32  forced (prompt) tokens, consumed left to right
+      n_inp   (S,) i32    forced-token count per lane
+      n_steps (S,) i32    valid steps per lane (<= T); the rest are masked
+
+    Step j of lane s feeds ``inp[s, j]`` while ``j < n_inp[s]`` (prefill),
+    else the previous argmax (greedy decode), at position ``pos[s] + j``.
+    Lanes are independent ``vmap`` bodies, so each writes its cache column
+    at its own position; steps past ``n_steps`` leave the lane's position
+    and feedback token bit-frozen.  Masked-step cache discipline is
+    per-leaf, keyed by ``seq_axes`` (pass the tree from
+    ``state.leaf_axes``; None treats every leaf as position-indexed):
+
+      * position-indexed leaves (seq axis >= 0, i.e. KV rows) are masked
+        by POSITION, not by value — a masked step still writes its
+        (meaningless) k/v at the lane's frozen ``pos``, which no consumer
+        ever reads: the next valid step rewrites the row before
+        attending, and parking truncates the blob to [0, pos).  Callers
+        must therefore pass every lane's TRUE position even for fully
+        masked lanes (pos 0 would corrupt live history); the payoff is a
+        scan body that costs O(one row write), not O(whole cache select),
+        per step;
+      * recurrent leaves (no seq axis — RWKV wkv state, Mamba conv/ssm
+        state) have no overwritten-before-read property (every step
+        mutates them cumulatively), so they ARE value-masked with
+        ``jnp.where`` — they are O(D) per lane, so the select is cheap.
+
+    Returns ``(cache, tok, pos, y (S, T) i32)`` — ``y[s, j]`` is the
+    argmax after step j (callers mask by their emission rule).
+
+    Jit it with params as an ARGUMENT; T=1 then recovers per-token decode
+    bit-exactly and any chunking of the same token stream is bit-identical
+    (tests/test_lm_sessions.py)."""
+
+    recurrent = (jax.tree.map(lambda _: False, batch_axes) if seq_axes is None
+                 else jax.tree.map(lambda sax: sax < 0, seq_axes))
+
+    def scan(params, cache, tok, pos, inp, n_inp, n_steps):
+        def body(carry, xs):
+            cache, tok, pos = carry
+            inp_t, j = xs
+
+            def lane(col, tk, ps, it, ni, ns):
+                c = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
+                                 col, batch_axes)
+                t = jnp.where(j < ni, it, tk)
+                logits, c2 = decode_fn(params, c,
+                                       {"tokens": t[None, None], "pos": ps})
+                c2 = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax),
+                                  c2, batch_axes)
+                y = jnp.argmax(logits[0], -1).astype(jnp.int32)
+                v = j < ns
+                keep = lambda n, o: jnp.where(v, n, o)
+                # per-leaf masked-step discipline (see docstring): KV rows
+                # are masked by position (frozen ps, row rewritten before
+                # any read), recurrent leaves by value
+                c2 = jax.tree.map(
+                    lambda new, old, rec: keep(new, old) if rec else new,
+                    c2, col, recurrent)
+                return c2, keep(y, tk), keep(ps + 1, ps), y
+
+            cache, tok, pos, y = jax.vmap(
+                lane, in_axes=(batch_axes, 0, 0, 0, 0, 0),
+                out_axes=(batch_axes, 0, 0, 0))(
+                    cache, tok, pos, inp_t, n_inp, n_steps)
+            return (cache, tok, pos), y
+
+        T = inp.shape[1]
+        (cache, tok, pos), ys = jax.lax.scan(
+            body, (cache, tok, pos),
+            (jnp.moveaxis(inp, 1, 0), jnp.arange(T, dtype=jnp.int32)))
+        return cache, tok, pos, jnp.moveaxis(ys, 0, 1)
+
+    return scan
+
+
+@dataclass
+class _LMSession(SessionRecord):
+    prompt: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    tok: int = 0        # pending greedy feedback token
+    done: bool = False  # retired at seq_cap (outputs kept, slot freed)
+
+
+class LMSessionService(SlotGridService):
+    """Slot-grid LM serving with KV park/resume and chunked decode.
+
+    ``open_session(prompt)`` admits a request (evicting an idle LRU/cheap
+    session if the grid is full); ``decode({sid: n})`` greedily generates n
+    tokens per session — consuming any still-pending prompt feed first —
+    in bucketed scan dispatches of up to ``t_chunk`` tokens each.  Device
+    state is ONLY the cache grid; positions, pending prompts, and feedback
+    tokens are int32 host mirrors rebuilt per dispatch, so a parked blob
+    is just the truncated cache column.  ``outputs[sid]`` survives close
+    and retirement (the historical LMServer contract)."""
+
+    _session_cls = _LMSession
+
+    def __init__(self, bundle, params, *, n_slots: int = 8,
+                 seq_cap: int = 512, t_chunk: int = 16,
+                 max_sessions: int | None = None,
+                 cost_fn=None, stale_window: int = 0):
+        if cost_fn is None:
+            cost_fn = self._park_cost  # O(pos) bytes: cost-aware by default
+        super().__init__(n_slots, t_chunk=t_chunk, max_sessions=max_sessions,
+                         cost_fn=cost_fn, stale_window=stale_window)
+        self.bundle = bundle
+        self.seq_cap = int(seq_cap)
+        self._params = params
+        self.cache = bundle.empty_cache(n_slots, seq_cap)
+        # per-leaf session/sequence axes by eval_shape diffing — never by
+        # matching concrete extents that might coincide with n_slots
+        self._batch_axes = leaf_axes(
+            lambda: bundle.empty_cache(n_slots, seq_cap),
+            lambda: bundle.empty_cache(n_slots + 1, seq_cap))
+        self._seq_axes = leaf_axes(
+            lambda: bundle.empty_cache(n_slots, seq_cap),
+            lambda: bundle.empty_cache(n_slots, seq_cap + 1))
+        for ax in jax.tree.leaves(self._batch_axes):
+            if ax < 0:
+                raise ValueError("cache has a leaf without a per-session "
+                                 "axis; cannot virtualize slots")
+        # closed-form parked-footprint coefficients (the eviction cost_fn
+        # runs per victim candidate on every bind — no re-tracing there)
+        self._park_fixed = self._park_per_pos = 0
+        for leaf, bax, sax in zip(
+                jax.tree.leaves(jax.eval_shape(
+                    lambda: bundle.empty_cache(n_slots, self.seq_cap))),
+                jax.tree.leaves(self._batch_axes),
+                jax.tree.leaves(self._seq_axes)):
+            per = leaf.size // leaf.shape[bax] * leaf.dtype.itemsize
+            if sax >= 0:
+                self._park_per_pos += per // self.seq_cap
+            else:
+                self._park_fixed += per
+        self.outputs: dict[int, list[int]] = {}
+        self._decode_scan = jax.jit(
+            make_decode_scan(bundle.decode_fn, self._batch_axes,
+                             self._seq_axes))
+
+    # -- slot-column state hooks --------------------------------------------
+    def _pack(self, slot: int, sid: int) -> dict:
+        sess = self.sessions[sid]
+        return {"kv": pack_column(self.cache, self._batch_axes, slot,
+                                  trunc_axes=self._seq_axes,
+                                  trunc_len=sess.steps)}
+
+    def _unpack(self, slot: int, blob: dict) -> None:
+        self.cache = unpack_column(self.cache, self._batch_axes, slot,
+                                   blob["kv"])
+
+    def _reset(self, slot: int) -> None:
+        self.cache = jax.tree.map(
+            lambda a, ax: a.at[(slice(None),) * ax + (slot,)].set(0),
+            self.cache, self._batch_axes)
+
+    # -- cost model ---------------------------------------------------------
+    def _park_cost(self, sid: int) -> float:
+        """Host bytes this session would occupy parked: O(pos) — the
+        non-uniform cost the eviction policy trades against staleness."""
+        return float(self.kv_park_bytes(self.sessions[sid].steps))
+
+    def kv_park_bytes(self, pos: int) -> int:
+        """STRUCTURAL parked footprint of a KV session at position ``pos``
+        (content-independent): sequence-axis leaves scale with pos, fixed
+        leaves (recurrent states, cross caches) count whole."""
+        return self._park_fixed + self._park_per_pos * min(pos, self.seq_cap)
+
+    # -- session lifecycle --------------------------------------------------
+    def open_session(self, prompt) -> int:
+        """Admit a request.  The prompt is fed lazily: the session's first
+        ``decode`` consumes it inside the same chunked scan that generates
+        tokens (prefill steps are just forced-input steps)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size >= self.seq_cap:
+            raise ValueError(f"prompt of {prompt.size} tokens >= "
+                             f"seq_cap={self.seq_cap}")
+        sid = self._alloc_sid()
+        self.sched.admit(sid)  # may raise AdmissionError (back-pressure)
+        self.sessions[sid] = _LMSession(prompt=prompt)
+        self.outputs[sid] = []
+        self._bind(sid)
+        return sid
+
+    def _retire(self, sid: int) -> None:
+        """Take a session that hit seq_cap out of rotation: slot freed for
+        reuse, outputs kept, record marked done (a further decode raises)."""
+        self.sched.release(sid)
+        self.sessions[sid].done = True
+
+    # -- the hot path -------------------------------------------------------
+    def decode(self, want: dict[int, int]) -> dict[int, list[int]]:
+        """Greedily generate ``want[sid]`` tokens per session.
+
+        All pushed sessions advance through chunked ``decode_scan``
+        dispatches over the compiled (S, T_chunk) grid (power-of-two
+        padding buckets, like push_audio); absent sessions stay bit-frozen.
+        Parked sessions are resumed first (possibly evicting idle ones).
+        A session whose position would pass ``seq_cap`` is truncated to the
+        cap and retired.  Returns {sid: newly generated tokens}."""
+        if len(want) > self.n_slots:
+            raise ValueError(
+                f"{len(want)} sessions pushed but only {self.n_slots} slots; "
+                "split the decode or grow the grid")
+        for sid, n in want.items():
+            if sid not in self.sessions:
+                raise KeyError(f"unknown session {sid}")
+            if self.sessions[sid].done:
+                raise RuntimeError(f"session {sid} retired at "
+                                   f"seq_cap={self.seq_cap}")
+            if n < 0:
+                raise ValueError(f"session {sid}: want {n} < 0")
+        self._touch_and_bind(want)
+
+        # steps to run per lane: feed the prompt remainder, then generate.
+        # Emission invariant: with Q = max(len(prompt), 1), step f emits a
+        # token iff f >= Q - 1, so generated = max(0, fed - Q + 1).
+        remaining = {}
+        for sid, n in want.items():
+            sess = self.sessions[sid]
+            q = max(len(sess.prompt), 1)
+            gen = max(0, sess.steps - q + 1)
+            steps = gen + n + q - 1 - sess.steps
+            steps = min(steps, self.seq_cap - sess.steps)  # overflow guard
+            remaining[sid] = max(steps, 0)
+
+        out = {sid: [] for sid in want}
+        while any(remaining.values()):
+            t_pad = self._tick_len(max(remaining.values()))
+            inp = np.zeros((self.n_slots, t_pad), np.int32)
+            n_inp = np.zeros(self.n_slots, np.int32)
+            n_steps = np.zeros(self.n_slots, np.int32)
+            tok = np.zeros(self.n_slots, np.int32)
+            pos = np.zeros(self.n_slots, np.int32)
+            # every BOUND lane must carry its true position even when it is
+            # not decoded this tick: a masked step still writes (discarded)
+            # k/v at row pos, which is only harmless at the lane's own
+            # frozen position (rewritten before its next read) — at pos 0
+            # it would corrupt live history (decode_scan's masking rule)
+            for slot, bsid in self.sched.sid_of.items():
+                pos[slot] = min(self.sessions[bsid].steps, self.seq_cap - 1)
+            lanes = {}
+            for sid, rem in remaining.items():
+                if rem == 0:
+                    continue
+                sess = self.sessions[sid]
+                s = self.sched.slot_of[sid]
+                lanes[sid] = s
+                n = min(rem, t_pad)
+                feed = sess.prompt[sess.steps : sess.steps + n]
+                inp[s, :feed.size] = feed
+                n_inp[s] = feed.size
+                n_steps[s] = n
+                tok[s] = sess.tok
+                pos[s] = sess.steps
+            self.cache, tok2, _, ys = self._decode_scan(
+                self._params, self.cache, jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(inp), jnp.asarray(n_inp), jnp.asarray(n_steps))
+            self.dispatches += 1
+            tok2, ys = np.asarray(tok2), np.asarray(ys)
+            for sid, s in lanes.items():
+                sess = self.sessions[sid]
+                q = max(len(sess.prompt), 1)
+                n = int(n_steps[s])
+                emitted = [int(ys[s, j]) for j in range(n)
+                           if sess.steps + j >= q - 1]
+                self.outputs[sid].extend(emitted)
+                out[sid].extend(emitted)
+                sess.steps += n
+                sess.tok = int(tok2[s])
+                remaining[sid] -= n
+                sess.last = {"tokens": emitted, "step": sess.steps}
+        for sid in want:
+            if self.sessions[sid].steps >= self.seq_cap:
+                self._retire(sid)
+        return out
+
+    # -- persistence hooks ---------------------------------------------------
+    def _session_spill_meta(self, sid: int) -> dict:
+        s = self.sessions[sid]
+        return {"steps": int(s.steps), "tok": int(s.tok),
+                "prompt": np.asarray(s.prompt).tolist(),
+                "outputs": self.outputs.get(sid, [])}
+
+    def _restore_session(self, info: dict):
+        return _LMSession(steps=int(info.get("steps", 0)),
+                          tok=int(info.get("tok", 0)),
+                          prompt=np.asarray(info.get("prompt", []), np.int32))
+
+    def _restore_validate(self, parking: dict, meta: dict) -> None:
+        """All-or-nothing gate: a spill from an incompatible service (longer
+        seq_cap, different cache geometry) must be refused BEFORE any
+        mutation, not crash mid-_bind on the first decode."""
+        for sid, blob in parking.items():
+            info = meta.get("sessions", {}).get(str(sid), {})
+            if int(info.get("steps", 0)) > self.seq_cap:
+                raise ValueError(
+                    f"session {sid} parked at position {info.get('steps')} "
+                    f"> this service's seq_cap={self.seq_cap}")
+
+            def check(a, bax, sax, p):
+                want = a.shape[:bax] + a.shape[bax + 1:]
+                got = np.asarray(p).shape
+                t = sax - (sax > bax) if sax >= 0 else -1
+                ok = len(got) == len(want) and all(
+                    (g <= w if i == t else g == w)
+                    for i, (g, w) in enumerate(zip(got, want)))
+                if not ok:
+                    raise ValueError(
+                        f"session {sid}: parked cache leaf {got} does not "
+                        f"fit this service's column {want}")
+                return None
+
+            try:
+                jax.tree.map(check, self.cache, self._batch_axes,
+                             self._seq_axes, blob["kv"])
+            except (KeyError, ValueError, TypeError) as e:
+                raise ValueError(f"incompatible LM spill: {e}") from e
+
+    def _post_restore(self, restored: list[int], meta: dict) -> None:
+        # generated outputs live outside the session record so they survive
+        # close/retire; rebuild them from the spill meta
+        for sid in restored:
+            info = meta.get("sessions", {}).get(str(sid), {})
+            self.outputs[sid] = [int(t) for t in info.get("outputs", [])]
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def slot_pos(self) -> np.ndarray:
+        """Per-slot int32 positions (0 for free slots) — the host mirror the
+        historical LMServer exposed as ``pos``."""
+        pos = np.zeros(self.n_slots, np.int32)
+        for slot, sid in self.sched.sid_of.items():
+            pos[slot] = self.sessions[sid].steps
+        return pos
+
+    def poll(self, sid: int) -> dict:
+        sess = self.sessions[sid]
+        state = ("done" if sess.done else
+                 "active" if self.sched.is_bound(sid) else "parked")
+        return {"state": state, "slot": self.sched.slot_of.get(sid),
+                "steps": sess.steps,
+                "prompt_left": max(0, len(sess.prompt) - sess.steps),
+                "generated": len(self.outputs.get(sid, [])),
+                "last": sess.last}
+
+    def _extra_stats(self) -> dict:
+        return {"seq_cap": self.seq_cap,
+                "slot_state_bytes": self.kv_park_bytes(self.seq_cap),
+                "parked_bytes": {sid: self._park_cost(sid)
+                                 for sid in self.parking}}

@@ -17,9 +17,12 @@ Policies:
     breaks staleness near-ties in favour of the cheapest-to-park session:
     among candidates whose last_used clock is within ``stale_window`` of
     the oldest (window 0 = exact LRU ties only), the minimum park cost
-    wins.  Parked-state bytes are uniform across fp32 sessions, but the
-    quantized service's nibble-packed parkings make them differ — this is
-    the policy hook that exploits that;
+    wins.  Costs are genuinely non-uniform across the services built on
+    this scheduler: fp32 TCN parkings are fixed O(receptive-field) bytes,
+    the quantized service's nibble-packed parkings ~8x less, and LM KV
+    parkings grow O(pos) with the session's decoded length
+    (sessions/lm.LMSessionService wires that in as its default cost_fn) —
+    one policy arbitrates all of them;
   * release — closing a session frees its slot for immediate reuse.
 """
 

@@ -1,8 +1,21 @@
-"""Request-loop façade over the multi-tenant streaming session subsystem.
+"""Request-loop façades over the multi-tenant slot-grid session subsystem.
 
-``StreamSessionService`` virtualizes the paper's deployment — one shared TCN
-embedder, many per-user prototype classifiers, O(receptive-field) stream
-state per user — behind five verbs:
+Two layers live here:
+
+``SlotGridService`` — the service-AGNOSTIC core.  Everything that made the
+TCN streaming service churn-tolerant turns out to be independent of what a
+"slot" holds: a fixed compiled slot grid, admission control + LRU/cost
+eviction (sessions/scheduler), a host-side parking lot of packed slot
+columns, power-of-two chunk padding buckets (compiled programs bounded by
+log2(T_chunk)+1), and checkpoint/store spill/restore of the lot.  Concrete
+services supply four state hooks — ``_pack``/``_unpack``/``_reset`` move
+one slot's column between device and host, ``_session_cls`` carries the
+per-session host record — plus optional lifecycle/persistence hooks.  The
+TCN service parks O(receptive-field) ring pytrees; the LM service
+(sessions/lm.py) parks KV-cache columns truncated to the live position; a
+third modality would only write the hooks.
+
+``StreamSessionService`` — the TCN streaming façade on top of it:
 
     open_session / push_audio / enroll_shots / poll / close
 
@@ -15,22 +28,16 @@ become per-step validity masks, so short chunks and absent sessions stay
 bit-frozen.  A single (C_in,) sample is the T=1 special case and keeps the
 historical per-sample result surface.
 
-Admission, eviction to the host-side parking lot, slot reuse, and
-mid-stream tenant enrollment all happen without recompiling; chunk padding
-is bucketed to powers of two capped at T_chunk, so the number of compiled
-programs is bounded by log2(T_chunk)+1.  A parked session resumes
-bit-identically in any free slot because its entire stream position is its
-packed pytree; with ``quantize=True`` parkings are nibble-packed (~8x
-smaller, still bit-identical).  ``spill_parking``/``restore_parking``
-persist the lot through checkpoint/store so sessions survive restarts.
+A parked session resumes bit-identically in any free slot because its
+entire stream position is its packed pytree; with ``quantize=True``
+parkings are nibble-packed (~8x smaller, still bit-identical).
+``spill_parking``/``restore_parking`` persist the lot through
+checkpoint/store so sessions survive restarts.
 
 Passing a ``mesh`` shards the slot grid over the mesh's ``data`` axis and
 the tenant banks over ``model`` (sessions/state.grid_pspecs,
 sessions/tenancy.bank_pspecs); on a 1-device mesh everything degenerates
 to replicated and behaviour is unchanged.
-
-Built for the TCN bundle (models/build.build_tcn_bundle); the LM slot grid
-in serving/engine.py shares the same SlotScheduler.
 """
 
 from __future__ import annotations
@@ -60,7 +67,9 @@ from repro.sessions.tenancy import (
     bank_clear_tenant,
     bank_fc,
     bank_init,
+    bank_pack_tenant,
     bank_pspecs,
+    bank_row_bytes,
     bank_unpack_tenant,
     bank_update_class,
 )
@@ -69,15 +78,234 @@ NO_TENANT = -1
 
 
 @dataclass
-class _Session:
-    tenant: int = NO_TENANT
-    dedicated: bool = False  # tenant row was created for this session
+class SessionRecord:
+    """Minimal per-session host record; services subclass for extra fields.
+    ``steps`` doubles as the fresh-session marker: a bound session with
+    steps == 0 gets a zeroed column instead of a parked blob."""
     steps: int = 0
     last: dict | None = None
 
 
-class StreamSessionService:
+# ---------------------------------------------------------------------------
+# Service-agnostic slot-grid core
+# ---------------------------------------------------------------------------
+
+class SlotGridService:
+    """Fixed compiled slot grid + scheduler + parking lot + persistence.
+
+    Subclasses must provide the device-state hooks:
+
+      _pack(slot, sid) -> blob   one slot's column -> host parked blob
+      _unpack(slot, blob)        parked blob -> column of ``slot``
+      _reset(slot)               zero a column for a fresh session
+
+    and may override the lifecycle hooks (_on_bind/_on_unbind/_on_close)
+    and the spill/restore meta hooks (_session_spill_meta/_spill_extra/
+    _restore_validate/_restore_apply/_restore_session).  All placement
+    policy (free slots, LRU, pinning, cost-aware tie-breaks, admission
+    back-pressure) stays in sessions/scheduler.SlotScheduler.
+    """
+
+    _session_cls = SessionRecord
+
+    def __init__(self, n_slots: int, *, t_chunk: int = 1,
+                 max_sessions: int | None = None,
+                 cost_fn: Callable[[int], float] | None = None,
+                 stale_window: int = 0):
+        if t_chunk < 1:
+            raise ValueError(f"t_chunk must be >= 1, got {t_chunk}")
+        self.n_slots = n_slots
+        self.t_chunk = t_chunk
+        self.sched = SlotScheduler(n_slots, max_sessions, cost_fn=cost_fn,
+                                   stale_window=stale_window)
+        self.parking: dict[int, dict] = {}        # sid -> host blob
+        self.sessions: dict[int, Any] = {}        # sid -> session record
+        self._next_sid = 0
+        self.evictions = 0
+        self.dispatches = 0  # jitted calls (the amortization metric)
+
+    # -- state hooks (subclass responsibility) ------------------------------
+    def _pack(self, slot: int, sid: int) -> dict:
+        raise NotImplementedError
+
+    def _unpack(self, slot: int, blob: dict) -> None:
+        raise NotImplementedError
+
+    def _reset(self, slot: int) -> None:
+        raise NotImplementedError
+
+    def _on_bind(self, sid: int, slot: int) -> None:
+        pass
+
+    def _on_unbind(self, slot: int) -> None:
+        pass
+
+    def _on_close(self, sid: int, sess) -> None:
+        pass
+
+    # -- lifecycle ----------------------------------------------------------
+    def _alloc_sid(self) -> int:
+        sid = self._next_sid
+        self._next_sid += 1
+        return sid
+
+    def open_session(self, **kw) -> int:
+        """Admit a session and place it on a slot (may evict an idle one)."""
+        sid = self._alloc_sid()
+        self.sched.admit(sid)  # may raise AdmissionError (back-pressure)
+        self.sessions[sid] = self._session_cls(**kw)
+        self._bind(sid)
+        return sid
+
+    def _bind(self, sid: int, pinned: set[int] = frozenset()) -> int:
+        slot, evicted = self.sched.bind(sid, pinned)
+        if evicted is not None:
+            self.parking[evicted] = self._pack(slot, evicted)
+            self.evictions += 1
+        if sid in self.parking:
+            self._unpack(slot, self.parking.pop(sid))
+        elif self.sessions[sid].steps == 0:
+            self._reset(slot)
+        else:  # rebinding after evicted==None cannot lose state
+            raise AssertionError("bound session missing parked state")
+        self._on_bind(sid, slot)
+        return slot
+
+    def park(self, sid: int) -> None:
+        """Explicitly swap a session's slot column to host memory."""
+        slot = self.sched.park(sid)
+        if slot is not None:
+            self.parking[sid] = self._pack(slot, sid)
+            self._on_unbind(slot)
+
+    def close(self, sid: int) -> None:
+        slot = self.sched.release(sid)
+        if slot is not None:
+            self._on_unbind(slot)
+        self.parking.pop(sid, None)
+        sess = self.sessions.pop(sid)
+        self._on_close(sid, sess)
+
+    def _touch_and_bind(self, sids) -> None:
+        """Pre-dispatch placement: pin this tick's sessions, then bind any
+        that are parked (possibly evicting idle neighbors)."""
+        pinned = set(sids)
+        for sid in sids:
+            if sid not in self.sessions:
+                raise KeyError(f"unknown session {sid}")
+            self.sched.touch(sid)
+            if not self.sched.is_bound(sid):
+                self._bind(sid, pinned)
+
+    # -- chunk padding buckets ----------------------------------------------
+    def _tick_len(self, remaining: int) -> int:
+        """Bucketed tick length: full T_chunk while enough work remains,
+        else the next power of two — bounds compiled programs to
+        log2(T_chunk)+1 shapes instead of one per ragged length."""
+        if remaining >= self.t_chunk:
+            return self.t_chunk
+        n = 1
+        while n < remaining:
+            n <<= 1
+        return min(n, self.t_chunk)
+
+    # -- persistence --------------------------------------------------------
+    def _session_spill_meta(self, sid: int) -> dict:
+        return {"steps": self.sessions[sid].steps}
+
+    def _spill_extra(self) -> dict:
+        return {}
+
+    def _restore_validate(self, parking: dict, meta: dict) -> None:
+        pass
+
+    def _restore_apply(self, meta: dict) -> None:
+        pass
+
+    def _restore_session(self, info: dict):
+        return self._session_cls(steps=int(info.get("steps", 0)))
+
+    def spill_parking(self, path: str, *, include_bound: bool = False) -> str:
+        """Persist the parking lot to disk through checkpoint/store, so
+        sessions survive process restarts.  ``include_bound=True`` parks
+        every bound session first — a full drain for planned shutdown."""
+        if include_bound:
+            for sid in list(self.sched.slot_of):
+                self.park(sid)
+        meta = {"next_sid": self._next_sid,
+                "sessions": {str(sid): self._session_spill_meta(sid)
+                             for sid in self.parking}}
+        meta.update(self._spill_extra())
+        return save_sessions(path, self.parking, meta)
+
+    def restore_parking(self, path: str) -> list[int]:
+        """Adopt a spilled parking lot into this (possibly fresh) service:
+        sessions re-enter parked, with their sids and host records intact;
+        the next push resumes them bit-identically.  Returns the restored
+        sids.
+
+        All-or-nothing: every check (sid collisions, admission capacity,
+        service-specific validation) runs BEFORE the first mutation, so a
+        refused restore leaves the service untouched."""
+        parking, meta = load_sessions(path)
+        meta = meta or {"next_sid": 0, "sessions": {}}
+        for sid in sorted(parking):
+            if sid in self.sessions:
+                raise ValueError(f"session {sid} already live; refuse to "
+                                 "overwrite on restore")
+        cap = self.sched.max_sessions
+        if cap is not None and self.sched.live_sessions + len(parking) > cap:
+            raise AdmissionError(
+                f"restoring {len(parking)} sessions would exceed capacity "
+                f"({self.sched.live_sessions}/{cap} live)")
+        self._restore_validate(parking, meta)
+        self._restore_apply(meta)
+        restored = []
+        for sid, parked in sorted(parking.items()):
+            info = meta["sessions"].get(str(sid), {})
+            self.sched.admit(sid)
+            self.sessions[sid] = self._restore_session(info)
+            self.parking[sid] = parked
+            restored.append(sid)
+        self._next_sid = max(self._next_sid, int(meta.get("next_sid", 0)))
+        self._post_restore(restored, meta)
+        return restored
+
+    def _post_restore(self, restored: list[int], meta: dict) -> None:
+        """Hook: runs once after a successful restore with the spill meta
+        (so subclasses never need to re-read the file)."""
+
+    # -- introspection ------------------------------------------------------
+    def _extra_stats(self) -> dict:
+        return {}
+
+    def stats(self) -> dict:
+        return {
+            "n_slots": self.n_slots,
+            "t_chunk": self.t_chunk,
+            "bound": len(self.sched.slot_of),
+            "parked": len(self.parking),
+            "live_sessions": self.sched.live_sessions,
+            "evictions": self.evictions,
+            "dispatches": self.dispatches,
+            **self._extra_stats(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# The TCN streaming service
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Session(SessionRecord):
+    tenant: int = NO_TENANT
+    dedicated: bool = False  # tenant row was created for this session
+
+
+class StreamSessionService(SlotGridService):
     """Multi-tenant streaming TCN service over a fixed slot grid."""
+
+    _session_cls = _Session
 
     def __init__(self, bundle, params, bn_state=None, *, n_slots: int = 8,
                  max_tenants: int = 8, max_ways: int = 8,
@@ -85,14 +313,12 @@ class StreamSessionService:
                  t_chunk: int = 16, mesh=None,
                  cost_fn: Callable[[int], float] | None = None,
                  stale_window: int = 0):
+        super().__init__(n_slots, t_chunk=t_chunk, max_sessions=max_sessions,
+                         cost_fn=cost_fn, stale_window=stale_window)
         cfg = bundle.cfg
         self.cfg = cfg
-        self.n_slots = n_slots
         self.max_ways = max_ways
         self.quantize = quantize
-        if t_chunk < 1:
-            raise ValueError(f"t_chunk must be >= 1, got {t_chunk}")
-        self.t_chunk = t_chunk
         bn_state = bn_state if bn_state is not None else tcn_empty_state(cfg)
 
         self.states = grid_init(cfg, n_slots)
@@ -105,16 +331,9 @@ class StreamSessionService:
             self.bank = jax.device_put(
                 self.bank, jax.tree.map(nd, bank_pspecs(self.bank, mesh)))
         self.mesh = mesh
-        self.sched = SlotScheduler(n_slots, max_sessions, cost_fn=cost_fn,
-                                   stale_window=stale_window)
-        self.parking: dict[int, dict] = {}        # sid -> host pytree
-        self.sessions: dict[int, _Session] = {}
         self.tenant_of_slot = np.full(n_slots, NO_TENANT, np.int32)
         self._free_tenants = list(range(max_tenants))
         self._tenant_ways = np.zeros(max_tenants, np.int32)  # host mirror
-        self._next_sid = 0
-        self.evictions = 0
-        self.dispatches = 0  # jitted scan calls (the amortization metric)
 
         # params/bn enter the jitted scan as ARGUMENTS, not closure
         # constants: XLA constant-folds closure BN chains differently per
@@ -138,6 +357,23 @@ class StreamSessionService:
         # the service's BN stats and quantize mode
         self._embed = jax.jit(lambda x: bundle.embed_fn(
             params, {"x": x}, state=bn_state, quantize=quantize))
+
+    # -- slot-column state hooks --------------------------------------------
+    def _pack(self, slot: int, sid: int) -> dict:
+        return pack_slot(self.states, slot, pack_u4=self.quantize,
+                         act_scale=self.cfg.act_scale)
+
+    def _unpack(self, slot: int, blob: dict) -> None:
+        self.states = unpack_slot(self.states, slot, blob)
+
+    def _reset(self, slot: int) -> None:
+        self.states = reset_slot(self.states, slot)
+
+    def _on_bind(self, sid: int, slot: int) -> None:
+        self.tenant_of_slot[slot] = self.sessions[sid].tenant
+
+    def _on_unbind(self, slot: int) -> None:
+        self.tenant_of_slot[slot] = NO_TENANT
 
     # -- tenants ------------------------------------------------------------
     def create_tenant(self) -> int:
@@ -168,8 +404,7 @@ class StreamSessionService:
             if tenant in self._free_tenants:  # claim an uncreated row
                 self._free_tenants.remove(tenant)
                 claimed = True
-        sid = self._next_sid
-        self._next_sid += 1
+        sid = self._alloc_sid()
         try:
             self.sched.admit(sid)  # may raise AdmissionError (back-pressure)
         except Exception:
@@ -180,37 +415,7 @@ class StreamSessionService:
         self._bind(sid)
         return sid
 
-    def _pack(self, slot: int) -> dict:
-        return pack_slot(self.states, slot, pack_u4=self.quantize,
-                         act_scale=self.cfg.act_scale)
-
-    def _bind(self, sid: int, pinned: set[int] = frozenset()) -> int:
-        slot, evicted = self.sched.bind(sid, pinned)
-        if evicted is not None:
-            self.parking[evicted] = self._pack(slot)
-            self.evictions += 1
-        if sid in self.parking:
-            self.states = unpack_slot(self.states, slot, self.parking.pop(sid))
-        elif self.sessions[sid].steps == 0:
-            self.states = reset_slot(self.states, slot)
-        else:  # rebinding after evicted==None cannot lose state
-            raise AssertionError("bound session missing parked state")
-        self.tenant_of_slot[slot] = self.sessions[sid].tenant
-        return slot
-
-    def park(self, sid: int) -> None:
-        """Explicitly swap a session's stream state to host memory."""
-        slot = self.sched.park(sid)
-        if slot is not None:
-            self.parking[sid] = self._pack(slot)
-            self.tenant_of_slot[slot] = NO_TENANT
-
-    def close(self, sid: int) -> None:
-        slot = self.sched.release(sid)
-        if slot is not None:
-            self.tenant_of_slot[slot] = NO_TENANT
-        self.parking.pop(sid, None)
-        sess = self.sessions.pop(sid)
+    def _on_close(self, sid: int, sess) -> None:
         # a dedicated tenant row dies with its last session: if other
         # sessions share the row, ownership passes to one of them so the
         # row is still freed when the final sharer closes
@@ -222,50 +427,25 @@ class StreamSessionService:
             else:
                 self.close_tenant(sess.tenant)
 
-    # -- persistence --------------------------------------------------------
-    def spill_parking(self, path: str, *, include_bound: bool = False) -> str:
-        """Persist the parking lot (and each parked session's tenant row) to
-        disk through checkpoint/store, so sessions survive process restarts.
-        ``include_bound=True`` parks every bound session first — a full
-        drain for planned shutdown."""
-        if include_bound:
-            for sid in list(self.sched.slot_of):
-                self.park(sid)
-        sess_meta, tenant_meta = {}, {}
+    # -- persistence hooks ---------------------------------------------------
+    def _session_spill_meta(self, sid: int) -> dict:
+        s = self.sessions[sid]
+        return {"tenant": s.tenant, "dedicated": s.dedicated, "steps": s.steps}
+
+    def _spill_extra(self) -> dict:
+        tenant_meta = {}
         for sid in self.parking:
-            s = self.sessions[sid]
-            sess_meta[str(sid)] = {"tenant": s.tenant,
-                                   "dedicated": s.dedicated, "steps": s.steps}
-            if s.tenant != NO_TENANT:
-                tenant_meta[str(s.tenant)] = {
-                    "s_sums": np.asarray(self.bank.s_sums[s.tenant]).tolist(),
-                    "counts": np.asarray(self.bank.counts[s.tenant]).tolist(),
-                    "n_ways": int(self._tenant_ways[s.tenant]),
+            t = self.sessions[sid].tenant
+            if t != NO_TENANT:
+                row = bank_pack_tenant(self.bank, t)
+                tenant_meta[str(t)] = {
+                    "s_sums": row["s_sums"].tolist(),
+                    "counts": row["counts"].tolist(),
+                    "n_ways": int(self._tenant_ways[t]),
                 }
-        meta = {"next_sid": self._next_sid, "sessions": sess_meta,
-                "tenants": tenant_meta}
-        return save_sessions(path, self.parking, meta)
+        return {"tenants": tenant_meta}
 
-    def restore_parking(self, path: str) -> list[int]:
-        """Adopt a spilled parking lot into this (possibly fresh) service:
-        sessions re-enter parked, with their sids, step counts, tenant
-        bindings, and prototype rows intact; the next push_audio resumes
-        them bit-identically.  Returns the restored sids.
-
-        All-or-nothing: every check (sid collisions, admission capacity,
-        tenant-row availability) runs BEFORE the first mutation, so a
-        refused restore leaves the service untouched."""
-        parking, meta = load_sessions(path)
-        meta = meta or {"next_sid": 0, "sessions": {}, "tenants": {}}
-        for sid in sorted(parking):
-            if sid in self.sessions:
-                raise ValueError(f"session {sid} already live; refuse to "
-                                 "overwrite on restore")
-        cap = self.sched.max_sessions
-        if cap is not None and self.sched.live_sessions + len(parking) > cap:
-            raise AdmissionError(
-                f"restoring {len(parking)} sessions would exceed capacity "
-                f"({self.sched.live_sessions}/{cap} live)")
+    def _restore_validate(self, parking: dict, meta: dict) -> None:
         for t_str in meta.get("tenants", {}):
             t = int(t_str)
             if t >= len(self._tenant_ways):
@@ -274,6 +454,8 @@ class StreamSessionService:
             if t not in self._free_tenants:
                 raise ValueError(f"tenant {t} already in use; refuse to "
                                  "overwrite its prototype row on restore")
+
+    def _restore_apply(self, meta: dict) -> None:
         for t_str, row in meta.get("tenants", {}).items():
             t = int(t_str)
             self._free_tenants.remove(t)
@@ -282,31 +464,13 @@ class StreamSessionService:
                 "counts": np.asarray(row["counts"], np.float32),
                 "n_ways": np.asarray(row["n_ways"], np.int32)})
             self._tenant_ways[t] = int(row["n_ways"])
-        restored = []
-        for sid, parked in sorted(parking.items()):
-            info = meta["sessions"].get(str(sid), {})
-            self.sched.admit(sid)
-            self.sessions[sid] = _Session(
-                tenant=int(info.get("tenant", NO_TENANT)),
-                dedicated=bool(info.get("dedicated", False)),
-                steps=int(info.get("steps", 0)))
-            self.parking[sid] = parked
-            restored.append(sid)
-        self._next_sid = max(self._next_sid, int(meta.get("next_sid", 0)))
-        return restored
+
+    def _restore_session(self, info: dict):
+        return _Session(tenant=int(info.get("tenant", NO_TENANT)),
+                        dedicated=bool(info.get("dedicated", False)),
+                        steps=int(info.get("steps", 0)))
 
     # -- the hot path -------------------------------------------------------
-    def _tick_len(self, remaining: int) -> int:
-        """Bucketed tick length: full T_chunk while enough samples remain,
-        else the next power of two — bounds compiled programs to
-        log2(T_chunk)+1 shapes instead of one per ragged length."""
-        if remaining >= self.t_chunk:
-            return self.t_chunk
-        n = 1
-        while n < remaining:
-            n <<= 1
-        return min(n, self.t_chunk)
-
     def push_audio(self, chunks: dict[int, Any]) -> dict[int, dict]:
         """Advance sessions by ragged time chunks.
 
@@ -340,13 +504,7 @@ class StreamSessionService:
             if a.shape[0] == 0:
                 raise ValueError(f"session {sid}: empty chunk")
             arrs[sid] = a
-        pinned = set(chunks)
-        for sid in chunks:
-            if sid not in self.sessions:
-                raise KeyError(f"unknown session {sid}")
-            self.sched.touch(sid)
-            if not self.sched.is_bound(sid):
-                self._bind(sid, pinned)
+        self._touch_and_bind(chunks)
 
         slot_of = {sid: self.sched.slot_of[sid] for sid in arrs}
         lens = {sid: a.shape[0] for sid, a in arrs.items()}
@@ -437,18 +595,12 @@ class StreamSessionService:
             "last": sess.last,
         }
 
-    def stats(self) -> dict:
-        return {
-            "n_slots": self.n_slots,
-            "t_chunk": self.t_chunk,
-            "bound": len(self.sched.slot_of),
-            "parked": len(self.parking),
-            "live_sessions": self.sched.live_sessions,
-            "evictions": self.evictions,
-            "dispatches": self.dispatches,
-            # parked footprint: what one session costs in the parking lot
-            # (nibble-packed when the service runs quantize=True).
-            # Structural, not content-dependent — stable for CI tracking.
-            "slot_state_bytes": slot_park_bytes(self.cfg,
-                                                quantize=self.quantize),
-        }
+    def _extra_stats(self) -> dict:
+        # parked footprints — structural, not content-dependent, so both
+        # are stable for CI tracking: what one session costs in the
+        # parking lot (nibble-packed when the service runs quantize=True)
+        # and what one tenant's prototype row costs in a spill (the
+        # paper's 26 B/way personalization-cost story).
+        return {"slot_state_bytes": slot_park_bytes(self.cfg,
+                                                    quantize=self.quantize),
+                "tenant_row_bytes": bank_row_bytes(self.bank)}

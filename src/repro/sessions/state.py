@@ -33,6 +33,15 @@ the same logical-axis rules table the rest of the codebase uses
 (sharding/rules: "slots" -> "data", "tenants" -> "model"), so one service
 spans a mesh without recompiles; on a 1-device mesh everything degenerates
 to replicated and the service runs unchanged.
+
+``leaf_axes``/``pack_column``/``unpack_column`` generalize the parking-lot
+machinery to state pytrees whose per-session axis is NOT leading — an LM
+KV cache stacks sessions on axis 1 of (L, B, S, H, Dh) leaves.  The axis
+tree is derived by shape-diffing two ``eval_shape`` builds (never by
+sniffing concrete extents that might coincide), and KV columns are
+truncated to the session's live positions on pack, so a parked KV blob
+costs O(pos) host bytes — the genuinely non-uniform per-session cost the
+scheduler's cost-aware eviction exploits (sessions/lm.py).
 """
 
 from __future__ import annotations
@@ -207,6 +216,84 @@ def slot_state_bytes(states: dict) -> int:
     n_slots = jax.tree.leaves(states)[0].shape[0]
     total = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(states))
     return total // n_slots
+
+
+# ---------------------------------------------------------------------------
+# Generalized columns: per-leaf session axes (LM KV caches and friends)
+# ---------------------------------------------------------------------------
+
+def leaf_axes(make_a, make_b):
+    """Per-leaf axis tree: for each leaf, the first axis whose extent
+    differs between ``jax.eval_shape(make_a)`` and ``jax.eval_shape(make_b)``
+    (-1 where no axis differs).  Build the two trees with one structural
+    parameter changed (B vs B+1 for the session axis, S vs S+1 for the
+    sequence axis) — axis identity by construction, never by matching a
+    concrete extent that might coincide with another dim."""
+    sa, sb = jax.eval_shape(make_a), jax.eval_shape(make_b)
+
+    def axis_of(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        return -1
+
+    return jax.tree.map(axis_of, sa, sb)
+
+
+def _col_index(ax: int, slot: int) -> tuple:
+    return (slice(None),) * ax + (slot,)
+
+
+def pack_column(tree, axes, slot: int, *, trunc_axes=None, trunc_len=None,
+                pack_u4: bool = False, act_scale: float = 0.25) -> dict:
+    """Copy one session's column of an arbitrary SoA pytree to host memory.
+
+    ``axes`` is the per-leaf session-axis tree (``leaf_axes``); every leaf
+    must have one (ax >= 0).  With ``trunc_axes``/``trunc_len``, leaves that
+    carry a sequence axis are sliced to their first ``trunc_len`` positions
+    (a KV cache column is only populated up to the session's position, so a
+    parked blob costs O(pos) bytes; leaves without a sequence axis — e.g.
+    recurrent states — are kept whole).  ``pack_u4`` routes each leaf
+    through the same exactness-checked nibble packer the TCN parking lot
+    uses; leaves off the u4 grid stay raw, so the blob is unconditionally
+    bit-identical on resume."""
+    def enc(a, ax, tax):
+        if ax < 0:
+            raise ValueError("pack_column: leaf without a session axis")
+        col = np.asarray(a[_col_index(ax, slot)])
+        if tax is not None and tax >= 0 and trunc_len is not None:
+            t = tax - (tax > ax)  # axis index after the session axis is gone
+            col = np.ascontiguousarray(
+                col[(slice(None),) * t + (slice(0, int(trunc_len)),)])
+        if pack_u4:
+            p = _pack_leaf_u4(col, act_scale)
+            if p is not None:
+                return p
+        return col
+
+    if trunc_axes is None:
+        trunc_axes = jax.tree.map(lambda _: -1, axes)
+    return jax.tree.map(enc, tree, axes, trunc_axes)
+
+
+def unpack_column(tree, axes, slot: int, parked: dict):
+    """Restore a ``pack_column`` blob into ``slot`` of ``tree`` (any free
+    slot works — columns are slot-position independent).  Truncated leaves
+    are zero-extended back to the compiled extent: positions past the
+    parked length were never written by the per-lane decode, so zero is
+    exactly the uninterrupted run's content."""
+    def put(a, ax, p):
+        col = np.asarray(p)
+        if col.dtype != a.dtype and col.dtype.itemsize == a.dtype.itemsize:
+            col = col.view(a.dtype)  # npz round trip loses exotic dtypes
+        want = a.shape[:ax] + a.shape[ax + 1:]
+        if col.shape != want:  # zero-extend a truncated sequence axis
+            full = np.zeros(want, col.dtype)
+            full[tuple(slice(0, s) for s in col.shape)] = col
+            col = full
+        return a.at[_col_index(ax, slot)].set(jnp.asarray(col, a.dtype))
+
+    return jax.tree.map(put, tree, axes, decode_parked(parked))
 
 
 def slot_park_bytes(cfg: ArchConfig, *, quantize: bool = False) -> int:

@@ -116,10 +116,19 @@ def bank_fc(bank: TenantBank):
 
 
 def bank_pack_tenant(bank: TenantBank, tenant: int) -> dict:
-    """Host-side copy of one tenant's row (for spilling a cold tenant)."""
+    """Host-side copy of one tenant's row — the unit the service spills
+    alongside a parked session so personalization survives restarts
+    (StreamSessionService._spill_extra / _restore_apply)."""
     return {"s_sums": np.asarray(bank.s_sums[tenant]),
             "counts": np.asarray(bank.counts[tenant]),
             "n_ways": np.asarray(bank.n_ways[tenant])}
+
+
+def bank_row_bytes(bank: TenantBank) -> int:
+    """Host bytes of one tenant row (the per-tenant spill cost): the paper's
+    26 B/way on the ASIC corresponds to s_sums + counts + n_ways here."""
+    return int((bank.s_sums.nbytes + bank.counts.nbytes) // bank.s_sums.shape[0]
+               + bank.n_ways.dtype.itemsize)
 
 
 def bank_unpack_tenant(bank: TenantBank, tenant: int, packed: dict) -> TenantBank:

@@ -14,7 +14,6 @@ import threading
 from contextlib import contextmanager
 
 import jax
-from jax.sharding import PartitionSpec as P
 
 from repro.sharding.rules import pspec, resolve_rules
 

@@ -13,8 +13,8 @@ Mesh axes (launch/mesh.py): ``("pod", "data", "model")`` multi-pod or
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,6 @@ params.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
 from typing import Callable, NamedTuple
 
 import jax

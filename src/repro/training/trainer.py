@@ -20,7 +20,7 @@ Distributed optimization levers (wired via TrainConfig):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple
 
 import jax

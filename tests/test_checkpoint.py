@@ -1,7 +1,6 @@
 """Fault tolerance: atomic checkpoints, corrupt fallback, bitwise resume."""
 
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,366 @@
+"""LM sessions: chunked multi-token decode exactness, KV-cache park/resume
+bit-identity, seq_cap retirement, int32 position discipline, persistence,
+and the mixed fp32/u4/KV churn property test."""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs import get_config
+from repro.models import build_bundle
+from repro.models.tcn import tcn_empty_state
+from repro.sessions import (
+    AdmissionError,
+    LMSessionService,
+    StreamSessionService,
+    parked_bytes,
+)
+
+settings.register_profile("lm", deadline=None, max_examples=10)
+settings.load_profile("lm")
+
+
+@functools.lru_cache(maxsize=None)
+def _lm_setup(seed=0):
+    cfg = get_config("olmo-1b").smoke().replace(
+        n_layers=2, d_model=32, d_ff=64, vocab_size=64, head_dim=16)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(seed))
+    return cfg, bundle, params
+
+
+def _svc(n_slots=2, seq_cap=48, t_chunk=8, **kw):
+    cfg, bundle, params = _lm_setup()
+    return LMSessionService(bundle, params, n_slots=n_slots, seq_cap=seq_cap,
+                            t_chunk=t_chunk, **kw)
+
+
+# ---------------------------------------------------------------------------
+# chunked decode exactness
+# ---------------------------------------------------------------------------
+
+def test_chunked_decode_matches_per_token_decode():
+    """decode at t_chunk=16 emits exactly the tokens of t_chunk=1 decoding
+    (the cross-program bit-exactness discipline), in ~1/16 the dispatches."""
+    chunked = _svc(t_chunk=16)
+    stepwise = _svc(t_chunk=1)
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    a = chunked.open_session(prompt)
+    b = stepwise.open_session(prompt)
+    d0c, d0s = chunked.dispatches, stepwise.dispatches
+    out_c = chunked.decode({a: 20})[a]
+    out_s = stepwise.decode({b: 20})[b]
+    assert out_c == out_s
+    assert len(out_c) == 20
+    # 5 prompt + 20 gen - 1 = 24 steps: 2 chunked dispatches vs 24
+    assert chunked.dispatches - d0c == 2
+    assert stepwise.dispatches - d0s == 24
+
+
+def test_chunk_boundary_invariance():
+    """ANY split of the same decode across calls yields the same stream."""
+    whole = _svc(t_chunk=8)
+    split = _svc(t_chunk=8)
+    prompt = np.array([7, 9], np.int32)
+    a = whole.open_session(prompt)
+    b = split.open_session(prompt)
+    out_a = whole.decode({a: 18})[a]
+    out_b = []
+    for n in (1, 5, 2, 7, 3):
+        out_b += split.decode({b: n})[b]
+    assert out_a == out_b
+
+
+def test_interleaved_sessions_do_not_perturb_each_other():
+    """Admitting and decoding a second request mid-decode leaves the first
+    request's token stream bit-identical (per-lane positions: no snapshot
+    or rollback machinery needed)."""
+    ctl = _svc(n_slots=2)
+    c = ctl.open_session(np.array([7, 9, 4], np.int32))
+    want = ctl.decode({c: 11})[c]
+
+    svc = _svc(n_slots=2)
+    r = svc.open_session(np.array([7, 9, 4], np.int32))
+    got = svc.decode({r: 3})[r]
+    r2 = svc.open_session(np.array([1, 2], np.int32))
+    got += svc.decode({r: 4, r2: 4})[r]
+    got += svc.decode({r: 4})[r]
+    assert got == want
+
+
+def test_recurrent_cache_bundles_masked_by_value():
+    """RWKV caches are recurrent states, not position-indexed rows: masked
+    steps must freeze them by VALUE (the per-leaf seq_axes discipline), or
+    ragged dispatches would silently advance absent lanes.  Pin the whole
+    contract: chunk invariance, no cross-lane perturbation, park/resume."""
+    cfg = get_config("rwkv6-1.6b").smoke().replace(
+        n_layers=2, d_model=32, d_ff=64, vocab_size=64, rwkv_head_dim=16)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    mk = lambda n_slots, **kw: LMSessionService(
+        bundle, params, n_slots=n_slots, seq_cap=64, t_chunk=8, **kw)
+
+    ctl = mk(2)
+    c = ctl.open_session(np.array([3, 1, 4], np.int32))
+    want = ctl.decode({c: 12})[c]
+
+    svc = mk(2, max_sessions=8)
+    a = svc.open_session(np.array([3, 1, 4], np.int32))
+    got = svc.decode({a: 3})[a]
+    b = svc.open_session(np.array([9], np.int32))
+    got += svc.decode({a: 2, b: 5})[a]  # ragged: b's lane masks a's tail
+    b2 = svc.open_session(np.array([7], np.int32))  # evicts LRU -> parks a
+    assert svc.poll(a)["state"] == "parked"
+    svc.decode({b: 1, b2: 1})
+    got += svc.decode({a: 7})[a]  # resume in whichever slot frees up
+    assert got == want
+    assert svc.stats()["evictions"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# KV park/resume
+# ---------------------------------------------------------------------------
+
+def test_evict_park_resume_bit_identical():
+    """A session evicted mid-generation and resumed (in a different slot)
+    emits bit-identical tokens to an uninterrupted control run."""
+    ctl = _svc(n_slots=2, max_sessions=8)
+    c = ctl.open_session(np.array([5, 6], np.int32))
+    want = ctl.decode({c: 16})[c]
+
+    svc = _svc(n_slots=2, max_sessions=8)
+    a = svc.open_session(np.array([5, 6], np.int32))
+    got = svc.decode({a: 6})[a]
+    # two newer sessions force slot pressure; a is LRU -> evicted
+    b1 = svc.open_session(np.array([1], np.int32))
+    b2 = svc.open_session(np.array([2], np.int32))
+    assert svc.poll(a)["state"] == "parked"
+    svc.decode({b1: 3, b2: 3})
+    got += svc.decode({a: 10})[a]  # resume evicts an idle neighbor
+    assert svc.stats()["evictions"] >= 2
+    assert got == want
+
+
+def test_explicit_park_blob_is_o_pos():
+    """Parked KV blobs are truncated to the live position: a longer session
+    parks strictly more bytes (the non-uniform cost the policy uses)."""
+    svc = _svc(n_slots=2, max_sessions=4)
+    a = svc.open_session(np.array([1, 2, 3], np.int32))
+    b = svc.open_session(np.array([4], np.int32))
+    svc.decode({a: 12, b: 2})
+    svc.park(a)
+    svc.park(b)
+    ba, bb = parked_bytes(svc.parking[a]), parked_bytes(svc.parking[b])
+    assert ba > bb > 0
+    assert svc.kv_park_bytes(svc.sessions[a].steps) == ba
+    # ... and the default cost-aware eviction prefers the cheap session:
+    # park cost is position-proportional, so with a wide stale window the
+    # short session b is evicted before the long-lived a
+    svc2 = _svc(n_slots=2, max_sessions=4, stale_window=1 << 30)
+    a2 = svc2.open_session(np.array([1, 2, 3], np.int32))
+    b2 = svc2.open_session(np.array([4], np.int32))
+    svc2.decode({a2: 12, b2: 2})
+    svc2.sched.touch(b2)  # a2 is LRU but far more expensive to park
+    svc2.open_session(np.array([9], np.int32))
+    assert svc2.poll(b2)["state"] == "parked"
+    assert svc2.poll(a2)["state"] == "active"
+
+
+def test_park_resume_roundtrips_through_disk(tmp_path):
+    """Spilled KV sessions survive a process restart (fresh service) and
+    resume bit-identically — bfloat16 cache columns included."""
+    ctl = _svc(n_slots=2)
+    c = ctl.open_session(np.array([8, 3], np.int32))
+    want = ctl.decode({c: 14})[c]
+
+    svc = _svc(n_slots=2)
+    s = svc.open_session(np.array([8, 3], np.int32))
+    first = svc.decode({s: 5})[s]
+    path = str(tmp_path / "lm_sessions.npz")
+    svc.spill_parking(path, include_bound=True)
+    assert svc.poll(s)["state"] == "parked"
+
+    fresh = _svc(n_slots=2)  # "restart": brand-new service, same weights
+    restored = fresh.restore_parking(path)
+    assert restored == [s]
+    assert fresh.outputs[s] == first  # generated-so-far came back
+    tail = fresh.decode({s: 9})[s]
+    assert first + tail == want
+
+
+# ---------------------------------------------------------------------------
+# seq_cap guard + int32 positions
+# ---------------------------------------------------------------------------
+
+def test_seq_cap_retires_instead_of_wrapping():
+    svc = _svc(n_slots=2, seq_cap=12)
+    a = svc.open_session(np.array([1, 2, 3], np.int32))
+    out = svc.decode({a: 50})[a]  # asks far past the cap
+    # 3 prompt + n gen steps stop at pos == seq_cap: 12 - 3 + 1 = 10 tokens
+    assert len(out) == 10
+    assert svc.poll(a)["state"] == "done"
+    assert svc.sessions[a].steps == 12
+    assert not svc.sched.is_bound(a)  # slot freed for reuse
+    with pytest.raises(RuntimeError):
+        svc.decode({a: 1})
+    assert svc.outputs[a] == out  # outputs survive retirement
+    b = svc.open_session(np.array([4], np.int32))  # slot immediately reusable
+    assert len(svc.decode({b: 2})[b]) == 2
+
+
+def test_positions_are_int32_end_to_end():
+    svc = _svc(n_slots=2)
+    a = svc.open_session(np.array([1, 2], np.int32))
+    svc.decode({a: 3})
+    assert svc.slot_pos.dtype == np.int32
+    assert isinstance(svc.sessions[a].steps, int)
+    from repro.serving import LMServer, ServeConfig
+    cfg, bundle, params = _lm_setup()
+    srv = LMServer(bundle, params, ServeConfig(max_batch=2, seq_cap=16))
+    srv.add_request(np.array([1], np.int32))
+    srv.step()
+    assert srv.pos.dtype == np.int32
+
+
+def test_restore_refuses_incompatible_seq_cap(tmp_path):
+    """A spill whose sessions sit past this service's seq_cap (or whose
+    cache geometry differs) is refused atomically — not accepted and then
+    crashed mid-bind on the first decode."""
+    src = _svc(n_slots=2, seq_cap=48)
+    s = src.open_session(np.array([1, 2], np.int32))
+    src.decode({s: 30})  # position 32 > the target's cap
+    path = str(tmp_path / "lot.npz")
+    src.spill_parking(path, include_bound=True)
+
+    small = _svc(n_slots=2, seq_cap=24)
+    with pytest.raises(ValueError, match="seq_cap|does not fit"):
+        small.restore_parking(path)
+    assert not small.sessions and small.sched.live_sessions == 0
+    ok = small.open_session(np.array([3], np.int32))  # service untouched
+    assert len(small.decode({ok: 2})[ok]) == 2
+
+
+def test_oversized_prompt_refused():
+    svc = _svc(n_slots=2, seq_cap=8)
+    with pytest.raises(ValueError):
+        svc.open_session(np.arange(8, dtype=np.int32))
+
+
+def test_admission_backpressure_and_oversubscription():
+    """max_sessions == n_slots keeps the historical no-eviction contract;
+    a larger cap switches to park/resume churn."""
+    svc = _svc(n_slots=2, max_sessions=2)
+    svc.open_session(np.array([1], np.int32))
+    svc.open_session(np.array([2], np.int32))
+    with pytest.raises(AdmissionError):
+        svc.open_session(np.array([3], np.int32))
+    over = _svc(n_slots=2, max_sessions=3)
+    s1 = over.open_session(np.array([1], np.int32))
+    over.decode({s1: 1})
+    over.open_session(np.array([2], np.int32))
+    s3 = over.open_session(np.array([3], np.int32))  # evicts LRU (s1)
+    assert over.poll(s1)["state"] == "parked"
+    assert over.sched.is_bound(s3)
+
+
+# ---------------------------------------------------------------------------
+# property: open/push/evict/resume churn across mixed fp32/u4/KV sessions
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _tcn_setup(seed=0):
+    cfg = get_config("chameleon-tcn").replace(
+        tcn_channels=(8, 8), tcn_kernel=3, tcn_in_channels=2,
+        embed_dim=12, n_classes=4)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(seed))
+    return cfg, bundle, params, tcn_empty_state(cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _churn_services():
+    """Three churning services (2 slots, 3 sessions each — every tick can
+    evict) + three never-evicted references (4 slots).  fp32 TCN, u4 TCN,
+    and LM KV states coexist under the one scheduler policy."""
+    cfg, bundle, params, bn = _tcn_setup()
+    mk = lambda n, q: StreamSessionService(bundle, params, bn, n_slots=n,
+                                           max_tenants=1, quantize=q,
+                                           t_chunk=4, max_sessions=8)
+    lcfg, lbundle, lparams = _lm_setup()
+    mklm = lambda n: LMSessionService(lbundle, lparams, n_slots=n,
+                                      seq_cap=128, t_chunk=4, max_sessions=8)
+    return ((mk(2, False), mk(4, False)), (mk(2, True), mk(4, True)),
+            (mklm(2), mklm(4)))
+
+
+def test_churn_property_mixed_services_bit_identical():
+    """Property: ANY interleaving of open/push/park/evict/resume across
+    fp32 TCN, u4 TCN, and LM KV sessions produces outputs bit-identical to
+    never-evicted reference runs."""
+    @given(st.integers(0, 2**31 - 1))
+    def prop(seed):
+        rng = np.random.default_rng(seed)
+        (svc_f, ref_f), (svc_q, ref_q), (svc_lm, ref_lm) = _churn_services()
+        x = rng.normal(size=(3, 40, 2)).astype(np.float32)
+        prompts = [rng.integers(0, 64, size=rng.integers(1, 5))
+                   .astype(np.int32) for _ in range(3)]
+        tcn = [{"svc": s, "ref": r,
+                "sids": [s.open_session() for _ in range(3)],
+                "rids": [r.open_session() for _ in range(3)],
+                "pos": [0, 0, 0]}
+               for s, r in ((svc_f, ref_f), (svc_q, ref_q))]
+        lm = {"sids": [svc_lm.open_session(p) for p in prompts],
+              "rids": [ref_lm.open_session(p) for p in prompts]}
+        try:
+            for _ in range(6):
+                for grp in tcn:
+                    picks = [i for i in range(3) if rng.random() < 0.6
+                             and grp["pos"][i] < 40][:2]  # <= n_slots a tick
+                    if rng.random() < 0.3 and picks:
+                        grp["svc"].park(grp["sids"][picks[0]])
+                    chunk, refchunk = {}, {}
+                    for i in picks:
+                        n = int(rng.integers(1, 7))
+                        n = min(n, 40 - grp["pos"][i])
+                        seg = x[i, grp["pos"][i]:grp["pos"][i] + n]
+                        chunk[grp["sids"][i]] = seg
+                        refchunk[grp["rids"][i]] = seg
+                        grp["pos"][i] += n
+                    if not chunk:
+                        continue
+                    got = grp["svc"].push_audio(chunk)
+                    want = grp["ref"].push_audio(refchunk)
+                    for i in picks:
+                        g = got[grp["sids"][i]]
+                        w = want[grp["rids"][i]]
+                        np.testing.assert_array_equal(g["emb"], w["emb"])
+                        np.testing.assert_array_equal(g["logits"],
+                                                      w["logits"])
+                picks = [i for i in range(3) if rng.random() < 0.6][:2]
+                if rng.random() < 0.3 and picks:
+                    svc_lm.park(lm["sids"][picks[0]])
+                wants = {lm["sids"][i]: int(rng.integers(1, 5))
+                         for i in picks}
+                if wants:
+                    got = svc_lm.decode(wants)
+                    want = ref_lm.decode(
+                        {lm["rids"][i]: wants[lm["sids"][i]]
+                         for i in picks})
+                    for i in picks:
+                        assert got[lm["sids"][i]] == want[lm["rids"][i]]
+            assert svc_f.stats()["evictions"] + svc_q.stats()["evictions"] \
+                + svc_lm.stats()["evictions"] >= 0
+        finally:
+            for grp in tcn:
+                for sid in grp["sids"]:
+                    grp["svc"].close(sid)
+                for rid in grp["rids"]:
+                    grp["ref"].close(rid)
+            for sid in lm["sids"]:
+                svc_lm.close(sid)
+            for rid in lm["rids"]:
+                ref_lm.close(rid)
+    prop()

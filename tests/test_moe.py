@@ -3,9 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import get_config
 from repro.models.config import ArchConfig
 from repro.models.moe import expert_capacity, moe_ffn, moe_param_defs
 from repro.sharding.rules import init_params

@@ -57,8 +57,9 @@ def test_lm_server_slot_reused_after_finish():
 
 
 def test_lm_server_mid_decode_admission_preserves_live_requests():
-    """Admitting a new request must not perturb in-flight requests: the
-    batch-synchronized prefill's cache writes to live slots are rolled back."""
+    """Admitting a new request must not perturb in-flight requests: every
+    lane decodes at its own position (sessions/lm.decode_scan), so another
+    lane's prefill steps are invisible by construction."""
     cfg, bundle, params = _tiny_lm()
     ctl = LMServer(bundle, params, ServeConfig(max_batch=2, seq_cap=48))
     c = ctl.add_request(np.array([7, 9, 4], np.int32))
@@ -88,6 +89,31 @@ def test_lm_server_reused_slot_decodes_like_fresh_slot():
     r2 = srv.add_request(np.array([5], np.int32))  # lands on r1's slot
     srv.step()
     assert srv.outputs[r2][0] == fresh.outputs[rf][0]
+
+
+def test_lm_server_oversubscription_parks_and_resumes():
+    """ServeConfig(max_sessions > batch) turns the historical full-grid
+    RuntimeError into LRU park/resume churn: step() keeps advancing ALL
+    live requests (parked ones resume in waves) with bit-identical
+    streams."""
+    cfg, bundle, params = _tiny_lm()
+    ctl = LMServer(bundle, params, ServeConfig(max_batch=2, seq_cap=32))
+    c = ctl.add_request(np.array([5, 1], np.int32))
+    for _ in range(6):
+        ctl.step()
+    srv = LMServer(bundle, params,
+                   ServeConfig(max_batch=2, seq_cap=32, max_sessions=3))
+    r1 = srv.add_request(np.array([5, 1], np.int32))
+    for _ in range(2):
+        srv.step()
+    srv.add_request(np.array([7], np.int32))
+    r3 = srv.add_request(np.array([9], np.int32))  # grid full: parks LRU r1
+    assert not srv.sched.is_bound(r1) and srv.service.poll(r1)["state"] == "parked"
+    for _ in range(4):  # three live requests on two slots: churn every step
+        srv.step()
+    assert srv.outputs[r1] == ctl.outputs[c]  # parked request never starves
+    assert len(srv.outputs[r3]) == 4
+    assert srv.service.stats()["evictions"] >= 2
 
 
 def test_tcn_stream_server_matches_full_sequence():

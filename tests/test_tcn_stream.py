@@ -12,7 +12,6 @@ from repro.core.streaming import (
     cone_stats,
     ring_sizes,
     stream_init,
-    stream_state_bytes,
     stream_step,
     ws_inference_stats,
 )
