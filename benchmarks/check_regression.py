@@ -6,6 +6,10 @@ Gates (CI fails the job instead of merely uploading the artifact):
   * TCN chunking contract — speedup_160_vs_1 >= 5x (absolute floor; the
     bench itself asserts this too, so the gate also catches a stale file);
   * LM chunking contract — speedup_16_vs_1 >= 3x;
+  * LM speculative contract — the parallel-verify + n-gram-self-draft
+    sweep at K=4 must decode >= 1.3x the tokens/s of plain chunked decode
+    of the same requests (acceptance is seed-deterministic, so this gate
+    is a timing-ratio floor, not a model-behavior lottery);
   * park/resume cost — within 2x of the baseline, measured as the
     NORMALIZED ratio (park_us + resume_us) / us_per_dispatch(T=1) of the
     same run: raw microseconds are machine-dependent, but the park/resume
@@ -28,6 +32,7 @@ import sys
 
 TCN_MIN_SPEEDUP = 5.0
 LM_MIN_SPEEDUP = 3.0
+SPEC_MIN_SPEEDUP = 1.3  # speculative K=4 self-draft vs plain decode
 COST_RATIO_MAX = 2.0
 BYTES_RATIO_MAX = 2.0
 NOISE_FLOOR = 4.0  # don't fail normalized-cost ratios in the noise band
@@ -78,6 +83,17 @@ def check(fresh: dict, base: dict) -> list[str]:
             s >= LM_MIN_SPEEDUP,
             f"lm chunk speedup {s:.2f}x < {LM_MIN_SPEEDUP}x (16 vs 1)",
         )
+        spec = lm.get("speculative")
+        if not spec:
+            skipped.append("lm: speculative sweep missing from fresh run")
+        else:
+            s = spec.get("speedup_vs_plain", 0.0)
+            gate(
+                s >= SPEC_MIN_SPEEDUP,
+                f"lm speculative speedup {s:.2f}x < {SPEC_MIN_SPEEDUP}x "
+                f"(K={spec.get('k')}, "
+                f"acceptance={spec.get('acceptance_rate', 0):.2f})",
+            )
 
     for name in ("tcn", "lm"):
         f, b = fresh.get(name), base.get(name)
@@ -122,6 +138,13 @@ def main():
         nc = _norm_cost(f)
         cost = nc if nc is None else round(nc, 2)
         print(f"[gate] {name}: speedup={speedup} norm_park_resume={cost}")
+    spec = fresh.get("lm", {}).get("speculative")
+    if spec:
+        print(
+            f"[gate] lm speculative: K={spec.get('k')} "
+            f"speedup={round(spec.get('speedup_vs_plain', 0), 2)} "
+            f"acceptance={round(spec.get('acceptance_rate', 0), 2)}",
+        )
     if errors:
         for e in errors:
             print(f"[gate] FAIL {e}", file=sys.stderr)

@@ -21,7 +21,15 @@ LM sessions (--service lm):
     chunk ≙ time chunk) — >=3x at 16 vs 1 is asserted, not just reported;
   * evict -> KV park -> resume emits a token stream bit-identical to an
     uninterrupted run (asserted);
-  * park/resume wall time and O(pos) parked-blob bytes.
+  * park/resume wall time and O(pos) parked-blob bytes;
+  * speculative decode (``--speculative K``, default 4): tokens/s and
+    acceptance rate of the drafter/verifier layer (sessions/spec.py,
+    parallel verify + the n-gram self-draft drafter) vs plain chunked
+    decode of the same requests on the same grid.  This sweep uses a
+    BIGGER model than the dispatch sweep on purpose: speculation
+    amortizes the per-step MATH (K+1 positions per weight pass), so the
+    model must be large enough that per-step math — not dispatch — is
+    the wall being attacked.  check_regression gates the speedup >=1.3x.
 
 Emits ``BENCH_session_throughput.json`` ({"tcn": ..., "lm": ...}) next to
 the cwd; CI compares it against the committed baseline with
@@ -29,7 +37,7 @@ the cwd; CI compares it against the committed baseline with
 shrinks the grids for CI runtime; the asserted properties are identical.
 
     PYTHONPATH=src python -m benchmarks.session_throughput \\
-        [--smoke] [--service {tcn,lm,both}]
+        [--smoke] [--service {tcn,lm,both}] [--speculative K]
 """
 
 import argparse
@@ -47,11 +55,13 @@ from repro.models import build_bundle
 from repro.models.tcn import tcn_empty_state
 from repro.sessions import (
     LMSessionService,
+    SpeculativeDecoder,
     StreamSessionService,
     grid_init,
     grid_scan,
     grid_step,
     lengths_to_valid,
+    ngram_drafter,
     parked_bytes,
 )
 
@@ -231,7 +241,7 @@ def _lm_service(bundle, params, *, n_slots, t_chunk, **kw):
                             **kw)
 
 
-def run_lm(smoke: bool = False):
+def run_lm(smoke: bool = False, speculative_k: int = 4):
     n_slots = 4 if smoke else 8
     n_tokens = 24 if smoke else LM_TOKENS
     # deliberately tiny model: the metric is DISPATCH amortization (the
@@ -318,6 +328,58 @@ def run_lm(smoke: bool = False):
         "speedup_16_vs_1": speedup,
         "parked_blob_bytes": blob,
         "park_us": park_us, "resume_us": resume_us,
+        "speculative": run_lm_speculative(smoke=smoke, k=speculative_k),
+    }
+
+
+def run_lm_speculative(smoke: bool = False, k: int = 4):
+    """Speculative (parallel-verify, n-gram self-draft) vs plain chunked
+    decode: same requests, same grid, same t_chunk.  The model here is
+    deliberately LARGER than the dispatch-sweep's (d256 vs d16): the
+    speculative win is K+1 verify positions per weight pass, so per-step
+    math must dominate, which is exactly the regime real decode serving
+    sits in (weight-bandwidth bound).  Acceptance is deterministic (fixed
+    seed -> fixed streams); only wall time varies, so best-of-N passes."""
+    n_slots = 2 if smoke else 4
+    n_tokens = 48 if smoke else 96
+    reps = 5 if smoke else LM_REPS
+    cfg = get_config("olmo-1b").smoke().replace(
+        n_layers=2, d_model=256, d_ff=512, vocab_size=128, head_dim=64)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(1))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8).astype(np.int32)
+               for _ in range(n_slots)]
+    seq_cap = 16 + (2 + reps) * n_tokens
+
+    def best_of(decode_fn, sids):
+        decode_fn({sid: n_tokens for sid in sids})  # warm: compile + cycle
+        best = 0.0
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            decode_fn({sid: n_tokens for sid in sids})
+            best = max(best, n_tokens / (time.perf_counter() - t0))
+        return best
+
+    plain = LMSessionService(bundle, params, n_slots=n_slots,
+                             seq_cap=seq_cap, t_chunk=16)
+    base = best_of(plain.decode, [plain.open_session(p) for p in prompts])
+
+    svc = LMSessionService(bundle, params, n_slots=n_slots,
+                           seq_cap=seq_cap, t_chunk=16)
+    sp = SpeculativeDecoder(svc, ngram_drafter(), k=k, verify="parallel")
+    spec = best_of(sp.decode, [svc.open_session(p) for p in prompts])
+
+    speedup = spec / base
+    emit(f"lm/speculative_k{k}", 0.0,
+         f"{spec:.0f} vs {base:.0f} tokens/s/session "
+         f"({speedup:.2f}x, acceptance={sp.acceptance_rate:.2f})")
+    return {
+        "k": k, "verify": "parallel", "drafter": "ngram",
+        "acceptance_rate": sp.acceptance_rate,
+        "tokens_per_sec_per_session": spec,
+        "baseline_tokens_per_sec_per_session": base,
+        "speedup_vs_plain": speedup,
     }
 
 
@@ -350,13 +412,16 @@ def main():
                     help="reduced grids for CI (same asserted properties)")
     ap.add_argument("--service", choices=("tcn", "lm", "both"),
                     default="both")
+    ap.add_argument("--speculative", type=int, default=4, metavar="K",
+                    help="draft length for the lm speculative sweep")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = {}
     if args.service in ("tcn", "both"):
         sections["tcn"] = run_tcn(smoke=args.smoke)
     if args.service in ("lm", "both"):
-        sections["lm"] = run_lm(smoke=args.smoke)
+        sections["lm"] = run_lm(smoke=args.smoke,
+                                speculative_k=args.speculative)
     _write_out(sections)
 
 

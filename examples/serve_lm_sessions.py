@@ -3,9 +3,14 @@
 The LM analog of examples/serve_multitenant.py — the slot grid is a KV
 cache, a "time chunk" is a token chunk:
 
+  * true chunked prefill: ``open_session`` feeds the prompt through
+    multi-token cached steps in pow2 chunks (causal attention over each
+    whole chunk — a 256-token prompt is 8 dispatches, not 256 steps);
   * chunked multi-token decode: one jitted ``decode_scan`` dispatch
-    advances every pushed session by up to t_chunk greedy tokens (prefill
-    is just the forced-token prefix of the same scan);
+    advances every pushed session by up to t_chunk greedy tokens;
+  * speculative decode: a pluggable drafter proposes K tokens per lane
+    and one dispatch verifies them (sessions/spec.py) — the exact scan
+    mode is bit-identical to plain decode for ANY drafter;
   * oversubscription: opening more sessions than slots LRU-evicts an idle
     one — its KV-cache column is packed to a host blob truncated to its
     position (O(pos) bytes, the cost-aware eviction signal);
@@ -25,7 +30,12 @@ import jax
 
 from repro.configs import get_config
 from repro.models import build_bundle
-from repro.sessions import LMSessionService, parked_bytes
+from repro.sessions import (
+    LMSessionService,
+    SpeculativeDecoder,
+    ngram_drafter,
+    parked_bytes,
+)
 
 
 def main():
@@ -38,15 +48,27 @@ def main():
     svc = LMSessionService(bundle, params, n_slots=2, seq_cap=96,
                            t_chunk=16, max_sessions=6)
 
-    print("== chunked decode: prompts + 24 tokens in a few dispatches ==")
+    print("== chunked prefill + chunked decode ==")
     rng = np.random.default_rng(0)
-    a = svc.open_session(rng.integers(0, 64, size=5).astype(np.int32))
+    d0 = svc.dispatches
+    a = svc.open_session(rng.integers(0, 64, size=33).astype(np.int32))
+    print(f"   33-token prompt chunk-prefilled in {svc.dispatches - d0} "
+          f"dispatches (pow2 chunks; was 33 scan steps)")
     b = svc.open_session(rng.integers(0, 64, size=3).astype(np.int32))
     d0 = svc.dispatches
     out = svc.decode({a: 24, b: 24})
-    print(f"   2 sessions x (prompt + 24 tokens) in "
-          f"{svc.dispatches - d0} dispatches (vs {5 + 24 - 1} per-token)")
+    print(f"   2 sessions x 24 tokens in {svc.dispatches - d0} dispatches "
+          f"(vs 24 per-token)")
     print(f"   a: {out[a][:8]}...  b: {out[b][:8]}...")
+
+    print("== speculative decode: draft K, verify in one dispatch ==")
+    spec = SpeculativeDecoder(svc, ngram_drafter(), k=4)  # exact scan mode
+    d0 = svc.dispatches
+    more = spec.decode({a: 16, b: 16})
+    print(f"   16 more tokens each in {svc.dispatches - d0} dispatches, "
+          f"acceptance={spec.acceptance_rate:.2f} (bit-identical to plain "
+          f"decode by contract)")
+    assert more[a] == svc.outputs[a][24:]  # the same stream, continued
 
     print("== oversubscription: the grid evicts, sessions never notice ==")
     c = svc.open_session(rng.integers(0, 64, size=4).astype(np.int32))

@@ -25,6 +25,7 @@ from repro.models.transformer import (
     embed_tokens,
     layer_fwd,
     layer_param_defs,
+    logits_all,
     logits_last,
     model_param_defs,
     norm_param_defs,
@@ -48,6 +49,12 @@ class Bundle:
     embed_fn: Callable     # (params, batch) -> (B, E) embeddings for protonet
     empty_cache: Callable  # (batch, seq_len) -> concrete cache pytree
     cache_specs: Callable  # (batch, seq_len) -> ShapeDtypeStruct cache pytree
+    # multi-token cached step: (params, cache, batch{tokens (B,S), pos}) ->
+    # (logits (B,S,V) at EVERY position, cache).  The chunked-prefill /
+    # speculative-verify workhorse — causal attention over the whole chunk
+    # at once amortizes the math, not just the dispatch.  decode_fn is its
+    # S=1, last-position special case.
+    step_fn: Callable | None = None
 
     def init(self, key):
         return init_params(self.param_defs, key)
@@ -193,6 +200,11 @@ def build_lm_bundle(cfg: ArchConfig) -> Bundle:
         h, cache, _ = backbone(params, cfg, x, 0, cache, remat=False, enc_h=enc_h)
         return logits_last(params, cfg, h), cache
 
+    def step_fn(params, cache, batch):
+        x = embed_tokens(params, cfg, batch["tokens"])
+        h, cache, _ = backbone(params, cfg, x, batch["pos"], cache, remat=False)
+        return logits_all(params, cfg, h), cache
+
     def decode_fn(params, cache, batch):
         x = embed_tokens(params, cfg, batch["tokens"])
         h, cache, _ = backbone(params, cfg, x, batch["pos"], cache, remat=False)
@@ -207,7 +219,7 @@ def build_lm_bundle(cfg: ArchConfig) -> Bundle:
 
     return Bundle(
         cfg=cfg, param_defs=defs, loss_fn=loss_fn, prefill_fn=prefill_fn,
-        decode_fn=decode_fn, embed_fn=embed_fn,
+        decode_fn=decode_fn, embed_fn=embed_fn, step_fn=step_fn,
         empty_cache=lambda B, S: make_empty_cache(cfg, B, S, _adt(cfg)),
         cache_specs=lambda B, S: make_cache_specs(cfg, B, S, _adt(cfg)),
     )
@@ -266,6 +278,15 @@ def build_rwkv_bundle(cfg: ArchConfig) -> Bundle:
         h, cache = _rwkv_forward(params, cfg, x, cache, remat=False)
         return logits_last(params, cfg, h), cache
 
+    def step_fn(params, cache, batch):
+        # multi-token cached step: the chunked-matmul WKV form.  NOT
+        # bitwise-equal to S sequential decode steps (the recurrence is
+        # reassociated), so exactness-contracted callers (chunked prefill,
+        # scan verify) must use the per-token path for this family.
+        x = embed_tokens(params, cfg, batch["tokens"])
+        h, cache = _rwkv_forward(params, cfg, x, cache, remat=False)
+        return logits_all(params, cfg, h), cache
+
     def decode_fn(params, cache, batch):
         x = embed_tokens(params, cfg, batch["tokens"])
         h, cache = _rwkv_forward(params, cfg, x, cache, remat=False)
@@ -279,7 +300,7 @@ def build_rwkv_bundle(cfg: ArchConfig) -> Bundle:
 
     return Bundle(
         cfg=cfg, param_defs=defs, loss_fn=loss_fn, prefill_fn=prefill_fn,
-        decode_fn=decode_fn, embed_fn=embed_fn,
+        decode_fn=decode_fn, embed_fn=embed_fn, step_fn=step_fn,
         empty_cache=lambda B, S: rwkv_empty_cache(cfg, B, _adt(cfg)),
         cache_specs=lambda B, S: jax.eval_shape(
             lambda: rwkv_empty_cache(cfg, B, _adt(cfg))),
@@ -371,6 +392,13 @@ def build_zamba_bundle(cfg: ArchConfig) -> Bundle:
         h, cache = _zamba_forward(params, cfg, x, cache, 0, remat=False)
         return logits_last(params, cfg, h), cache
 
+    def step_fn(params, cache, batch):
+        # chunked-matmul SSD form: reassociated vs sequential ssd_step, so
+        # the same per-token-exactness caveat as the RWKV bundle applies
+        x = embed_tokens(params, cfg, batch["tokens"])
+        h, cache = _zamba_forward(params, cfg, x, cache, batch["pos"], remat=False)
+        return logits_all(params, cfg, h), cache
+
     def decode_fn(params, cache, batch):
         x = embed_tokens(params, cfg, batch["tokens"])
         h, cache = _zamba_forward(params, cfg, x, cache, batch["pos"], remat=False)
@@ -383,7 +411,8 @@ def build_zamba_bundle(cfg: ArchConfig) -> Bundle:
 
     return Bundle(
         cfg=cfg, param_defs=defs, loss_fn=loss_fn, prefill_fn=prefill_fn,
-        decode_fn=decode_fn, embed_fn=embed_fn, empty_cache=empty,
+        decode_fn=decode_fn, embed_fn=embed_fn, step_fn=step_fn,
+        empty_cache=empty,
         cache_specs=lambda B, S: jax.eval_shape(lambda: empty(B, S)),
     )
 

@@ -482,3 +482,16 @@ def logits_last(params, cfg: ArchConfig, hidden):
     """LM-head logits for the final position only (decode/prefill output)."""
     h = hidden[:, -1, :]
     return jnp.einsum("bd,dv->bv", h, params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+
+
+def logits_all(params, cfg: ArchConfig, hidden):
+    """LM-head logits at EVERY position of a cached multi-token step.
+
+    The chunked-prefill / speculative-verify output: a (B, S) forward at
+    position ``pos`` against the cache needs the greedy continuation at
+    each of its S positions (draft token j is judged by the argmax after
+    feeding token j), not just the last.  Kept separate from the training
+    path's chunked_cross_entropy — S here is a small token chunk, so the
+    (B, S, V) logits tensor is fine to materialize."""
+    return jnp.einsum("bsd,dv->bsv", hidden,
+                      params["lm_head"].astype(hidden.dtype)).astype(jnp.float32)

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.sessions.lm import LMSessionService
 from repro.sessions.service import StreamSessionService
+from repro.sessions.spec import SpeculativeDecoder
 
 
 @dataclass
@@ -43,6 +44,9 @@ class ServeConfig:
     mode: str = "throughput"  # throughput | low-power (paper's dual mode)
     decode_chunk: int = 16    # token-chunk bucket cap per jitted dispatch
     max_sessions: int | None = None  # None: == batch (no oversubscription)
+    prefill_chunk: int = 64   # true chunked prefill cap (0 = scan prefill)
+    speculative: int = 0      # draft length K (0 = plain greedy decode)
+    spec_verify: str = "scan"  # scan (exact) | parallel (throughput)
 
     def effective_batch(self):
         return self.max_batch if self.mode == "throughput" else max(1, self.max_batch // 4)
@@ -60,8 +64,15 @@ class LMServer:
         B = cfg.effective_batch()
         self.service = LMSessionService(
             bundle, params, n_slots=B, seq_cap=cfg.seq_cap,
-            t_chunk=cfg.decode_chunk,
+            t_chunk=cfg.decode_chunk, prefill_chunk=cfg.prefill_chunk,
             max_sessions=B if cfg.max_sessions is None else cfg.max_sessions)
+        # opt-in speculation: step(n) drafts K tokens/lane per dispatch and
+        # verifies them in one shot (sessions/spec.py); n=1 steps cannot
+        # speculate (a draft needs headroom) and fall through to the plain
+        # scan inside the decoder
+        self.spec = (SpeculativeDecoder(self.service, k=cfg.speculative,
+                                        verify=cfg.spec_verify)
+                     if cfg.speculative else None)
 
     # historical mirrors -----------------------------------------------------
     @property
@@ -85,17 +96,20 @@ class LMServer:
         parked to host memory instead and resumes bit-identically."""
         return self.service.open_session(prompt)
 
-    def step(self):
-        """One greedy decode step for every live request — bound AND
-        parked.  With oversubscription the live set can exceed the grid,
-        so requests advance in waves of at most ``n_slots`` (each wave's
-        binds may park the previous wave's LRU members; every request
-        still gains exactly one token per step)."""
+    def step(self, n: int = 1):
+        """Advance every live request — bound AND parked — by ``n`` greedy
+        tokens (default 1, the historical contract).  With oversubscription
+        the live set can exceed the grid, so requests advance in waves of
+        at most ``n_slots`` (each wave's binds may park the previous wave's
+        LRU members; every request still gains exactly n tokens per step).
+        With ``ServeConfig(speculative=K)`` each wave decodes through the
+        drafter/verifier layer instead of the plain scan."""
         live = [sid for sid, s in sorted(self.service.sessions.items())
                 if not s.done]
+        decode = self.spec.decode if self.spec is not None \
+            else self.service.decode
         for i in range(0, len(live), self.service.n_slots):
-            self.service.decode(
-                {sid: 1 for sid in live[i:i + self.service.n_slots]})
+            decode({sid: n for sid in live[i:i + self.service.n_slots]})
 
     def finish(self, rid: int):
         self.service.close(rid)

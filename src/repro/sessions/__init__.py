@@ -10,11 +10,25 @@ state + many more sessions than compiled slots) for BOTH serving paths:
   * service.py   — SlotGridService (service-agnostic core) + the TCN
                    façade: open_session / push_audio / enroll_shots / poll
   * lm.py        — LM sessions: KV-cache park/resume + decode_scan chunked
-                   multi-token decode (KV-cache chunk ≙ time chunk)
+                   multi-token decode (KV-cache chunk ≙ time chunk) + true
+                   chunked prefill (multi-token cached steps)
+  * spec.py      — speculative decoding: pluggable drafters + draft-verify
+                   dispatches (exact forced-token scan / parallel chunk)
 """
 
-from repro.sessions.lm import LMSessionService, make_decode_scan
+from repro.sessions.lm import (
+    LMSessionService,
+    make_decode_scan,
+    make_prefill_column,
+    pow2_chunks,
+)
 from repro.sessions.scheduler import AdmissionError, CapacityError, SlotScheduler
+from repro.sessions.spec import (
+    SpeculativeDecoder,
+    make_verify_chunk,
+    make_verify_scan,
+    ngram_drafter,
+)
 from repro.sessions.service import (
     NO_TENANT,
     SessionRecord,
@@ -22,6 +36,7 @@ from repro.sessions.service import (
     StreamSessionService,
 )
 from repro.sessions.state import (
+    column_pspecs,
     decode_parked,
     grid_init,
     grid_pspecs,
@@ -37,6 +52,7 @@ from repro.sessions.state import (
     slot_state_bytes,
     unpack_column,
     unpack_slot,
+    zero_from_column,
 )
 from repro.sessions.tenancy import (
     TenantBank,
@@ -55,11 +71,15 @@ from repro.sessions.tenancy import (
 __all__ = [
     "AdmissionError", "CapacityError", "SlotScheduler",
     "NO_TENANT", "SessionRecord", "SlotGridService", "StreamSessionService",
-    "LMSessionService", "make_decode_scan",
-    "decode_parked", "grid_init", "grid_pspecs", "grid_scan", "grid_step",
+    "LMSessionService", "make_decode_scan", "make_prefill_column",
+    "pow2_chunks",
+    "SpeculativeDecoder", "make_verify_chunk", "make_verify_scan",
+    "ngram_drafter",
+    "column_pspecs", "decode_parked", "grid_init", "grid_pspecs",
+    "grid_scan", "grid_step",
     "leaf_axes", "lengths_to_valid", "pack_column", "pack_slot",
     "parked_bytes", "reset_slot", "slot_park_bytes", "slot_state_bytes",
-    "unpack_column", "unpack_slot",
+    "unpack_column", "unpack_slot", "zero_from_column",
     "TenantBank", "bank_add_class", "bank_clear_tenant", "bank_fc",
     "bank_init", "bank_pack_tenant", "bank_pspecs", "bank_row_bytes",
     "bank_store", "bank_unpack_tenant", "bank_update_class",

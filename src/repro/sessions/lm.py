@@ -29,7 +29,21 @@ Key differences from the historical ``serving.LMServer`` loop:
     positions (sessions/state.pack_column), so parked bytes are O(pos) —
     per-session costs are genuinely non-uniform, which is what makes the
     scheduler's cost-aware eviction policy bite across mixed fp32 TCN /
-    u4 TCN / KV sessions.
+    u4 TCN / KV sessions;
+  * TRUE chunked prefill — on bundles whose cache is entirely
+    position-indexed, ``open_session`` feeds the prompt body through
+    multi-token cached steps (``make_prefill_column`` over
+    ``bundle.step_fn``) in largest-first pow2 chunks: the prompt MATH is
+    amortized (causal attention over each whole chunk), not just the
+    dispatch, and the cache is bit-identical to token-at-a-time prefill;
+  * speculative continuation — ``decode_scan``'s forced-token inputs
+    verify drafts; sessions/spec.py layers the drafter/verifier on top.
+
+Passing ``mesh=`` shards every cache leaf's per-session axis over the
+mesh's ``data`` axis (sessions/state.column_pspecs — the per-leaf-axis
+analog of the TCN grid's ``grid_pspecs``); a 1-device mesh degenerates to
+replicated, and placement survives decode dispatches
+(tests/test_multidevice.py).
 """
 
 from __future__ import annotations
@@ -41,7 +55,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.sessions.service import SessionRecord, SlotGridService
-from repro.sessions.state import leaf_axes, pack_column, unpack_column
+from repro.sessions.state import (
+    column_pspecs,
+    leaf_axes,
+    pack_column,
+    unpack_column,
+)
 
 
 def make_decode_scan(decode_fn, batch_axes, seq_axes=None):
@@ -127,6 +146,54 @@ def make_decode_scan(decode_fn, batch_axes, seq_axes=None):
     return scan
 
 
+def make_prefill_column(step_fn, batch_axes):
+    """Build the true chunked-prefill step: one session's cache column is
+    sliced out of the grid, advanced by a whole (1, S) prompt chunk through
+    the bundle's multi-token cached ``step_fn`` (causal attention over the
+    chunk at once — prompt MATH amortized, not just dispatch), and written
+    back.  ``slot`` and ``pos`` are traced, so one compiled program per
+    chunk length serves every slot and position.
+
+    Returns ``prefill(params, cache, slot, tokens (1, S), pos) -> cache``.
+
+    Exactness: the chunk program computes the same per-token K/V rows as
+    token-at-a-time stepping up to f32 ULP reassociation; under the KV
+    bundles' bf16 cache dtype the rounding absorbs that, so the resulting
+    cache column is bit-identical to the scan prefill's (asserted in
+    tests/test_lm_sessions.py).  Callers keep the LAST prompt token out of
+    the chunks and feed it through the decode scan instead, so the first
+    sampled token comes from the exact same S=1 program either way."""
+
+    def prefill(params, cache, slot, tokens, pos):
+        col = jax.tree.map(
+            lambda a, ax: jax.lax.dynamic_slice_in_dim(a, slot, 1, ax),
+            cache, batch_axes)
+        _, col = step_fn(params, col, {"tokens": tokens, "pos": pos})
+        return jax.tree.map(
+            lambda a, c, ax: jax.lax.dynamic_update_slice_in_dim(
+                a, c.astype(a.dtype), slot, ax),
+            cache, col, batch_axes)
+
+    return prefill
+
+
+def pow2_chunks(n: int, cap: int) -> list[int]:
+    """Largest-first power-of-two decomposition of ``n`` with chunks <= cap:
+    the prefill chunk schedule.  Exact partition (prompt chunks cannot pad —
+    every fed token writes cache rows), and compiled programs stay bounded
+    by log2(cap)+1 shapes; a 255-token body at cap 128 is
+    [128, 64, 32, 16, 8, 4, 2, 1] — 8 dispatches instead of 255 steps."""
+    if cap < 1:
+        raise ValueError(f"chunk cap must be >= 1, got {cap}")
+    cap = 1 << (cap.bit_length() - 1)  # round down to a power of two
+    out = []
+    while n > 0:
+        c = min(cap, 1 << (n.bit_length() - 1))
+        out.append(c)
+        n -= c
+    return out
+
+
 @dataclass
 class _LMSession(SessionRecord):
     prompt: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
@@ -150,8 +217,8 @@ class LMSessionService(SlotGridService):
 
     def __init__(self, bundle, params, *, n_slots: int = 8,
                  seq_cap: int = 512, t_chunk: int = 16,
-                 max_sessions: int | None = None,
-                 cost_fn=None, stale_window: int = 0):
+                 max_sessions: int | None = None, prefill_chunk: int = 64,
+                 mesh=None, cost_fn=None, stale_window: int = 0):
         if cost_fn is None:
             cost_fn = self._park_cost  # O(pos) bytes: cost-aware by default
         super().__init__(n_slots, t_chunk=t_chunk, max_sessions=max_sessions,
@@ -189,6 +256,30 @@ class LMSessionService(SlotGridService):
         self._decode_scan = jax.jit(
             make_decode_scan(bundle.decode_fn, self._batch_axes,
                              self._seq_axes))
+        # true chunked prefill: only where EVERY cache leaf is
+        # position-indexed (a seq axis to write rows into).  Recurrent
+        # leaves (RWKV wkv state, Mamba conv/ssm state) advance by value
+        # through a reassociated chunk recurrence — not bit-identical to
+        # per-token stepping — so those families keep the forced-token
+        # scan prefill (still dispatch-amortized by t_chunk).
+        self.parallel_safe = all(
+            sax >= 0 for sax in jax.tree.leaves(self._seq_axes))
+        step_fn = getattr(bundle, "step_fn", None)
+        self.prefill_chunk = (int(prefill_chunk)
+                              if prefill_chunk and self.parallel_safe
+                              and step_fn is not None else 0)
+        if self.prefill_chunk:
+            self._prefill_col = jax.jit(
+                make_prefill_column(step_fn, self._batch_axes))
+        if mesh is not None:  # shard the session axis of every leaf -> data
+            from jax.sharding import NamedSharding
+            specs = column_pspecs(
+                jax.eval_shape(lambda: bundle.empty_cache(n_slots, seq_cap)),
+                self._batch_axes, mesh)
+            self.cache = jax.device_put(
+                self.cache, jax.tree.map(lambda p: NamedSharding(mesh, p),
+                                         specs))
+        self.mesh = mesh
 
     # -- slot-column state hooks --------------------------------------------
     def _pack(self, slot: int, sid: int) -> dict:
@@ -220,9 +311,16 @@ class LMSessionService(SlotGridService):
 
     # -- session lifecycle --------------------------------------------------
     def open_session(self, prompt) -> int:
-        """Admit a request.  The prompt is fed lazily: the session's first
-        ``decode`` consumes it inside the same chunked scan that generates
-        tokens (prefill steps are just forced-input steps)."""
+        """Admit a request and (on KV bundles) chunk-prefill its prompt.
+
+        With ``prefill_chunk`` active, all but the last prompt token are
+        fed HERE through multi-token cached steps in a largest-first pow2
+        chunk schedule (``pow2_chunks``) — causal attention over each whole
+        chunk amortizes the prompt math.  The final prompt token stays
+        pending so the first sampled token still comes from the decode
+        scan's exact S=1 program; on recurrent bundles the whole prompt is
+        fed lazily by the first ``decode`` (forced-token scan steps), as
+        before."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size >= self.seq_cap:
             raise ValueError(f"prompt of {prompt.size} tokens >= "
@@ -232,6 +330,16 @@ class LMSessionService(SlotGridService):
         self.sessions[sid] = _LMSession(prompt=prompt)
         self.outputs[sid] = []
         self._bind(sid)
+        if self.prefill_chunk and prompt.size > 1:
+            slot = jnp.int32(self.sched.slot_of[sid])
+            off = 0
+            for n in pow2_chunks(prompt.size - 1, self.prefill_chunk):
+                self.cache = self._prefill_col(
+                    self._params, self.cache, slot,
+                    jnp.asarray(prompt[off:off + n])[None], jnp.int32(off))
+                self.dispatches += 1
+                off += n
+            self.sessions[sid].steps = off
         return sid
 
     def _retire(self, sid: int) -> None:
@@ -241,15 +349,9 @@ class LMSessionService(SlotGridService):
         self.sessions[sid].done = True
 
     # -- the hot path -------------------------------------------------------
-    def decode(self, want: dict[int, int]) -> dict[int, list[int]]:
-        """Greedily generate ``want[sid]`` tokens per session.
-
-        All pushed sessions advance through chunked ``decode_scan``
-        dispatches over the compiled (S, T_chunk) grid (power-of-two
-        padding buckets, like push_audio); absent sessions stay bit-frozen.
-        Parked sessions are resumed first (possibly evicting idle ones).
-        A session whose position would pass ``seq_cap`` is truncated to the
-        cap and retired.  Returns {sid: newly generated tokens}."""
+    def _validate_want(self, want: dict[int, int]) -> None:
+        """The decode admission contract — shared with the speculative
+        decoder (sessions/spec.py) so the two paths cannot drift."""
         if len(want) > self.n_slots:
             raise ValueError(
                 f"{len(want)} sessions pushed but only {self.n_slots} slots; "
@@ -262,6 +364,17 @@ class LMSessionService(SlotGridService):
                                    f"seq_cap={self.seq_cap}")
             if n < 0:
                 raise ValueError(f"session {sid}: want {n} < 0")
+
+    def decode(self, want: dict[int, int]) -> dict[int, list[int]]:
+        """Greedily generate ``want[sid]`` tokens per session.
+
+        All pushed sessions advance through chunked ``decode_scan``
+        dispatches over the compiled (S, T_chunk) grid (power-of-two
+        padding buckets, like push_audio); absent sessions stay bit-frozen.
+        Parked sessions are resumed first (possibly evicting idle ones).
+        A session whose position would pass ``seq_cap`` is truncated to the
+        cap and retired.  Returns {sid: newly generated tokens}."""
+        self._validate_want(want)
         self._touch_and_bind(want)
 
         # steps to run per lane: feed the prompt remainder, then generate.

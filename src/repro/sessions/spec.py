@@ -1,0 +1,418 @@
+"""Speculative decoding on the LM slot grid: draft cheap, verify batched.
+
+``LMSessionService.decode`` already amortizes the host↔device DISPATCH over
+token chunks, but each generated token still costs one sequential scan step
+— the greedy feedback loop serializes the math.  Speculation breaks that
+serialization the classic way: a cheap drafter proposes K tokens per lane,
+and ONE slot-grid dispatch verifies all of them, accepting the longest
+prefix the model itself would have generated and rolling the lane back to
+the last accepted position.  ``decode_scan``'s forced-token inputs already
+*express* verify-a-draft (prefill is the same mechanism), so the verifier
+is a thin layer over machinery PR 3 built.
+
+Two verify modes, selected by what exactness costs on each architecture:
+
+  * ``verify="scan"`` (default, EXACT) — drafts ride the forced-token path
+    of a masked token scan.  On pure-KV bundles (GQA / MLA) this is
+    literally the service's own ``decode_scan`` program: every live step
+    receives exactly the token plain greedy decode would have fed, so the
+    accepted prefix is bit-identical to non-speculative ``decode()`` BY
+    PROGRAM IDENTITY, for any drafter, across park/resume
+    (tests/test_speculative.py).  Bundles with recurrent cache leaves
+    (RWKV wkv state, Mamba conv/ssm state) need rollback by carried VALUE
+    — a step past the first mismatch must not touch them — so they run
+    ``make_verify_scan``, the same lane body with a per-step ``alive``
+    mask: KV rows stay masked by POSITION, recurrent leaves by VALUE (the
+    per-leaf discipline of sessions/lm.make_decode_scan).
+  * ``verify="parallel"`` (throughput) — one multi-token cached step
+    (``bundle.step_fn``, the chunked-prefill path) computes all K+1
+    verify positions with causal attention over the chunk at once: the
+    matmul work of K+1 sequential steps in ONE weight pass, which is the
+    actual speculative-decoding speedup (decode is weight-bandwidth
+    bound).  Chunk-form reductions are reassociated vs per-step decode,
+    so outputs are greedy-consistent under the chunk program rather than
+    bitwise-equal to the sequential scan; pure-KV bundles only (rejected
+    KV rows are dead by position — rewritten before any read, truncated
+    out of parked blobs; recurrent leaves would need per-step state
+    snapshots).  The bench gates this mode >=1.3x plain decode at K=4
+    with the self-draft drafter (benchmarks/session_throughput.py).
+
+Rollback never copies state.  A lane that accepted m of K drafts simply
+sets its host position to ``pos + m + 1``: KV rows written past that are
+unreachable (every future step rewrites its row before attending, parking
+truncates blobs to O(pos), ``state.zero_from_column`` can scrub them to
+canonical zeros when wanted), and recurrent leaves were frozen by the
+``alive`` mask the moment the first draft missed.
+
+Drafters are pluggable callbacks ``drafter(history, k) -> <=k tokens``
+(history = the session's full prompt + generated stream).  The built-in
+``ngram_drafter`` is the self-draft used by the bench: it proposes the
+continuation that followed the most recent occurrence of the current
+suffix in the session's OWN stream — free to evaluate, stateless across
+park/resume, and effective exactly when decoding is repetitive (which is
+when speculation should win).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Drafters
+# ---------------------------------------------------------------------------
+
+
+def ngram_drafter(n: int = 3, window: int = 128):
+    """Self-draft from the session's own token stream.
+
+    Proposes up to k tokens by suffix matching: find the most recent
+    earlier occurrence of the current (n-1)-token suffix within the last
+    ``window`` tokens and propose what followed it, extending greedily
+    (each proposal joins the context for the next).  Backs off to shorter
+    suffixes down to 1; returns fewer than k tokens (possibly none) when
+    the suffix has never been seen — a truncated draft is a valid draft.
+    The window bounds host-side draft cost to O(k * n * window) per lane
+    regardless of how long the session has been generating."""
+    if n < 2:
+        raise ValueError(f"ngram order must be >= 2, got {n}")
+
+    def _next(h: list, order: int):
+        for m in range(order - 1, 0, -1):  # longest suffix first
+            if len(h) <= m:
+                continue
+            ctx = h[-m:]
+            for j in range(len(h) - m - 1, -1, -1):
+                if h[j:j + m] == ctx:
+                    return h[j + m]
+        return None
+
+    def draft(history, k: int) -> np.ndarray:
+        h = [int(t) for t in np.asarray(history).reshape(-1)[-window:]]
+        out = []
+        for _ in range(int(k)):
+            t = _next(h, n)
+            if t is None:
+                break
+            out.append(t)
+            h.append(t)
+        return np.asarray(out, np.int32)
+
+    return draft
+
+
+# ---------------------------------------------------------------------------
+# Verify programs
+# ---------------------------------------------------------------------------
+
+
+def make_verify_scan(decode_fn, batch_axes, seq_axes=None):
+    """Masked verify scan for bundles with recurrent cache leaves.
+
+    Returns ``verify(params, cache, tok, pos, draft, n_draft, active)``:
+
+      tok     (S,)   i32   pending feedback token per lane
+      pos     (S,)   i32   per-lane TRUE position (even for inactive lanes)
+      draft   (S, K) i32   proposed tokens, left-aligned
+      n_draft (S,)   i32   valid drafts per lane (<= K)
+      active  (S,)   bool  lanes verified this dispatch
+
+    Runs K+1 steps.  Step 0 feeds ``tok``; step j >= 1 feeds
+    ``draft[:, j-1]``.  A lane is *alive* at step j iff it is active and
+    every previous step's argmax matched its draft — the first mismatch
+    kills the lane for the rest of the scan, which IS the rollback:
+    recurrent leaves are committed only on alive steps (masked by value),
+    so they end holding exactly the state at the last accepted position;
+    KV rows follow ``make_decode_scan``'s position-masked discipline
+    (dead steps rewrite the lane's frozen row, which no consumer reads).
+    Alive steps receive exactly the tokens plain greedy decode would
+    have fed, so their outputs are the plain decode stream.
+
+    Returns ``(cache, ys (S, K+1))``; the caller takes ``m`` = length of
+    the matching prefix of ``ys`` vs ``draft`` and emits ``ys[:, :m+1]``.
+    """
+    recurrent = (jax.tree.map(lambda _: False, batch_axes) if seq_axes is None
+                 else jax.tree.map(lambda sax: sax < 0, seq_axes))
+
+    def verify(params, cache, tok, pos, draft, n_draft, active):
+        S, K = draft.shape
+        zero = jnp.zeros((S, 1), jnp.int32)
+        d_in = jnp.concatenate([zero, draft], axis=1)   # fed at step j >= 1
+        d_chk = jnp.concatenate([draft, zero], axis=1)  # judged at step j
+
+        def body(carry, xs):
+            cache, tok, pos, alive = carry
+            din_t, dchk_t, j = xs
+
+            def lane(col, tk, ps, al, di, dc, nd):
+                c = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
+                                 col, batch_axes)
+                t = jnp.where(j > 0, di, tk)
+                logits, c2 = decode_fn(params, c,
+                                       {"tokens": t[None, None], "pos": ps})
+                c2 = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax),
+                                  c2, batch_axes)
+                y = jnp.argmax(logits[0], -1).astype(jnp.int32)
+                keep = lambda nw, od: jnp.where(al, nw, od)
+                c2 = jax.tree.map(
+                    lambda nw, od, rec: keep(nw, od) if rec else nw,
+                    c2, col, recurrent)
+                match = al & (j < nd) & (y == dc)
+                return c2, keep(y, tk), keep(ps + 1, ps), match, y
+
+            cache, tok, pos, alive, y = jax.vmap(
+                lane, in_axes=(batch_axes, 0, 0, 0, 0, 0, 0),
+                out_axes=(batch_axes, 0, 0, 0, 0))(
+                    cache, tok, pos, alive, din_t, dchk_t, n_draft)
+            return (cache, tok, pos, alive), y
+
+        (cache, _, _, _), ys = jax.lax.scan(
+            body, (cache, tok, pos, active),
+            (jnp.moveaxis(d_in, 1, 0), jnp.moveaxis(d_chk, 1, 0),
+             jnp.arange(K + 1, dtype=jnp.int32)))
+        return cache, jnp.moveaxis(ys, 0, 1)
+
+    return verify
+
+
+def make_verify_chunk(step_fn, batch_axes):
+    """Parallel verify for pure-KV bundles: all K+1 positions in one
+    multi-token cached step per lane (vmapped B=1, per-lane positions —
+    the chunked-prefill program pointed at [tok, draft...]).
+
+    Returns ``verify(params, cache, toks (S, K+1), pos, active) ->
+    (cache, ys (S, K+1))``.  Inactive lanes are value-masked whole — the
+    O(column) select is paid once per dispatch and amortized over the
+    K+1 tokens, unlike the scan body where it would cost every step.
+    Callers must keep ``pos + K + 1 <= seq_cap`` for every lane (a K+1
+    row block cannot clamp without shifting over live history); lanes too
+    close to the cap take the plain scan path instead."""
+
+    def verify(params, cache, toks, pos, active):
+        def lane(col, tk, ps, act):
+            c = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
+                             col, batch_axes)
+            logits, c2 = step_fn(params, c, {"tokens": tk[None], "pos": ps})
+            c2 = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax),
+                              c2, batch_axes)
+            c2 = jax.tree.map(lambda nw, od: jnp.where(act, nw, od), c2, col)
+            return c2, jnp.argmax(logits[0], -1).astype(jnp.int32)
+
+        return jax.vmap(lane, in_axes=(batch_axes, 0, 0, 0),
+                        out_axes=(batch_axes, 0))(cache, toks, pos, active)
+
+    return verify
+
+
+# ---------------------------------------------------------------------------
+# The drafter/verifier layer over LMSessionService
+# ---------------------------------------------------------------------------
+
+
+class SpeculativeDecoder:
+    """Speculative ``decode`` over an ``LMSessionService``.
+
+    ``decode(want)`` has the plain service's contract — generate
+    ``want[sid]`` greedy tokens per session, resuming parked sessions,
+    retiring at seq_cap — but each dispatch verifies a K-token draft per
+    lane instead of generating one token per scan step.  With
+    ``verify="scan"`` (default) the emitted stream is bit-identical to
+    ``service.decode`` for ANY drafter on every architecture; with
+    ``verify="parallel"`` (pure-KV bundles) verification runs as one
+    multi-token forward per lane — the throughput mode.
+
+    The drafter is advisory only: it never touches device state, so a
+    session can be evicted, parked, spilled to disk, and resumed between
+    (or inside) speculative calls without the drafter needing any
+    rollback — its input is always the session's host-side token stream.
+    """
+
+    def __init__(self, service, drafter=None, *, k: int = 4,
+                 verify: str = "scan"):
+        if k < 1:
+            raise ValueError(f"draft length k must be >= 1, got {k}")
+        if verify not in ("scan", "parallel"):
+            raise ValueError(f"verify must be 'scan' or 'parallel', "
+                             f"got {verify!r}")
+        self.svc = service
+        self.k = int(k)
+        self.drafter = drafter if drafter is not None else ngram_drafter()
+        self.verify = verify
+        # verify programs are cached ON the service so every decoder over
+        # the same grid shares one jitted program (and its compile cache)
+        if verify == "parallel":
+            if not service.parallel_safe:
+                raise ValueError(
+                    "parallel verify needs every cache leaf position-indexed "
+                    "(recurrent RWKV/Mamba leaves roll back by value); use "
+                    "verify='scan' for this bundle")
+            if getattr(service.bundle, "step_fn", None) is None:
+                raise ValueError(
+                    "parallel verify needs the bundle's multi-token cached "
+                    "step_fn; this bundle has none — use verify='scan'")
+            self._verify_chunk = getattr(service, "_spec_verify_chunk", None)
+            if self._verify_chunk is None:
+                self._verify_chunk = service._spec_verify_chunk = jax.jit(
+                    make_verify_chunk(service.bundle.step_fn,
+                                      service._batch_axes))
+        elif not service.parallel_safe:
+            # recurrent leaves: the alive-masked scan (value rollback)
+            self._verify_scan = getattr(service, "_spec_verify_scan", None)
+            if self._verify_scan is None:
+                self._verify_scan = service._spec_verify_scan = jax.jit(
+                    make_verify_scan(service.bundle.decode_fn,
+                                     service._batch_axes, service._seq_axes))
+        # pure-KV scan mode reuses service._decode_scan verbatim (see
+        # _dispatch): same compiled program as plain decode => bit-identity
+        # by program identity, and zero extra compilations.
+        self.drafted = 0       # draft tokens submitted for verification
+        self.accepted = 0      # draft tokens accepted
+        self.accepts: dict[int, int] = {}  # per-session accepted counts
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.drafted if self.drafted else 0.0
+
+    def stats(self) -> dict:
+        return {"k": self.k, "verify": self.verify, "drafted": self.drafted,
+                "accepted": self.accepted,
+                "acceptance_rate": self.acceptance_rate,
+                "accepts": dict(self.accepts)}
+
+    # -- dispatch plumbing --------------------------------------------------
+    def _dispatch(self, tok, pos, draft, n_draft, n_steps):
+        """One batched verify over the grid.  Returns ys (S, K+1)."""
+        svc = self.svc
+        if self.verify == "parallel":
+            toks = np.concatenate([tok[:, None], draft], axis=1)
+            # inactive lanes are value-masked, but their (K+1)-row write
+            # must still land in bounds or the update would clamp-shift
+            active = n_steps > 0
+            pos = np.minimum(pos, svc.seq_cap - self.k - 1).astype(np.int32)
+            svc.cache, ys = self._verify_chunk(
+                svc._params, svc.cache, jnp.asarray(toks), jnp.asarray(pos),
+                jnp.asarray(active))
+        elif svc.parallel_safe:
+            # pure-KV exact mode: the service's own decode_scan, drafts as
+            # forced tokens.  Steps past a mismatch feed the (wrong) draft
+            # and write rows past the accepted position — dead by position,
+            # exactly like decode_scan's masked steps.
+            inp = np.concatenate([tok[:, None], draft], axis=1)
+            svc.cache, _, _, ys = svc._decode_scan(
+                svc._params, svc.cache, jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(inp), jnp.asarray(n_steps), jnp.asarray(n_steps))
+        else:
+            svc.cache, ys = self._verify_scan(
+                svc._params, svc.cache, jnp.asarray(tok), jnp.asarray(pos),
+                jnp.asarray(draft), jnp.asarray(n_draft),
+                jnp.asarray(n_steps > 0))
+        svc.dispatches += 1
+        return np.asarray(ys)
+
+    # -- the speculative hot path -------------------------------------------
+    def decode(self, want: dict[int, int]) -> dict[int, list[int]]:
+        """Generate ``want[sid]`` tokens per session, speculatively.
+
+        Identical surface and bookkeeping to ``LMSessionService.decode``;
+        any still-pending prompt is consumed through the service first
+        (chunked prefill / forced-token scan), then generation proceeds in
+        draft-verify dispatches of up to K+1 tokens per lane.  Never emits
+        more than asked: the last draft of a request is truncated to the
+        remaining budget."""
+        svc = self.svc
+        svc._validate_want(want)
+
+        out = {sid: [] for sid in want}
+        remaining = {sid: n for sid, n in want.items() if n > 0}
+        # prompt still pending: its tokens are KNOWN, which is prefill, not
+        # speculation — route through the service (one call consumes the
+        # whole remainder and emits the first sampled token)
+        pending = [sid for sid in remaining
+                   if svc.sessions[sid].steps < len(svc.sessions[sid].prompt)]
+        if pending:
+            first = svc.decode({sid: 1 for sid in pending})
+            for sid, toks in first.items():
+                out[sid] += toks
+                remaining[sid] -= len(toks)
+
+        while True:
+            live = {sid: r for sid, r in remaining.items()
+                    if r > 0 and not svc.sessions[sid].done}
+            if not live:
+                break
+            if self.verify == "parallel":
+                # lanes too close to the cap for a K+1-row block finish on
+                # the plain scan (bounded: at most K+1 tokens left to cap)
+                tail = {sid: min(r, svc.seq_cap - svc.sessions[sid].steps)
+                        for sid, r in live.items()
+                        if svc.sessions[sid].steps + self.k + 1 > svc.seq_cap}
+                if tail:
+                    got = svc.decode(tail)
+                    for sid, toks in got.items():
+                        out[sid] += toks
+                        remaining[sid] -= len(toks)
+                    continue
+            svc._touch_and_bind(live)
+
+            S, K = svc.n_slots, self.k
+            draft = np.zeros((S, K), np.int32)
+            n_draft = np.zeros(S, np.int32)
+            n_steps = np.zeros(S, np.int32)
+            tok = np.zeros(S, np.int32)
+            pos = np.zeros(S, np.int32)
+            # bound-but-absent lanes carry their true (clamped) position:
+            # the masked-step discipline of make_decode_scan
+            for slot, bsid in svc.sched.sid_of.items():
+                pos[slot] = min(svc.sessions[bsid].steps, svc.seq_cap - 1)
+            lanes = {}
+            for sid, rem in live.items():
+                sess = svc.sessions[sid]
+                s = svc.sched.slot_of[sid]
+                lanes[sid] = s
+                ks = max(min(K, rem - 1, svc.seq_cap - sess.steps - 1), 0)
+                hist = np.concatenate(
+                    [sess.prompt, np.asarray(svc.outputs[sid], np.int32)])
+                d = np.asarray(self.drafter(hist, ks),
+                               np.int32).reshape(-1)[:ks]
+                draft[s, :d.size] = d
+                n_draft[s] = d.size
+                n_steps[s] = d.size + 1
+                tok[s] = sess.tok
+                pos[s] = sess.steps
+
+            if not n_draft.any():
+                # nothing to verify anywhere (cold drafters, or every lane
+                # down to a 1-token budget): a K+1-wide verify would spend
+                # K+1 steps per emitted token, so take the plain scan for
+                # this round instead — same program family, same stream
+                got = svc.decode({sid: 1 for sid in live})
+                for sid, toks in got.items():
+                    out[sid] += toks
+                    remaining[sid] -= len(toks)
+                continue
+
+            ys = self._dispatch(tok, pos, draft, n_draft, n_steps)
+
+            for sid, s in lanes.items():
+                sess = svc.sessions[sid]
+                nd = int(n_draft[s])
+                m = 0
+                while m < nd and ys[s, m] == draft[s, m]:
+                    m += 1
+                emitted = [int(t) for t in ys[s, :m + 1]]
+                self.drafted += nd
+                self.accepted += m
+                self.accepts[sid] = self.accepts.get(sid, 0) + m
+                svc.outputs[sid].extend(emitted)
+                out[sid].extend(emitted)
+                sess.steps += m + 1
+                sess.tok = int(ys[s, m])
+                remaining[sid] -= m + 1
+                sess.last = {"tokens": emitted, "step": sess.steps,
+                             "accepted": m}
+            for sid in lanes:
+                if svc.sessions[sid].steps >= svc.seq_cap:
+                    svc._retire(sid)
+        return out

@@ -42,6 +42,13 @@ sniffing concrete extents that might coincide), and KV columns are
 truncated to the session's live positions on pack, so a parked KV blob
 costs O(pos) host bytes — the genuinely non-uniform per-session cost the
 scheduler's cost-aware eviction exploits (sessions/lm.py).
+
+``zero_from_column`` is the position-range rollback helper (scrub a
+column's sequence rows >= a position back to canonical zeros — what a
+park+resume round trip would rebuild), and ``column_pspecs`` is
+``grid_pspecs`` for those arbitrary-axis grids: each leaf's session axis
+goes to the "slots" rule's mesh axis, so the LM grid mesh-shards exactly
+like the TCN grid.
 """
 
 from __future__ import annotations
@@ -294,6 +301,50 @@ def unpack_column(tree, axes, slot: int, parked: dict):
         return a.at[_col_index(ax, slot)].set(jnp.asarray(col, a.dtype))
 
     return jax.tree.map(put, tree, axes, decode_parked(parked))
+
+
+def zero_from_column(tree, axes, seq_axes, slot: int, start):
+    """Zero one session's sequence rows at positions >= ``start``.
+
+    The position-range rollback helper: after a speculative verify writes
+    K+1 rows of which only m+1 were accepted, the rejected tail
+    [start, seq_cap) of the slot's column is scrubbed so the device cache
+    is CANONICAL — bit-identical to what a park (O(pos) truncation) +
+    resume (zero-extension) of the same session would rebuild.  Leaves
+    without a sequence axis (recurrent states) are untouched: their
+    rollback is by carried VALUE inside the verify program itself, never
+    by position.  ``start`` may be a traced int32 (one compiled program
+    serves every rollback position)."""
+    start = jnp.asarray(start, jnp.int32)
+
+    def scrub(a, bax, sax):
+        if sax < 0:
+            return a
+        t = sax - (sax > bax)  # seq axis index within the column
+        col = a[_col_index(bax, slot)]
+        pos = jnp.arange(col.shape[t])
+        keep = (pos < start).reshape(
+            (1,) * t + (-1,) + (1,) * (col.ndim - t - 1))
+        return a.at[_col_index(bax, slot)].set(
+            jnp.where(keep, col, jnp.zeros((), a.dtype)))
+
+    return jax.tree.map(scrub, tree, axes, seq_axes)
+
+
+def column_pspecs(tree_shapes, batch_axes, mesh, rules: dict | None = None):
+    """PartitionSpec tree for an arbitrary-axis slot grid: each leaf's
+    per-session axis (``batch_axes``, from ``leaf_axes``) goes to the mesh
+    axis the "slots" logical rule names (``data`` by default); every other
+    dim stays replicated.  The LM KV-cache analog of ``grid_pspecs`` —
+    sessions there live on axis 1 of (L, B, S, H, Dh) leaves, not axis 0.
+    Divisibility-gated (pspec_sized), so construction works on ANY mesh."""
+    rules = resolve_rules(DEFAULT_RULES if rules is None else rules, mesh)
+
+    def spec(leaf, bax):
+        axes = tuple("slots" if i == bax else None for i in range(leaf.ndim))
+        return pspec_sized(axes, rules, leaf.shape, mesh)
+
+    return jax.tree.map(spec, tree_shapes, batch_axes)
 
 
 def slot_park_bytes(cfg: ArchConfig, *, quantize: bool = False) -> int:

@@ -55,9 +55,10 @@ def test_chunked_decode_matches_per_token_decode():
     out_s = stepwise.decode({b: 20})[b]
     assert out_c == out_s
     assert len(out_c) == 20
-    # 5 prompt + 20 gen - 1 = 24 steps: 2 chunked dispatches vs 24
+    # 4 prompt tokens chunk-prefill at open; the last prompt token + 20
+    # generated = 20 scan steps: 2 chunked dispatches vs 20
     assert chunked.dispatches - d0c == 2
-    assert stepwise.dispatches - d0s == 24
+    assert stepwise.dispatches - d0s == 20
 
 
 def test_chunk_boundary_invariance():
@@ -118,6 +119,118 @@ def test_recurrent_cache_bundles_masked_by_value():
     got += svc.decode({a: 7})[a]  # resume in whichever slot frees up
     assert got == want
     assert svc.stats()["evictions"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# true chunked prefill
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _prefill_svc(cap):
+    """One service per prefill cap, reused across hypothesis examples so
+    jitted programs compile once; sessions are closed per example."""
+    return _svc(n_slots=2, seq_cap=64, t_chunk=8, prefill_chunk=cap)
+
+
+def test_chunked_prefill_invariant_to_chunk_schedule():
+    """ANY prefill chunk schedule (different pow2 caps, including the old
+    token-at-a-time scan prefill at cap 0) yields a bit-identical KV cache
+    — asserted on the parked column — and therefore a bit-identical first
+    sampled token and stream."""
+    @given(st.integers(0, 2**31 - 1))
+    def prop(seed):
+        rng = np.random.default_rng(seed)
+        P = int(rng.integers(2, 44))
+        prompt = rng.integers(0, 64, size=P).astype(np.int32)
+        streams, columns, sids = [], [], []
+        caps = [0, 1, int(rng.choice([2, 4, 8, 16])), 64]
+        try:
+            for cap in caps:
+                svc = _prefill_svc(cap)
+                sid = svc.open_session(prompt)
+                sids.append((svc, sid))
+                streams.append(svc.decode({sid: 6})[sid])
+                svc.park(sid)
+                columns.append(svc.parking[sid])
+            for s in streams[1:]:
+                assert s == streams[0]
+            for col in columns[1:]:
+                for a, b in zip(jax.tree.leaves(columns[0]),
+                                jax.tree.leaves(col)):
+                    np.testing.assert_array_equal(a, b)
+        finally:
+            for svc, sid in sids:
+                svc.close(sid)
+    prop()
+
+
+def test_chunked_prefill_dispatch_budget():
+    """A 256-token prompt prefills in <= 8 multi-token chunks (the pow2
+    decomposition of 255 at cap 128) instead of 256 scan steps, and the
+    first decode only needs the single pending prompt token."""
+    svc = _svc(n_slots=2, seq_cap=320, t_chunk=16, prefill_chunk=128)
+    prompt = np.random.default_rng(0).integers(0, 64, size=256).astype(np.int32)
+    d0 = svc.dispatches
+    sid = svc.open_session(prompt)
+    prefill_dispatches = svc.dispatches - d0
+    assert prefill_dispatches == 8  # 128+64+32+16+8+4+2+1
+    assert svc.sessions[sid].steps == 255
+    assert svc.poll(sid)["prompt_left"] == 1
+    d0 = svc.dispatches
+    out = svc.decode({sid: 4})[sid]
+    assert len(out) == 4 and svc.dispatches - d0 == 1
+
+
+def test_chunked_prefill_park_before_first_decode():
+    """A session evicted right after open (prefilled, never decoded)
+    resumes bit-identically: the parked blob is the truncated prefill."""
+    ctl = _svc(n_slots=2, prefill_chunk=16)
+    c = ctl.open_session(np.arange(1, 12, dtype=np.int32))
+    want = ctl.decode({c: 8})[c]
+    svc = _svc(n_slots=2, prefill_chunk=16, max_sessions=8)
+    a = svc.open_session(np.arange(1, 12, dtype=np.int32))
+    b1 = svc.open_session(np.array([1], np.int32))
+    b2 = svc.open_session(np.array([2], np.int32))  # evicts a, never decoded
+    assert svc.poll(a)["state"] == "parked"
+    svc.decode({b1: 1, b2: 1})
+    assert svc.decode({a: 8})[a] == want
+
+
+def test_chunked_prefill_prompt_ending_at_seq_cap_retires():
+    """seq_cap boundary: the longest admissible prompt (seq_cap - 1)
+    prefills, emits its first token plus exactly one more, and retires
+    cleanly — no wrapped cache writes, slot immediately reusable."""
+    svc = _svc(n_slots=2, seq_cap=24, t_chunk=8, prefill_chunk=8)
+    prompt = np.random.default_rng(3).integers(0, 64, size=23).astype(np.int32)
+    ctl = _svc(n_slots=2, seq_cap=24, t_chunk=8, prefill_chunk=0)
+    c = ctl.open_session(prompt)  # scan-prefill control, same geometry
+    want = ctl.decode({c: 2})[c]
+    a = svc.open_session(prompt)
+    assert svc.sessions[a].steps == 22
+    out = svc.decode({a: 50})[a]
+    assert out == want and len(out) == 2  # 24 - 23 + 1
+    assert svc.poll(a)["state"] == "done"
+    assert not svc.sched.is_bound(a)
+    b = svc.open_session(np.array([4], np.int32))  # slot reusable
+    assert len(svc.decode({b: 2})[b]) == 2
+
+
+def test_chunked_prefill_disabled_on_recurrent_bundles():
+    """RWKV/Mamba chunk recurrences are reassociated vs per-token decode,
+    so the service refuses to chunk-prefill them (parallel_safe=False) and
+    keeps the exact forced-token scan prefill instead."""
+    cfg = get_config("rwkv6-1.6b").smoke().replace(
+        n_layers=2, d_model=32, d_ff=64, vocab_size=64, rwkv_head_dim=16)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    svc = LMSessionService(bundle, params, n_slots=2, seq_cap=32,
+                           t_chunk=8, prefill_chunk=64)
+    assert not svc.parallel_safe and svc.prefill_chunk == 0
+    d0 = svc.dispatches
+    sid = svc.open_session(np.array([3, 1, 4, 1], np.int32))
+    assert svc.dispatches == d0  # no prefill dispatches at open
+    assert svc.sessions[sid].steps == 0
+    assert len(svc.decode({sid: 3})[sid]) == 3
 
 
 # ---------------------------------------------------------------------------

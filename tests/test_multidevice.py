@@ -9,7 +9,11 @@ CPU device) and assert the specs actually PLACE shards:
   * slot-grid leaves split 4-ways over ``data`` (2 slots per device);
   * tenant-bank leaves split 4-ways over ``model``;
   * a chunked ``push_audio`` on the 4-device mesh is bit-identical to the
-    unsharded service (cross-device chunk parity).
+    unsharded service (cross-device chunk parity);
+  * the LM slot grid (``column_pspecs``: per-leaf session axes, NOT
+    leading) splits 4-ways over ``data``, chunk-prefills and decodes
+    bit-identically to the unsharded service, and STAYS sharded through
+    ``decode_scan`` dispatches.
 
 CI runs this file as the dedicated ``multidevice`` job.
 """
@@ -79,6 +83,42 @@ for i in range(8):
 for leaf in jax.tree.leaves(svc.states):  # states STAY sharded after a push
     assert len({s.device for s in leaf.addressable_shards}) == 4
 print("push: 4-device chunked scan bit-identical to unsharded")
+
+# -- LM slot grid: per-leaf session axes shard over data -------------------
+from repro.sessions import LMSessionService
+
+lcfg = get_config("olmo-1b").smoke().replace(
+    n_layers=2, d_model=32, d_ff=64, vocab_size=64, head_dim=16)
+lbundle = build_bundle(lcfg)
+lparams = lbundle.init(jax.random.key(1))
+lsvc = LMSessionService(lbundle, lparams, n_slots=8, seq_cap=48, t_chunk=8,
+                        mesh=mesh)
+lplain = LMSessionService(lbundle, lparams, n_slots=8, seq_cap=48, t_chunk=8)
+baxes = jax.tree.leaves(lsvc._batch_axes)
+for leaf, bax in zip(jax.tree.leaves(lsvc.cache), baxes):
+    devs = {s.device for s in leaf.addressable_shards}
+    assert len(devs) == 4, (leaf.shape, devs)
+    for s in leaf.addressable_shards:  # 8 sessions / 4 devices per leaf
+        assert s.data.shape[bax] == 2, (leaf.shape, bax, s.data.shape)
+print("lm grid: 8 sessions -> 4 devices x 2-session shards (per-leaf axes)")
+
+rng = np.random.default_rng(7)
+prompts = [rng.integers(0, 64, size=rng.integers(1, 9)).astype(np.int32)
+           for _ in range(8)]
+lsids = [lsvc.open_session(p) for p in prompts]   # chunk-prefills sharded
+psids = [lplain.open_session(p) for p in prompts]
+for _ in range(2):  # two waves: greedy feedback crosses dispatches too
+    ra = lsvc.decode({sid: 8 for sid in lsids})
+    rb = lplain.decode({sid: 8 for sid in psids})
+    for a, b in zip(lsids, psids):
+        assert ra[a] == rb[b], (ra[a], rb[b])
+for leaf, bax in zip(jax.tree.leaves(lsvc.cache), baxes):
+    devs = {s.device for s in leaf.addressable_shards}
+    assert len(devs) == 4, "cache lost its sharding across decode_scan"
+    for s in leaf.addressable_shards:
+        assert s.data.shape[bax] == 2
+print("lm decode: 4-device decode_scan bit-identical to unsharded, "
+      "placement preserved")
 print("MULTIDEVICE_OK")
 '''
 

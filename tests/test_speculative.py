@@ -1,0 +1,345 @@
+"""Cross-arch speculative parity suite.
+
+The contract under test: speculative ``decode`` (sessions/spec.py, exact
+``verify="scan"`` mode) emits a token stream BIT-IDENTICAL to plain greedy
+``LMSessionService.decode`` for ANY drafter — always-right, always-wrong,
+random garbage, truncated — across the GQA, MLA, RWKV, and SSM(hybrid)
+bundles, through arbitrary decode splits and evict→park→resume churn
+mid-draft (including a disk spill into a fresh service).  The drafter is
+advisory: it can only change HOW FAST the stream is produced, never what
+the stream is.
+
+``verify="parallel"`` (the throughput mode, pure-KV bundles) has a
+different exactness class — greedy-consistent under the chunk program, not
+bitwise vs the sequential scan — so its tests assert self-consistency
+(park/resume invariance, exact emission counts, acceptance bookkeeping)
+rather than parity with the scan."""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs import get_config
+from repro.models import build_bundle
+from repro.sessions import (
+    LMSessionService,
+    SpeculativeDecoder,
+    ngram_drafter,
+    unpack_column,
+    zero_from_column,
+)
+
+settings.register_profile("spec", deadline=None, max_examples=8)
+settings.load_profile("spec")
+
+V = 64
+
+# one bundle per attention/recurrence family in the zoo: pure-KV rows
+# (gqa, mla) verify on the service's own decode_scan program; recurrent
+# leaves (rwkv, ssm) verify on the alive-masked scan with value rollback
+ARCHS = {
+    "gqa": ("olmo-1b", dict(n_layers=2, d_model=32, d_ff=64,
+                            vocab_size=V, head_dim=16)),
+    "mla": ("deepseek-v2-lite-16b", dict(n_layers=2, d_model=32, d_ff=64,
+                                         vocab_size=V)),
+    "rwkv": ("rwkv6-1.6b", dict(n_layers=2, d_model=32, d_ff=64,
+                                vocab_size=V, rwkv_head_dim=16)),
+    "ssm": ("zamba2-1.2b", dict(n_layers=2, d_model=32, d_ff=64,
+                                vocab_size=V)),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch):
+    name, extra = ARCHS[arch]
+    cfg = get_config(name).smoke().replace(**extra)
+    bundle = build_bundle(cfg)
+    return bundle, bundle.init(jax.random.key(0))
+
+
+@functools.lru_cache(maxsize=None)
+def _services(arch):
+    """(plain reference, speculative target) service pair per arch, reused
+    across tests — sessions are opened/closed per case so jitted programs
+    compile once per arch."""
+    bundle, params = _setup(arch)
+    mk = lambda: LMSessionService(bundle, params, n_slots=2, seq_cap=96,
+                                  t_chunk=8, max_sessions=8)
+    return mk(), mk()
+
+
+def _reference(arch, prompt, n):
+    """The plain greedy stream — ground truth for every parity assertion."""
+    plain, _ = _services(arch)
+    sid = plain.open_session(np.asarray(prompt, np.int32))
+    try:
+        return plain.decode({sid: n})[sid]
+    finally:
+        plain.close(sid)
+
+
+def _drafters(prompt, ref):
+    """Adversarial drafter zoo, built against the true stream ``ref``."""
+    P = len(prompt)
+
+    def right(hist, k):  # oracle: always proposes the true continuation
+        i = len(hist) - P
+        return np.asarray(ref[i:i + k], np.int32)
+
+    def wrong(hist, k):  # adversary: every proposal is off by one
+        i = len(hist) - P
+        return np.asarray([(t + 1) % V for t in ref[i:i + k]], np.int32)
+
+    def truncated(hist, k):  # right but returns fewer than asked
+        i = len(hist) - P
+        return np.asarray(ref[i:i + k][:(k + 1) // 2], np.int32)
+
+    def random(hist, k):
+        return np.random.default_rng(len(hist)).integers(
+            0, V, size=k).astype(np.int32)
+
+    return {"always-right": right, "always-wrong": wrong,
+            "truncated": truncated, "random": random,
+            "self-draft": ngram_drafter()}
+
+
+# ---------------------------------------------------------------------------
+# exact (scan) mode: bit-identity for every drafter, every arch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_speculative_bit_identical_for_every_drafter(arch):
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    want = _reference(arch, prompt, 30)
+    _, svc = _services(arch)
+    for name, dr in _drafters(prompt, want).items():
+        sp = SpeculativeDecoder(svc, dr, k=4)
+        sid = svc.open_session(prompt)
+        try:
+            got = sp.decode({sid: 12})[sid]
+            got += sp.decode({sid: 18})[sid]  # split mid-stream
+        finally:
+            svc.close(sid)
+        assert got == want, (arch, name)
+
+
+def test_acceptance_bookkeeping():
+    """Per-lane accept counts: the oracle drafter accepts everything, the
+    adversary nothing — and the speedup accounting (dispatch count) shows
+    accepted drafts turning into multi-token dispatches."""
+    prompt = np.array([7, 9], np.int32)
+    want = _reference("gqa", prompt, 24)
+    _, svc = _services("gqa")
+    drs = _drafters(prompt, want)
+
+    sp = SpeculativeDecoder(svc, drs["always-right"], k=4)
+    sid = svc.open_session(prompt)
+    d0 = svc.dispatches
+    sp.decode({sid: 21})
+    right_dispatches = svc.dispatches - d0
+    svc.close(sid)
+    assert sp.acceptance_rate == 1.0
+    assert sp.accepts[sid] == sp.accepted > 0
+    # 1 first-token dispatch + ceil(20 / (k+1)) full-acceptance verifies
+    assert right_dispatches == 1 + 4
+
+    sp = SpeculativeDecoder(svc, drs["always-wrong"], k=4)
+    sid = svc.open_session(prompt)
+    d0 = svc.dispatches
+    out = sp.decode({sid: 21})[sid]
+    svc.close(sid)
+    assert out == want[:21]
+    assert sp.accepted == 0 and sp.drafted > 0
+    # every verify emits exactly 1 token: no faster than plain per-token
+    assert svc.dispatches - d0 == 1 + 20
+
+
+@pytest.mark.parametrize("arch", ["gqa", "rwkv"])
+def test_speculative_churn_property(arch):
+    """Property: random drafter mixes, random K, random decode splits, and
+    random park/evict churn mid-stream never change the emitted stream —
+    on both verify-scan families (decode_scan reuse and alive-masked)."""
+    @given(st.integers(0, 2**31 - 1))
+    def prop(seed):
+        rng = np.random.default_rng(seed)
+        prompt = rng.integers(0, V, size=int(rng.integers(1, 6))).astype(
+            np.int32)
+        total = int(rng.integers(8, 28))
+        want = _reference(arch, prompt, total)
+        _, svc = _services(arch)
+        drs = list(_drafters(prompt, want).values())
+        sp = SpeculativeDecoder(
+            svc, lambda h, k: drs[int(rng.integers(len(drs)))](h, k),
+            k=int(rng.integers(1, 6)))
+        sid = svc.open_session(prompt)
+        other = svc.open_session(np.array([1], np.int32))  # churn pressure
+        got = []
+        try:
+            left = total
+            while left:
+                n = int(min(rng.integers(1, 9), left))
+                got += sp.decode({sid: n})[sid]
+                left -= n
+                if rng.random() < 0.4:  # evict mid-draft sequence
+                    svc.park(sid)
+                    svc.decode({other: 2})
+        finally:
+            svc.close(sid)
+            svc.close(other)
+        assert got == want
+    prop()
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_spec_park_resume_through_disk_mid_draft(arch, tmp_path):
+    """A session interrupted mid-speculation, spilled to disk, and restored
+    into a DIFFERENT service resumes the exact stream — the drafter needs
+    no rollback because its input is the host-side token history, which
+    travels with the spill meta."""
+    prompt = np.array([5, 6], np.int32)
+    want = _reference(arch, prompt, 24)
+    plain, svc = _services(arch)
+    sp = SpeculativeDecoder(svc, ngram_drafter(), k=3)
+    sid = svc.open_session(prompt)
+    got = sp.decode({sid: 9})[sid]
+    path = str(tmp_path / f"spec_{arch}.npz")
+    svc.spill_parking(path, include_bound=True)
+    assert svc.poll(sid)["state"] == "parked"
+    svc.close(sid)
+
+    restored = plain.restore_parking(path)  # "restart" into the other grid
+    assert restored == [sid]
+    sp2 = SpeculativeDecoder(plain, ngram_drafter(), k=5)  # different K too
+    try:
+        got += sp2.decode({sid: 15})[sid]
+    finally:
+        plain.close(sid)
+    assert got == want
+
+
+def test_speculative_retires_at_seq_cap():
+    """A draft that would run past seq_cap is clamped; the session retires
+    exactly like plain decode (slot freed, outputs kept)."""
+    bundle, params = _setup("gqa")
+    svc = LMSessionService(bundle, params, n_slots=2, seq_cap=12, t_chunk=8)
+    ctl = LMSessionService(bundle, params, n_slots=2, seq_cap=12, t_chunk=8)
+    prompt = np.array([1, 2, 3], np.int32)
+    c = ctl.open_session(prompt)
+    want = ctl.decode({c: 50})[c]
+    sp = SpeculativeDecoder(svc, ngram_drafter(), k=4)
+    sid = svc.open_session(prompt)
+    out = sp.decode({sid: 50})[sid]
+    assert out == want and len(out) == 10  # 12 - 3 + 1
+    assert svc.poll(sid)["state"] == "done"
+    with pytest.raises(RuntimeError):
+        sp.decode({sid: 1})
+
+
+def test_speculative_validation():
+    _, svc = _services("gqa")
+    with pytest.raises(ValueError):
+        SpeculativeDecoder(svc, k=0)
+    with pytest.raises(ValueError):
+        SpeculativeDecoder(svc, verify="teleport")
+    _, rsvc = _services("rwkv")
+    with pytest.raises(ValueError, match="parallel verify"):
+        SpeculativeDecoder(rsvc, verify="parallel")
+    sp = SpeculativeDecoder(svc, k=2)
+    with pytest.raises(KeyError):
+        sp.decode({12345: 1})
+    sid = svc.open_session(np.array([1], np.int32))
+    try:
+        with pytest.raises(ValueError):
+            sp.decode({sid: -1})
+        assert sp.decode({sid: 0}) == {sid: []}
+    finally:
+        svc.close(sid)
+
+
+# ---------------------------------------------------------------------------
+# parallel (throughput) mode: self-consistency, not scan-bitwise parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["gqa", "mla"])
+def test_parallel_verify_self_consistent_across_churn(arch):
+    """The parallel chunk mode emits a deterministic stream for a given
+    drafter, and evict→park→resume (truncate + zero-extend of the KV
+    column) cannot change it: rejected rows past the accepted position are
+    masked out of every future attention window."""
+    prompt = np.array([2, 7, 1], np.int32)
+    _, svc = _services(arch)
+
+    sp = SpeculativeDecoder(svc, ngram_drafter(), k=4, verify="parallel")
+    sid = svc.open_session(prompt)
+    want = sp.decode({sid: 26})[sid]
+    assert len(want) == 26  # exact emission counts, never overshoots
+    svc.close(sid)
+
+    sp = SpeculativeDecoder(svc, ngram_drafter(), k=4, verify="parallel")
+    sid = svc.open_session(prompt)
+    other = svc.open_session(np.array([9], np.int32))
+    try:
+        got = sp.decode({sid: 7})[sid]
+        svc.park(sid)              # mid-draft eviction
+        svc.decode({other: 3})     # neighbor stomps the grid
+        got += sp.decode({sid: 19})[sid]
+    finally:
+        svc.close(sid)
+        svc.close(other)
+    assert got == want
+
+
+def test_parallel_verify_acceptance_and_cap():
+    """Oracle drafts are fully accepted in parallel mode (the verify
+    logits ARE the stream source, so self-agreement is exact), and lanes
+    too close to seq_cap fall back to the plain scan and retire cleanly."""
+    bundle, params = _setup("gqa")
+    svc = LMSessionService(bundle, params, n_slots=2, seq_cap=24, t_chunk=8)
+    sp = SpeculativeDecoder(svc, ngram_drafter(), k=4, verify="parallel")
+    sid = svc.open_session(np.array([4, 2], np.int32))
+    first = sp.decode({sid: 8})[sid]
+
+    def oracle(hist, k):  # replay what parallel mode itself generated
+        i = len(hist) - 2
+        return np.asarray((first + [0] * k)[i:i + k], np.int32)
+
+    sp2 = SpeculativeDecoder(svc, oracle, k=4, verify="parallel")
+    # fresh session, same prompt: parallel mode is deterministic
+    sid2 = svc.open_session(np.array([4, 2], np.int32))
+    out = sp2.decode({sid2: 8})[sid2]
+    assert out == first
+    assert sp2.acceptance_rate == 1.0
+    # run both into the cap: retire exactly like plain decode
+    tail = sp.decode({sid: 50})[sid]
+    assert len(first + tail) == 24 - 2 + 1
+    assert svc.poll(sid)["state"] == "done"
+    svc.close(sid2)
+
+
+def test_zero_from_column_canonicalizes_rejected_rows():
+    """state.zero_from_column scrubs the rejected verify tail to exactly
+    what a park (O(pos) truncation) + resume (zero-extend) would rebuild —
+    the device column becomes canonical in place."""
+    prompt = np.array([3, 3, 3], np.int32)
+    _, svc = _services("gqa")
+    # a drafter that is wrong on purpose guarantees rejected rows
+    sp = SpeculativeDecoder(svc, lambda h, k: np.full(k, (h[-1] + 1) % V,
+                                                      np.int32),
+                            k=4, verify="parallel")
+    sid = svc.open_session(prompt)
+    try:
+        sp.decode({sid: 6})
+        assert sp.accepted < sp.drafted  # rejections actually happened
+        slot = svc.sched.slot_of[sid]
+        steps = svc.sessions[sid].steps
+        blob = svc._pack(slot, sid)  # {"kv": column truncated to live pos}
+        scrubbed = zero_from_column(svc.cache, svc._batch_axes,
+                                    svc._seq_axes, slot, steps)
+        rebuilt = unpack_column(svc.cache, svc._batch_axes, slot, blob["kv"])
+        for a, b in zip(jax.tree.leaves(scrubbed), jax.tree.leaves(rebuilt)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        svc.close(sid)
