@@ -16,14 +16,21 @@ Gates (CI fails the job instead of merely uploading the artifact):
     cost relative to a single dispatch on the same machine is stable —
     a 2x growth of that ratio means pack/unpack genuinely got heavier;
   * parked-state bytes — within 2x of baseline (structural, exact on the
-    TCN side; O(pos) at the bench's fixed position on the LM side).
+    TCN side; O(pos) at the bench's fixed position on the LM side);
+  * kernel fused fast path (--kernels BENCH_kernels.json) — the fused
+    chunk executor must be >= 1.2x the unfused scan on CPU at
+    T_chunk=160 for BOTH the fp32 and quantized sweeps, with the bench's
+    bit-identity assertion recorded True, and must not fall below 1/3 of
+    the committed baseline's speedup (degradation guard, sized to sit
+    outside shared-runner timing noise).
 
 Old-schema baselines (pre --service split: no "tcn"/"lm" sections) are
 upgraded on the fly; missing baseline metrics are reported and skipped,
 so adding metrics never requires a flag day.
 
     PYTHONPATH=src python -m benchmarks.check_regression \\
-        --fresh BENCH_session_throughput.json --baseline baseline.json
+        --fresh BENCH_session_throughput.json --baseline baseline.json \\
+        [--kernels BENCH_kernels.json --kernels-baseline kb.json]
 """
 
 import argparse
@@ -33,6 +40,11 @@ import sys
 TCN_MIN_SPEEDUP = 5.0
 LM_MIN_SPEEDUP = 3.0
 SPEC_MIN_SPEEDUP = 1.3  # speculative K=4 self-draft vs plain decode
+KERNEL_MIN_SPEEDUP = 1.2  # fused vs unfused chunk scan, CPU floor
+# degradation guard vs the committed baseline; wide enough to absorb
+# shared-runner timing noise (observed ~2x swing under container load) —
+# the absolute floor above is the hard contract
+KERNEL_RATIO_MAX = 3.0
 COST_RATIO_MAX = 2.0
 BYTES_RATIO_MAX = 2.0
 NOISE_FLOOR = 4.0  # don't fail normalized-cost ratios in the noise band
@@ -125,13 +137,64 @@ def check(fresh: dict, base: dict) -> list[str]:
     return errors
 
 
+def check_kernels(fresh: dict, base: dict | None) -> list[str]:
+    """Gate the fused-kernel fast path (BENCH_kernels.json schema).
+
+    The absolute >= 1.2x floor and the bit-identity flag always apply;
+    the degradation guard vs baseline only applies like-for-like (same
+    smoke flag), since a smoke sweep's speedup is not comparable to a
+    full run's."""
+    errors = []
+    comparable = base is not None and base.get("smoke") == fresh.get("smoke")
+    for key in ("fp32", "quantized"):
+        sec = fresh.get(key)
+        if sec is None:
+            errors.append(f"kernels: fresh results have no {key!r} sweep")
+            continue
+        s = sec.get("speedup_fused", 0.0)
+        if s < KERNEL_MIN_SPEEDUP:
+            errors.append(
+                f"kernels {key}: fused speedup {s:.2f}x < "
+                f"{KERNEL_MIN_SPEEDUP}x (unfused {sec.get('us_unfused')}us"
+                f" vs fused {sec.get('us_fused')}us)",
+            )
+        if not sec.get("bit_identical"):
+            errors.append(
+                f"kernels {key}: fused path not bit-identical to the scan path",
+            )
+        bs = (base or {}).get(key, {}).get("speedup_fused")
+        if bs is None or not comparable:
+            print(f"[gate] SKIP kernels {key}: no comparable baseline")
+            bs = None
+        elif s < bs / KERNEL_RATIO_MAX:
+            errors.append(
+                f"kernels {key}: fused speedup {s:.2f}x < baseline "
+                f"{bs:.2f}x / {KERNEL_RATIO_MAX} (regression)",
+            )
+        print(
+            f"[gate] kernels {key}: speedup={round(s, 2)} "
+            f"baseline={None if bs is None else round(bs, 2)}",
+        )
+    return errors
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default="BENCH_session_throughput.json")
     ap.add_argument("--baseline", required=True)
+    ap.add_argument("--kernels", default=None, help="BENCH_kernels.json to gate")
+    ap.add_argument("--kernels-baseline", default=None)
     args = ap.parse_args()
     fresh, base = _load(args.fresh), _load(args.baseline)
     errors = check(fresh, base)
+    if args.kernels:
+        with open(args.kernels) as f:
+            kfresh = json.load(f)
+        kbase = None
+        if args.kernels_baseline:
+            with open(args.kernels_baseline) as f:
+                kbase = json.load(f)
+        errors += check_kernels(kfresh, kbase)
     for name in ("tcn", "lm"):
         f = fresh.get(name, {})
         speedup = f.get("speedup_160_vs_1") or f.get("speedup_16_vs_1")

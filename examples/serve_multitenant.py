@@ -4,6 +4,10 @@ through the shared TCN embedder) while their audio streams are live; a
 burst of extra sessions then overflows the slot grid, forcing LRU eviction
 to the host parking lot and a bit-exact resume.
 
+Runs on the fused kernel fast path (``fused=True``: BN folded at
+construction, one fused block op per TCN block per tick — README "Kernel
+fast path"); set ``FUSED = False`` below for the per-sample scan body.
+
     PYTHONPATH=src python examples/serve_multitenant.py
 """
 
@@ -16,6 +20,8 @@ from repro.data import KeywordAudio
 from repro.models import build_bundle
 from repro.models.tcn import tcn_empty_state
 from repro.sessions import StreamSessionService
+
+FUSED = True
 
 
 def stream_clip(svc, sid, frames):
@@ -34,7 +40,7 @@ def main():
     params = bundle.init(jax.random.key(0))
     svc = StreamSessionService(bundle, params, tcn_empty_state(cfg),
                                n_slots=4, max_tenants=4, max_ways=4,
-                               max_sessions=12)
+                               max_sessions=12, fused=FUSED)
     audio = KeywordAudio(n_classes=6, seed=0)
 
     print("== two tenants enroll different keyword sets, streams live ==")

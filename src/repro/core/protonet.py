@@ -96,15 +96,34 @@ def l2_classify(x: jax.Array, prototypes: jax.Array):
 # ---------------------------------------------------------------------------
 
 def adapt(embed_fn, params, support_batch, labels, n_ways: int, k: int,
-          *, log2: bool = False):
+          *, log2: bool = False, backend: str | None = None):
     """End-to-end FSL (Fig. 6): embed the N*k support samples (step 1),
     segment-sum into prototypes (step 2), extract FC params (step 3).
-    Returns (W, b).  Pure function of params+support — jit/pjit-able."""
+    Returns (W, b).  Pure function of params+support — jit/pjit-able.
+
+    Steps 2+3 go through the kernel dispatch layer (kernels/dispatch):
+    on accelerators the fused ``proto_extract`` kernel produces W and b
+    in one pass (the bias' square-and-reduce never round-trips to HBM);
+    the CPU/"ref" resolution keeps the exact segment-sum path.  The log2
+    form (Eq. 8) stays pure-jnp — its exponent-doubling is already
+    MatMul-free.
+
+    Backend resolution happens at CALL time here (trace time under jit)
+    — adapt is the cold enrollment path, called eagerly by every current
+    caller, so there is no per-dispatch re-probe to amortize; pass
+    ``backend=`` explicitly (or pre-build ``make_proto_extract_op``) to
+    pin the choice in a hot loop."""
     emb = embed_fn(params, support_batch).astype(jnp.float32)
-    s = support_sums(emb, labels, n_ways)
     if log2:
+        s = support_sums(emb, labels, n_ways)
         w, b, _, _ = pn_fc_from_sums_log2(s, k)
         return w, b
+    from repro.kernels import dispatch
+    from repro.kernels.ops import make_proto_extract_op
+    if dispatch.resolve(backend).use_pallas:
+        onehot = jax.nn.one_hot(labels, n_ways, dtype=jnp.float32).T
+        return make_proto_extract_op(backend)(emb, onehot, k)
+    s = support_sums(emb, labels, n_ways)
     return pn_fc_from_sums(s, k)
 
 

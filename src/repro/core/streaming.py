@@ -131,6 +131,90 @@ def stream_scan_single(params, bn_state, cfg: ArchConfig, state: dict,
     return new_state, embs, logits
 
 
+# ---------------------------------------------------------------------------
+# Fused kernel fast path: whole-chunk block evaluation over ring-buffer taps
+# ---------------------------------------------------------------------------
+
+def _ordered_history(ring, t):
+    """Time-order one ring's circular layout.  ring: (S, n, c); t: (S,)
+    step counters.  Row i of the result is the sample at time t-n+i —
+    slots not yet written (stream younger than n) read their zero init,
+    which is exactly causal left-padding."""
+    n = ring.shape[1]
+    idx = (t[:, None] + jnp.arange(n)[None, :]) % n
+    return jnp.take_along_axis(ring, idx[:, :, None], axis=1)
+
+
+def _ring_advance(strip, t, lengths, n):
+    """New circular ring contents after consuming ``lengths`` chunk samples.
+
+    strip: (S, n+T, c) time-ordered [history | chunk-values]; the window
+    ``strip[L : L+n]`` holds times t+L-n .. t+L-1, re-laid so slot s holds
+    the sample at time ≡ s (mod n).  L=0 reproduces the old ring bit-for-
+    bit (the inactive-slot freeze), with no branch."""
+    ar = jnp.arange(n)[None, :]
+    window = jnp.take_along_axis(strip, (lengths[:, None] + ar)[:, :, None],
+                                 axis=1)
+    perm = (ar - (t + lengths)[:, None]) % n
+    return jnp.take_along_axis(window, perm[:, :, None], axis=1)
+
+
+def make_fused_chunk(cfg: ArchConfig, *, quantize: bool = False,
+                     backend: str | None = None):
+    """Build the fused chunk executor (kernel backend resolved ONCE).
+
+    Returns ``fused_chunk(fused_params, states, x, lengths)`` advancing a
+    whole slot grid over a time chunk through kernels/tcn_block.py:
+    ``states`` is the SoA grid (rings (S, n, c), t (S,)); x: (S, T, C_in);
+    lengths: (S,) valid-prefix lengths (the service's ragged chunks are
+    always prefixes of the padded tick).  Returns (new_states, embs
+    (S, T, V), logits (S, T, n_classes)); outputs at positions >= lengths
+    are computed-but-meaningless (callers slice), state bit-freezes there.
+
+    Vs ``grid_scan`` this pays k tap-shifted batched matmuls per conv for
+    the WHOLE chunk instead of a T-step lax.scan of per-sample ops, and
+    the conv history is the ring taps themselves — no per-chunk re-pad.
+    On baked params (models/tcn.bake_stream_params) it is bit-identical
+    to ``grid_scan``; params must enter jit as arguments (same discipline
+    as stream_scan_single).  ``backend=None`` defers to
+    ``cfg.kernel_backend``."""
+    from repro.kernels.tcn_block import expand_weight, make_block_fn
+
+    block_fn = make_block_fn(backend or cfg.kernel_backend)
+    k = cfg.tcn_kernel
+    qa = (lambda a: fake_quant_act_u4(a, jnp.float32(cfg.act_scale))) \
+        if quantize else (lambda a: a)
+
+    def fused_chunk(fused_params, states, x, lengths):
+        t = states["t"]
+        lengths = jnp.asarray(lengths, t.dtype)
+        new_blocks = {}
+        h = x
+        for i in range(len(cfg.tcn_channels)):
+            name = f"b{i}"
+            d = 2 ** i
+            rings = states["blocks"][name]
+            hist1 = _ordered_history(rings["ring1"], t)
+            hist2 = _ordered_history(rings["ring2"], t)
+            strip1 = jnp.concatenate([hist1, h], axis=1)
+            h, mid = block_fn(strip1, hist2, fused_params["blocks"][name],
+                              dilation=d, k=k, act_scale=cfg.act_scale,
+                              quantize=quantize)
+            strip2 = jnp.concatenate([hist2, mid], axis=1)
+            new_blocks[name] = {
+                "ring1": _ring_advance(strip1, t, lengths,
+                                       rings["ring1"].shape[1]),
+                "ring2": _ring_advance(strip2, t, lengths,
+                                       rings["ring2"].shape[1]),
+            }
+        emb = h @ expand_weight(fused_params["head_w"]) + fused_params["head_b"]
+        emb = qa(jax.nn.relu(emb))
+        logits = emb @ fused_params["fc"]["w"] + fused_params["fc"]["b"]
+        return {"t": t + lengths, "blocks": new_blocks}, emb, logits
+
+    return fused_chunk
+
+
 def _taps(ring, x_t, t, dilation: int, k: int):
     """Collect the k conv taps for the current step: x_{t-(k-1-j)d}, j=0..k-1.
 

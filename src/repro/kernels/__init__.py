@@ -1,3 +1,13 @@
-from repro.kernels.ops import dilated_conv_op, log2_matmul_op, proto_extract_op
+from repro.kernels import dispatch, ref
+from repro.kernels.ops import (
+    make_dilated_conv_op,
+    make_log2_matmul_op,
+    make_proto_extract_op,
+)
+from repro.kernels.tcn_block import expand_weight, make_block_fn
 
-__all__ = ["dilated_conv_op", "log2_matmul_op", "proto_extract_op"]
+__all__ = [
+    "dispatch", "ref",
+    "make_dilated_conv_op", "make_log2_matmul_op", "make_proto_extract_op",
+    "expand_weight", "make_block_fn",
+]

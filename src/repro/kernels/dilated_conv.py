@@ -33,17 +33,19 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, *, k: int, dilation: int, T: int):
 
 @functools.partial(jax.jit, static_argnames=("dilation", "bco", "interpret"))
 def dilated_causal_conv(x, w, b, dilation: int, *, bco: int = 128,
-                        interpret: bool | None = None):
-    """x: (B, T, Cin); w: (K, Cin, Cout); b: (Cout,) -> (B, T, Cout) f32."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+                        interpret: bool = False):
+    """x: (B, T, Cin); w: (K, Cin, Cout); b: (Cout,) -> (B, T, Cout) f32.
+
+    ``interpret`` is an explicit static parameter: backend selection happens
+    once in kernels/dispatch (never re-probed per trace under jit).
+    """
     B, T, Cin = x.shape
     K, _, Cout = w.shape
     pad = (K - 1) * dilation
     xp = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
     bco = min(bco, Cout)
     Cp = -(-Cout // bco) * bco
-    if Cp != Cout:
+    if Cp != Cout:  # Cout tile padding (sliced back off below)
         w = jnp.pad(w, ((0, 0), (0, 0), (0, Cp - Cout)))
         b = jnp.pad(b, (0, Cp - Cout))
     out = pl.pallas_call(

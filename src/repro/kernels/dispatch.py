@@ -1,0 +1,106 @@
+"""Backend dispatch for the Pallas kernels — resolved ONCE per op.
+
+The kernels previously probed ``jax.default_backend()`` inside each call
+(under ``jit`` static args, so the probe re-ran at every trace) and every
+call site hardcoded ``use_pallas``.  This module centralizes the choice:
+
+    backend      lowering                         when
+    ----------   ------------------------------   -------------------------
+    "mosaic"     pl.pallas_call, compiled (TPU)   auto on TPU
+    "triton"     pl.pallas_call, compiled (GPU)   auto on GPU
+    "interpret"  pl.pallas_call, interpret mode   forced (kernel debugging)
+    "ref"        pure-jnp oracle (kernels/ref.py) auto on CPU
+    "auto"       resolve from the platform        the default everywhere
+
+``resolve()`` is called at *op construction time* (``make_*_op`` in
+kernels/ops.py, service/session __init__, bundle build) — never inside a
+jitted function — and the result is baked into the returned op as static
+configuration.  Selection order: explicit argument > ``ArchConfig
+.kernel_backend`` (callers pass it through) > ``REPRO_KERNEL_BACKEND``
+env var > platform default.
+
+On CPU "auto" resolves to the jnp oracle, NOT interpret mode: interpret
+mode emulates the kernel instruction-by-instruction (orders of magnitude
+slower) and exists for parity testing only.  The fused fast path's CPU
+win therefore comes from the *fused* ref implementations (one batched
+matmul chain per block instead of a per-sample scan), which is exactly
+the speedup BENCH_kernels.json gates.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+BACKENDS = ("auto", "mosaic", "triton", "interpret", "ref")
+_PLATFORM_DEFAULT = {"tpu": "mosaic", "gpu": "triton", "cuda": "triton",
+                     "rocm": "triton"}
+
+
+@dataclass(frozen=True)
+class Resolved:
+    """A backend choice fixed at op-construction time.
+
+    ``use_pallas`` says whether the op lowers through ``pl.pallas_call``;
+    ``interpret`` is the *explicit* static flag those calls receive — the
+    kernels themselves never probe the platform again.
+    """
+
+    backend: str      # mosaic | triton | interpret | ref
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.backend != "ref"
+
+    @property
+    def interpret(self) -> bool:
+        return self.backend == "interpret"
+
+
+def resolve(requested: str | None = "auto") -> Resolved:
+    """Resolve a requested backend to a concrete one.  Call once, outside
+    jit, when constructing an op; ``None`` means "auto"."""
+    req = (requested or "auto").lower()
+    env = os.environ.get(ENV_VAR, "").strip().lower()
+    if req == "auto" and env:
+        req = env
+    if req not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {req!r}; expected one of {BACKENDS}")
+    if req == "auto":
+        req = _PLATFORM_DEFAULT.get(jax.default_backend(), "ref")
+    return Resolved(req)
+
+
+# ---------------------------------------------------------------------------
+# Op registry: op name -> {backend-class: impl builder}
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, dict[str, object]] = {}
+
+
+def register(op: str, *, ref, pallas) -> None:
+    """Register the two implementation classes of an op: the jnp oracle
+    (``ref``) and a builder ``pallas(interpret: bool) -> callable`` that
+    bakes the static interpret flag in."""
+    _REGISTRY[op] = {"ref": ref, "pallas": pallas}
+
+
+def build(op: str, backend: str | None = "auto"):
+    """Resolve ``backend`` once and return the concrete implementation for
+    ``op``.  The returned callable carries no backend logic of its own."""
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown kernel op {op!r}; registered: "
+                       f"{sorted(_REGISTRY)}")
+    r = resolve(backend)
+    entry = _REGISTRY[op]
+    if not r.use_pallas:
+        return entry["ref"]
+    return entry["pallas"](r.interpret)
+
+
+def registered_ops() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

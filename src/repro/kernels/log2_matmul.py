@@ -41,12 +41,14 @@ def _kernel(x_ref, w_ref, scale_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
 def log2_matmul(x, w_packed, scale, *, bm: int = 256, bn: int = 512,
-                interpret: bool | None = None):
-    """x: (M, K); w_packed: (K, N//2) uint8; scale: () f32 -> (M, N) f32."""
+                interpret: bool = False):
+    """x: (M, K); w_packed: (K, N//2) uint8; scale: () f32 -> (M, N) f32.
+
+    ``interpret`` is an explicit static parameter: backend selection happens
+    once in kernels/dispatch (never re-probed per trace under jit).
+    """
     M, K = x.shape
     N = w_packed.shape[1] * 2
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
     bm = min(bm, M)
     bn = min(bn, N)
     # pad M/N up to tile multiples (K strip is always whole)

@@ -1,32 +1,53 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public op constructors over the backend registry (kernels/dispatch.py).
 
-On CPU (this container) kernels run in interpret mode against the jnp
-oracles in ref.py; on TPU they compile to Mosaic.  ``use_pallas=False``
-switches any call site to the oracle — the dry-run lowers the pure-JAX path.
+Backend choice happens ONCE, at op construction (``make_*_op``), never at
+trace time: the old per-call ``use_pallas`` flags and the trace-time
+``jax.default_backend()`` probes are gone.  ``backend=None``/"auto"
+resolves from REPRO_KERNEL_BACKEND or the platform (TPU -> mosaic,
+GPU -> triton, CPU -> the jnp oracle); "interpret" forces pallas
+interpret mode (parity testing); "ref" forces the oracle.
+
+    conv_op = make_dilated_conv_op(cfg.kernel_backend)  # resolve once
+    y = conv_op(x, w, b, dilation)                      # hot loop
 """
 
 from __future__ import annotations
 
+import functools
 
-from repro.kernels import ref
+from repro.kernels import dispatch, ref
 from repro.kernels.dilated_conv import dilated_causal_conv
 from repro.kernels.log2_matmul import log2_matmul
 from repro.kernels.proto_extract import proto_extract
 
+dispatch.register(
+    "log2_matmul",
+    ref=ref.log2_matmul_ref,
+    pallas=lambda interp: functools.partial(log2_matmul, interpret=interp),
+)
+dispatch.register(
+    "dilated_conv",
+    ref=ref.dilated_conv_ref,
+    pallas=lambda interp: functools.partial(dilated_causal_conv,
+                                            interpret=interp),
+)
+dispatch.register(
+    "proto_extract",
+    ref=ref.proto_extract_ref,
+    pallas=lambda interp: functools.partial(proto_extract, interpret=interp),
+)
 
-def log2_matmul_op(x, w_packed, scale, *, use_pallas: bool = True):
-    if not use_pallas:
-        return ref.log2_matmul_ref(x, w_packed, scale)
-    return log2_matmul(x, w_packed, scale)
+
+def make_log2_matmul_op(backend: str | None = None):
+    """(x (M, K), w_packed (K, N//2) u8, scale ()) -> (M, N) f32."""
+    return dispatch.build("log2_matmul", backend)
 
 
-def dilated_conv_op(x, w, b, dilation: int, *, use_pallas: bool = True):
-    if not use_pallas:
-        return ref.dilated_conv_ref(x, w, b, dilation)
-    return dilated_causal_conv(x, w, b, dilation)
+def make_dilated_conv_op(backend: str | None = None):
+    """(x (B, T, Cin), w (K, Cin, Cout), b, dilation) -> (B, T, Cout) f32."""
+    return dispatch.build("dilated_conv", backend)
 
 
-def proto_extract_op(emb, onehot, k: int, *, use_pallas: bool = True):
-    if not use_pallas:
-        return ref.proto_extract_ref(emb, onehot, k)
-    return proto_extract(emb, onehot, k)
+def make_proto_extract_op(backend: str | None = None):
+    """(emb (Nk, V), onehot (N, Nk), k) -> (W (N, V), b (N,))."""
+    return dispatch.build("proto_extract", backend)

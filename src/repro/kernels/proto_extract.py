@@ -29,10 +29,12 @@ def _kernel(oh_ref, emb_ref, w_ref, b_ref, *, inv_2k: float):
 
 @functools.partial(jax.jit, static_argnames=("k", "bn", "interpret"))
 def proto_extract(emb, onehot, k: int, *, bn: int = 128,
-                  interpret: bool | None = None):
-    """emb: (Nk, V); onehot: (N, Nk) dispatch matrix -> (W (N,V), b (N,))."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+                  interpret: bool = False):
+    """emb: (Nk, V); onehot: (N, Nk) dispatch matrix -> (W (N,V), b (N,)).
+
+    ``interpret`` is an explicit static parameter: backend selection happens
+    once in kernels/dispatch (never re-probed per trace under jit).
+    """
     N, Nk = onehot.shape
     V = emb.shape[1]
     bn = min(bn, N)

@@ -40,17 +40,39 @@ def proto_extract_ref(emb: jax.Array, onehot: jax.Array, k: int):
     return w, b
 
 
-def wkv6_chunk_ref(r, k, v, log_w, u, state):
-    """One WKV6 chunk oracle: naive per-step recurrence over the chunk.
-    r,k,v,log_w: (C, H, Dh); u: (H, Dh); state: (H, Dh, Dh)."""
-    C = r.shape[0]
-    ys = []
-    S = state.astype(jnp.float32)
-    for t in range(C):
-        rt, kt, vt = (a[t].astype(jnp.float32) for a in (r, k, v))
-        y = jnp.einsum("hi,hij->hj", rt, S) + \
-            jnp.einsum("hi,hi,hi,hj->hj", rt, u.astype(jnp.float32), kt, vt)
-        S = jnp.exp(log_w[t].astype(jnp.float32))[..., None] * S + \
-            jnp.einsum("hi,hj->hij", kt, vt)
-        ys.append(y)
-    return jnp.stack(ys, 0), S
+def tcn_block_ref(strip1, hist2, w1, b1, w2, b2, down_w=None, down_b=None,
+                  *, dilation: int, k: int, act_scale: float = 0.25,
+                  quantize: bool = False):
+    """Fused-TCN-block oracle: a per-POSITION lax.scan with explicit tap
+    gathers — structurally the ``stream_step`` path (the binding contract
+    the fused kernels are held bit-identical to), not the batched-matmul
+    form the kernels use.  Weights arrive pre-expanded fp32 (BN folded);
+    strip1: (S, n+T, Cin) time-ordered [history | chunk], hist2: (S, n, C).
+    Returns (h (S, T, C), mid (S, T, C))."""
+    from repro.quant.log2 import fake_quant_act_u4
+
+    d = dilation
+    n = (k - 1) * d
+    T = strip1.shape[1] - n
+    qa = (lambda a: fake_quant_act_u4(a, jnp.float32(act_scale))) \
+        if quantize else (lambda a: a)
+
+    def step(buf2, pos):
+        taps1 = [jax.lax.dynamic_slice_in_dim(strip1, pos + j * d, 1,
+                                              axis=1)[:, 0] for j in range(k)]
+        y = sum(tp @ w1[j] for j, tp in enumerate(taps1)) + b1
+        y = qa(jax.nn.relu(y))
+        buf2 = jax.lax.dynamic_update_slice_in_dim(buf2, y[:, None], n + pos,
+                                                   axis=1)
+        taps2 = [jax.lax.dynamic_slice_in_dim(buf2, pos + j * d, 1,
+                                              axis=1)[:, 0] for j in range(k)]
+        y2 = sum(tp @ w2[j] for j, tp in enumerate(taps2)) + b2
+        x_cur = strip1[:, n + pos]
+        res = x_cur @ down_w[0] + down_b if down_w is not None else x_cur
+        return buf2, (qa(jax.nn.relu(y2 + res)), y)
+
+    buf2 = jnp.concatenate(
+        [hist2, jnp.zeros((strip1.shape[0], T) + hist2.shape[2:],
+                          hist2.dtype)], axis=1)
+    _, (h, mid) = jax.lax.scan(step, buf2, jnp.arange(T))
+    return jnp.swapaxes(h, 0, 1), jnp.swapaxes(mid, 0, 1)

@@ -1,0 +1,219 @@
+"""Fused TCN residual block — the streaming slot-grid hot loop in ONE op.
+
+The paper's win is an *integrated* datapath (§III-B/C): conv taps, BN,
+ReLU and the residual add flow through the PE array without round-tripping
+activations to memory.  The TPU/JAX analogue fuses one whole residual
+block — the k tap-shifted matmuls of both convs, the BN scale/bias baked
+into weights at session-open (models/tcn.bake_stream_params), the u4
+activation fake-quant, and the residual add — so the chunked scan body
+stops materializing per-op ``(S*T, C)`` intermediates and stops re-padding
+the chunk per call: the conv history comes in as the session's ring-buffer
+taps (a ``(k-1)*d``-row strip prefix), not a fresh ``jnp.pad``.
+
+Layout contract (shared by every backend):
+
+    strip1: (S, n1+T, Cin)  time-ordered [ring1 history | chunk]
+    hist2:  (S, n2, C)      time-ordered ring2 history
+    p:      {"conv1_w", "conv1_b", "conv2_w", "conv2_b"[, "down_w",
+             "down_b"]} — weights are fp32 arrays, or, for quantized
+            sessions, nibble-packed log2 codes ``{"codes": uint8
+            (..., C//2), "scale": ()}`` expanded *in-kernel* (2 codes/byte
+            at rest, the 4x weight-byte cut per dispatch)
+
+    -> (h (S, T, C) block output, mid (S, T, C) conv1 activation)
+
+``mid`` is returned because the caller owns the ring updates: the tail of
+[hist2 | mid] is exactly what ring2 must hold after the chunk.
+
+Bit-exactness: on baked (BN-folded, pre-fake-quantized) params the fused
+block is bit-identical to the per-sample ``stream_step`` path — the tap
+sums accumulate in the same order, the matmuls share XLA's K-sequential
+reduction (row-count invariant), and every elementwise op replicates the
+scan body's exact expression (tests/test_kernels.py fuzzes this).
+
+Backends (kernels/dispatch.py, resolved once at op construction):
+``ref`` is the batched-jnp fast path (the CPU win BENCH_kernels.json
+gates); ``mosaic``/``triton``/``interpret`` lower one ``pl.pallas_call``
+per block with the whole time strip in VMEM (channel counts are <=64, so
+even a 16k-step strip is ~4 MiB — the dilated_conv sizing argument).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import dispatch
+from repro.quant.log2 import (
+    dequantize_act_u4,
+    dequantize_log2,
+    quantize_act_u4,
+    unpack_nibbles,
+)
+
+
+def expand_weight(w):
+    """Nibble-packed log2 codes -> fp32 weights; fp32 arrays pass through.
+
+    This is the out-of-kernel twin of the in-kernel expansion — both call
+    the same quant.log2 helpers, so the expanded values are bit-identical
+    to the baked scan-path weights."""
+    if isinstance(w, dict):
+        return dequantize_log2(unpack_nibbles(w["codes"]), w["scale"])
+    return w
+
+
+def _qa(x, act_scale: float):
+    """Value form of quant.log2.fake_quant_act_u4 (the STE minus its
+    stop_gradient — these kernels are inference-only, and stop_gradient
+    has no Mosaic lowering rule).  Same expression, same bits."""
+    s = jnp.float32(act_scale)
+    xq = dequantize_act_u4(quantize_act_u4(x, s), s, dtype=x.dtype)
+    return x + (xq - x)
+
+
+# ---------------------------------------------------------------------------
+# ref backend: batched jnp (the CPU fast path)
+# ---------------------------------------------------------------------------
+
+def tcn_block_fused(strip1, hist2, p, *, dilation: int, k: int,
+                    act_scale: float = 0.25, quantize: bool = False):
+    """Fused block on plain jnp: k tap-shifted batched matmuls per conv.
+
+    Each tap j of conv c reads the static slice ``strip[:, j*d : j*d+T]``
+    — dilation-aware by construction, no zero-tap work, no im2col."""
+    d = dilation
+    T = strip1.shape[1] - (k - 1) * d
+    qa = (lambda a: _qa(a, act_scale)) if quantize else (lambda a: a)
+    w1 = expand_weight(p["conv1_w"])
+    y = sum(strip1[:, j * d:j * d + T] @ w1[j] for j in range(k))
+    y = qa(jax.nn.relu(y + p["conv1_b"]))
+    strip2 = jnp.concatenate([hist2, y], axis=1)
+    w2 = expand_weight(p["conv2_w"])
+    y2 = sum(strip2[:, j * d:j * d + T] @ w2[j] for j in range(k))
+    y2 = y2 + p["conv2_b"]
+    x_cur = strip1[:, (k - 1) * d:]
+    if "down_w" in p:
+        res = x_cur @ expand_weight(p["down_w"])[0] + p["down_b"]
+    else:
+        res = x_cur
+    return qa(jax.nn.relu(y2 + res)), y
+
+
+# ---------------------------------------------------------------------------
+# pallas backend: one pallas_call per block, grid over slots
+# ---------------------------------------------------------------------------
+
+def _read_w(refs, i, packed: bool):
+    """Read weight operand(s) starting at refs[i]; returns (w, next_i).
+    Packed weights are expanded IN-KERNEL: uint8 nibbles cross HBM->VMEM,
+    exp2 (the ASIC's bit shift) rebuilds fp32 right before the MXU dot."""
+    if not packed:
+        return refs[i][...], i + 1
+    codes = unpack_nibbles(refs[i][...])
+    return dequantize_log2(codes, refs[i + 1][0]), i + 2
+
+
+def _block_kernel(*refs, k: int, dilation: int, T: int, act_scale: float,
+                  quantize: bool, packed: tuple, has_down: bool):
+    d = dilation
+    qa = (lambda a: _qa(a, act_scale)) if quantize else (lambda a: a)
+    h_ref, mid_ref = refs[-2], refs[-1]
+    strip1 = refs[0][0]                  # (n1+T, Cin)
+    w1, i = _read_w(refs, 1, packed[0])
+    b1 = refs[i][...]
+    hist2 = refs[i + 1][0]               # (n2, C)
+    w2, i = _read_w(refs, i + 2, packed[1])
+    b2 = refs[i][...]
+    i += 1
+    acc = jnp.zeros((T, w1.shape[2]), jnp.float32)
+    for j in range(k):
+        tap = jax.lax.dynamic_slice_in_dim(strip1, j * d, T, axis=0)
+        acc = acc + tap @ w1[j]
+    y = qa(jax.nn.relu(acc + b1))
+    strip2 = jnp.concatenate([hist2, y], axis=0)
+    acc2 = jnp.zeros((T, w2.shape[2]), jnp.float32)
+    for j in range(k):
+        tap = jax.lax.dynamic_slice_in_dim(strip2, j * d, T, axis=0)
+        acc2 = acc2 + tap @ w2[j]
+    acc2 = acc2 + b2
+    x_cur = jax.lax.dynamic_slice_in_dim(strip1, (k - 1) * d, T, axis=0)
+    if has_down:
+        dw, i = _read_w(refs, i, packed[2])
+        res = x_cur @ dw[0] + refs[i][...]
+        i += 1
+    else:
+        res = x_cur
+    h_ref[0] = qa(jax.nn.relu(acc2 + res))
+    mid_ref[0] = y
+
+
+def _w_operands(w, specs, operands):
+    """Append a weight's operand(s) + BlockSpec(s); returns packed flag."""
+    if isinstance(w, dict):
+        operands += [w["codes"], w["scale"].reshape(1)]
+        specs += [pl.BlockSpec(w["codes"].shape, lambda i: (0,) * w["codes"].ndim),
+                  pl.BlockSpec((1,), lambda i: (0,))]
+        return True
+    operands.append(w)
+    specs.append(pl.BlockSpec(w.shape, lambda i: (0,) * w.ndim))
+    return False
+
+
+def tcn_block_pallas(strip1, hist2, p, *, dilation: int, k: int,
+                     act_scale: float = 0.25, quantize: bool = False,
+                     interpret: bool = False):
+    """The fused block as one ``pl.pallas_call``: grid (S,), one slot per
+    program, full time strips in VMEM.  Same layout contract and same
+    bits as ``tcn_block_fused``."""
+    S, L1, _ = strip1.shape
+    n2, C = hist2.shape[1], hist2.shape[2]
+    T = L1 - (k - 1) * dilation
+    operands = [strip1]
+    specs = [pl.BlockSpec((1,) + strip1.shape[1:], lambda i: (i, 0, 0))]
+    p1 = _w_operands(p["conv1_w"], specs, operands)
+    operands.append(p["conv1_b"])
+    specs.append(pl.BlockSpec(p["conv1_b"].shape, lambda i: (0,)))
+    operands.append(hist2)
+    specs.append(pl.BlockSpec((1,) + hist2.shape[1:], lambda i: (i, 0, 0)))
+    p2 = _w_operands(p["conv2_w"], specs, operands)
+    operands.append(p["conv2_b"])
+    specs.append(pl.BlockSpec(p["conv2_b"].shape, lambda i: (0,)))
+    has_down = "down_w" in p
+    pd = False
+    if has_down:
+        pd = _w_operands(p["down_w"], specs, operands)
+        operands.append(p["down_b"])
+        specs.append(pl.BlockSpec(p["down_b"].shape, lambda i: (0,)))
+    out = pl.pallas_call(
+        functools.partial(_block_kernel, k=k, dilation=dilation, T=T,
+                          act_scale=act_scale, quantize=quantize,
+                          packed=(p1, p2, pd), has_down=has_down),
+        grid=(S,),
+        in_specs=specs,
+        out_specs=[pl.BlockSpec((1, T, C), lambda i: (i, 0, 0)),
+                   pl.BlockSpec((1, T, C), lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((S, T, C), jnp.float32),
+                   jax.ShapeDtypeStruct((S, T, C), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return out[0], out[1]
+
+
+dispatch.register(
+    "tcn_block",
+    ref=tcn_block_fused,
+    pallas=lambda interp: functools.partial(tcn_block_pallas, interpret=interp),
+)
+
+
+def make_block_fn(backend: str | None = None):
+    """Resolve the fused-block implementation ONCE (dispatch layer).
+
+    Returns ``block_fn(strip1, hist2, p, *, dilation, k, act_scale,
+    quantize) -> (h, mid)``; the backend choice (and the pallas
+    ``interpret`` static flag) is baked in — never re-probed under jit."""
+    return dispatch.build("tcn_block", backend)

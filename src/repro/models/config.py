@@ -76,6 +76,10 @@ class ArchConfig:
     n_classes: int = 12       # inference FC head (rewritten by PN learning)
 
     # --- numerics / execution ---
+    # kernel backend for the fused fast path (kernels/dispatch.py):
+    # auto | mosaic | triton | interpret | ref — resolved once at op
+    # construction; REPRO_KERNEL_BACKEND overrides "auto"
+    kernel_backend: str = "auto"
     act_dtype: str = "bfloat16"
     logit_chunk: int = 512      # chunked cross-entropy seq chunk
     attn_chunk_threshold: int = 4096  # flash-chunked attention above this

@@ -20,7 +20,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ArchConfig
-from repro.quant.log2 import fake_quant_act_u4, fake_quant_log2
+from repro.quant.log2 import (
+    compute_scale,
+    dequantize_log2,
+    fake_quant_act_u4,
+    fake_quant_log2,
+    pack_nibbles,
+    quantize_log2,
+)
 from repro.sharding.rules import ParamDef
 
 BN_EPS = 1e-5
@@ -172,3 +179,100 @@ def fold_bn(params, state, cfg: ArchConfig):
         b["bn1_var"] = jnp.ones_like(b["bn1_var"]) * (1.0 - BN_EPS)
         b["bn2_var"] = jnp.ones_like(b["bn2_var"]) * (1.0 - BN_EPS)
     return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Session-open baking for the fused kernel fast path (kernels/tcn_block.py)
+# ---------------------------------------------------------------------------
+
+def _bake_weight(w, quantize: bool):
+    """One weight's (scan_value, fused_value) pair.
+
+    quantize=True replaces the weight by its log2 fake-quant VALUE wq (so
+    the per-step scan path, whose ``fake_quant_log2`` is exactly idempotent
+    on the log2 grid, reproduces wq bit-for-bit every step without doing
+    the quantization work 160x per chunk), and hands the fused path the
+    nibble-PACKED codes — 2/byte at rest, expanded in-kernel."""
+    if not quantize:
+        return w, w
+    s = compute_scale(w)
+    q = quantize_log2(w, s)
+    wq = dequantize_log2(q, s)
+    if w.shape[-1] % 2 == 0:
+        return wq, {"codes": pack_nibbles(q), "scale": s}
+    return wq, wq  # odd last axis can't nibble-pack; keep fp32
+
+
+def bake_stream_params(params, state, cfg: ArchConfig, *, quantize: bool = False):
+    """One-time session-open transform behind the fused fast path.
+
+    Folds BN into conv weight/bias (``fold_bn``) and, for quantized
+    services, pre-bakes the log2 weight fake-quant.  Returns
+    ``(scan_params, scan_bn, fused_params)``:
+
+      * scan_params/scan_bn — drop-in for the EXISTING per-step scan path
+        (stream_step / grid_scan / tcn_forward).  On these the BN chain is
+        the exact identity and re-fake-quantization is an exact fixpoint,
+        so the scan path computes pure conv+bias bit-for-bit — the anchor
+        the fused kernels are held bit-identical to.
+      * fused_params — the kernel-layout tree kernels/tcn_block.py
+        consumes (packed codes for quantized weights, no BN leaves).
+
+    Inference-mode only: BN folding uses running stats, so baked params
+    must never be trained (README "Kernel fast path" caveats).
+    """
+    folded, fbn = fold_bn(params, state, cfg)
+    fused: dict = {"blocks": {}}
+    for i in range(len(cfg.tcn_channels)):
+        name = f"b{i}"
+        p = dict(folded["blocks"][name])
+        fp = {}
+        for cv in ("conv1", "conv2"):
+            p[f"{cv}_w"], fp[f"{cv}_w"] = _bake_weight(p[f"{cv}_w"], quantize)
+            fp[f"{cv}_b"] = p[f"{cv}_b"]
+        if "down_w" in p:
+            p["down_w"], fp["down_w"] = _bake_weight(p["down_w"], quantize)
+            fp["down_b"] = p["down_b"]
+        folded["blocks"][name] = p
+        fused["blocks"][name] = fp
+    hw, fused["head_w"] = _bake_weight(folded["head_w"], quantize)
+    folded["head_w"] = hw
+    fused["head_b"] = folded["head_b"]
+    fused["fc"] = folded["fc"]  # the PN head is never quantized
+    return folded, fbn, fused
+
+
+def make_fused_forward(cfg: ArchConfig, *, quantize: bool = False,
+                       backend: str | None = None):
+    """Batch-forward twin of the fused streaming executor (backend resolved
+    ONCE).  Returns ``forward(fused_params, x) -> (emb (B, V), logits)``:
+    inference on baked params via the fused block kernels, with zero
+    history strips — bit-identical to the fused chunk executor run from a
+    fresh stream state, and allclose (not bitwise: BN folding reassociates
+    by design) to ``tcn_forward(train=False)`` on the raw params.
+    ``backend=None`` defers to ``cfg.kernel_backend``."""
+    from repro.kernels.tcn_block import expand_weight, make_block_fn
+
+    block_fn = make_block_fn(backend or cfg.kernel_backend)
+    k = cfg.tcn_kernel
+
+    def forward(fused_params, x):
+        B, _, _ = x.shape
+        qa = (lambda a: fake_quant_act_u4(a, jnp.float32(cfg.act_scale))) \
+            if quantize else (lambda a: a)
+        h = x
+        for i, c in enumerate(cfg.tcn_channels):
+            d = 2 ** i
+            n = (k - 1) * d
+            strip1 = jnp.pad(h, ((0, 0), (n, 0), (0, 0)))
+            hist2 = jnp.zeros((B, n, c), h.dtype)
+            h, _ = block_fn(strip1, hist2, fused_params["blocks"][f"b{i}"],
+                            dilation=d, k=k, act_scale=cfg.act_scale,
+                            quantize=quantize)
+        feat = h[:, -1, :]
+        emb = feat @ expand_weight(fused_params["head_w"]) + fused_params["head_b"]
+        emb = qa(jax.nn.relu(emb))
+        logits = emb @ fused_params["fc"]["w"] + fused_params["fc"]["b"]
+        return emb, logits
+
+    return forward

@@ -44,6 +44,7 @@ from repro.sessions.state import (
     grid_step,
     leaf_axes,
     lengths_to_valid,
+    make_grid_fused,
     pack_column,
     pack_slot,
     parked_bytes,
@@ -77,7 +78,8 @@ __all__ = [
     "ngram_drafter",
     "column_pspecs", "decode_parked", "grid_init", "grid_pspecs",
     "grid_scan", "grid_step",
-    "leaf_axes", "lengths_to_valid", "pack_column", "pack_slot",
+    "leaf_axes", "lengths_to_valid", "make_grid_fused", "pack_column",
+    "pack_slot",
     "parked_bytes", "reset_slot", "slot_park_bytes", "slot_state_bytes",
     "unpack_column", "unpack_slot", "zero_from_column",
     "TenantBank", "bank_add_class", "bank_clear_tenant", "bank_fc",

@@ -34,6 +34,16 @@ parkings are nibble-packed (~8x smaller, still bit-identical).
 ``spill_parking``/``restore_parking`` persist the lot through
 checkpoint/store so sessions survive restarts.
 
+``fused=True`` (or REPRO_TCN_FUSED=1) swaps the chunk body for the fused
+kernel fast path: BN and the log2 weight quantization are baked once at
+construction (models/tcn.bake_stream_params), and each tick runs one
+fused block op per TCN block (kernels/tcn_block.py) over the ring-buffer
+taps instead of a per-sample ``lax.scan`` — same slot grid, same parking
+lot, same bit-exact park/resume; only the executor changes.  On the
+baked params the fused executor is bit-identical to ``grid_scan``
+(tests/test_streaming_chunk.py); vs an UNFUSED service on the raw params
+outputs are allclose only, because BN folding reassociates by one ULP.
+
 Passing a ``mesh`` shards the slot grid over the mesh's ``data`` axis and
 the tenant banks over ``model`` (sessions/state.grid_pspecs,
 sessions/tenancy.bank_pspecs); on a 1-device mesh everything degenerates
@@ -42,6 +52,7 @@ to replicated and behaviour is unchanged.
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -51,12 +62,13 @@ import numpy as np
 
 from repro.checkpoint.store import load_sessions, save_sessions
 from repro.core.protonet import pn_logits_banked
-from repro.models.tcn import tcn_empty_state
+from repro.models.tcn import bake_stream_params, tcn_empty_state
 from repro.sessions.scheduler import AdmissionError, SlotScheduler
 from repro.sessions.state import (
     grid_init,
     grid_pspecs,
     grid_scan,
+    make_grid_fused,
     pack_slot,
     reset_slot,
     slot_park_bytes,
@@ -312,14 +324,32 @@ class StreamSessionService(SlotGridService):
                  max_sessions: int | None = None, quantize: bool = False,
                  t_chunk: int = 16, mesh=None,
                  cost_fn: Callable[[int], float] | None = None,
-                 stale_window: int = 0):
+                 stale_window: int = 0, fused: bool | None = None,
+                 kernel_backend: str | None = None):
         super().__init__(n_slots, t_chunk=t_chunk, max_sessions=max_sessions,
                          cost_fn=cost_fn, stale_window=stale_window)
         cfg = bundle.cfg
         self.cfg = cfg
         self.max_ways = max_ways
         self.quantize = quantize
+        # Fused kernel fast path (kernels/tcn_block.py): fold BN (and bake
+        # the log2 weight quantization) ONCE at service construction, then
+        # advance chunks through per-block fused kernels instead of the
+        # per-sample scan body.  Opt-in: BN folding reassociates the BN
+        # chain by one ULP, so a fused service's outputs are allclose —
+        # not bit-identical — to an unfused service on the same RAW
+        # params.  On the baked params the fused and scan executors ARE
+        # bit-identical (tests/test_streaming_chunk.py), so park/resume
+        # and cross-chunk-size exactness are preserved within a service.
+        if fused is None:
+            fused = os.environ.get("REPRO_TCN_FUSED", "").strip().lower() \
+                in ("1", "true", "yes")
+        self.fused = fused
         bn_state = bn_state if bn_state is not None else tcn_empty_state(cfg)
+        self._fused_params = None
+        if fused:
+            params, bn_state, self._fused_params = bake_stream_params(
+                params, bn_state, cfg, quantize=quantize)
 
         self.states = grid_init(cfg, n_slots)
         self.bank = bank_init(max_tenants, max_ways, cfg.embed_dim)
@@ -343,16 +373,28 @@ class StreamSessionService(SlotGridService):
         self._params = params
         self._bn = bn_state
 
+        def _banked(emb, bank, tenant_ids):
+            w, b = bank_fc(bank)
+            s, t = emb.shape[0], emb.shape[1]
+            tl = pn_logits_banked(emb.reshape(s * t, emb.shape[-1]), w, b,
+                                  jnp.repeat(tenant_ids, t))
+            return tl.reshape(s, t, -1)
+
         def _scan(p, bn, states, x, valid, bank, tenant_ids):
             new_states, emb, logits = grid_scan(
                 p, bn, cfg, states, x, valid, quantize=quantize)
-            w, b = bank_fc(bank)
-            s, t = x.shape[0], x.shape[1]
-            tl = pn_logits_banked(emb.reshape(s * t, emb.shape[-1]), w, b,
-                                  jnp.repeat(tenant_ids, t))
-            return new_states, emb, logits, tl.reshape(s, t, -1)
+            return new_states, emb, logits, _banked(emb, bank, tenant_ids)
 
         self._scan = jax.jit(_scan)
+        if fused:
+            fused_chunk = make_grid_fused(cfg, quantize=quantize,
+                                          backend=kernel_backend)
+
+            def _scan_fused(fp, states, x, lengths, bank, tenant_ids):
+                new_states, emb, logits = fused_chunk(fp, states, x, lengths)
+                return new_states, emb, logits, _banked(emb, bank, tenant_ids)
+
+            self._scan_fused = jax.jit(_scan_fused)
         # shot embedding for enrollment — the TCN bundle's embed_fn honours
         # the service's BN stats and quantize mode
         self._embed = jax.jit(lambda x: bundle.embed_fn(
@@ -514,16 +556,23 @@ class StreamSessionService(SlotGridService):
         while off < max_len:
             t_pad = self._tick_len(max_len - off)
             x = np.zeros((self.n_slots, t_pad, c_in), np.float32)
-            valid = np.zeros((self.n_slots, t_pad), bool)
+            tick_lens = np.zeros(self.n_slots, np.int32)
             for sid, a in arrs.items():
                 seg = a[off:off + t_pad]
                 if seg.shape[0]:
                     x[slot_of[sid], :seg.shape[0]] = seg
-                    valid[slot_of[sid], :seg.shape[0]] = True
-            self.states, emb, logits, tlogits = self._scan(
-                self._params, self._bn, self.states, jnp.asarray(x),
-                jnp.asarray(valid), self.bank,
-                jnp.asarray(self.tenant_of_slot))
+                    tick_lens[slot_of[sid]] = seg.shape[0]
+            if self.fused:
+                self.states, emb, logits, tlogits = self._scan_fused(
+                    self._fused_params, self.states, jnp.asarray(x),
+                    jnp.asarray(tick_lens), self.bank,
+                    jnp.asarray(self.tenant_of_slot))
+            else:
+                valid = np.arange(t_pad)[None, :] < tick_lens[:, None]
+                self.states, emb, logits, tlogits = self._scan(
+                    self._params, self._bn, self.states, jnp.asarray(x),
+                    jnp.asarray(valid), self.bank,
+                    jnp.asarray(self.tenant_of_slot))
             self.dispatches += 1
             emb, logits, tlogits = (np.asarray(emb), np.asarray(logits),
                                     np.asarray(tlogits))
@@ -603,4 +652,5 @@ class StreamSessionService(SlotGridService):
         # paper's 26 B/way personalization-cost story).
         return {"slot_state_bytes": slot_park_bytes(self.cfg,
                                                     quantize=self.quantize),
-                "tenant_row_bytes": bank_row_bytes(self.bank)}
+                "tenant_row_bytes": bank_row_bytes(self.bank),
+                "fused": self.fused}

@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.streaming import (
+    make_fused_chunk,
     stream_init_single,
     stream_scan_single,
     stream_step_single,
@@ -112,6 +113,22 @@ def grid_scan(params, bn_state, cfg: ArchConfig, states: dict, x: jax.Array,
     scan1 = lambda st, xc, vc: stream_scan_single(
         params, bn_state, cfg, st, xc, vc, quantize=quantize)
     return jax.vmap(scan1)(states, x, valid)
+
+
+def make_grid_fused(cfg: ArchConfig, *, quantize: bool = False,
+                    backend: str | None = None):
+    """Fused-kernel twin of ``grid_scan`` (kernel backend resolved ONCE).
+
+    Returns ``fused(fused_params, states, x, lengths)`` over the same SoA
+    slot grid: x (S, T, C_in), lengths (S,) valid-PREFIX lengths (ragged
+    chunks are always prefixes of the padded tick — the (S, T) masks
+    ``grid_scan`` takes are ``lengths_to_valid`` of these).  One fused
+    block op per TCN block replaces the T-step scan body; ring taps feed
+    the kernels directly (no per-chunk re-pad).  On baked params
+    (models/tcn.bake_stream_params) outputs at positions < lengths and
+    the end state are bit-identical to ``grid_scan``; pass fused_params
+    as jit ARGUMENTS (same cross-program discipline)."""
+    return make_fused_chunk(cfg, quantize=quantize, backend=backend)
 
 
 def grid_pspecs(cfg: ArchConfig, mesh, n_slots: int, rules: dict | None = None):

@@ -1,6 +1,10 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)
 plus a hypothesis fuzz over random shapes/dilations/dtypes — the parity
-ratchet the future real-TPU/GPU-lowering PR must keep passing."""
+ratchet the real-TPU/GPU-lowering path must keep passing — and the fused
+TCN block kernel's bit-parity contract (jnp fast path AND pallas interpret
+vs the per-position ref oracle, across every chameleon_tcn dilation and a
+chunk-size sweep).  Backend selection itself (kernels/dispatch.py) is
+covered at the bottom: resolve-once semantics, env override, registry."""
 
 import jax
 import jax.numpy as jnp
@@ -8,10 +12,21 @@ import numpy as np
 import pytest
 
 from _hyp import given, settings, st
-from repro.kernels import ref
+from repro.kernels import dispatch, ref
 from repro.kernels.dilated_conv import dilated_causal_conv
 from repro.kernels.log2_matmul import log2_matmul
+from repro.kernels.ops import (
+    make_dilated_conv_op,
+    make_log2_matmul_op,
+    make_proto_extract_op,
+)
 from repro.kernels.proto_extract import proto_extract
+from repro.kernels.tcn_block import (
+    expand_weight,
+    make_block_fn,
+    tcn_block_fused,
+    tcn_block_pallas,
+)
 from repro.quant.log2 import compute_scale, pack_nibbles, quantize_log2
 
 settings.register_profile("kernels", deadline=None, max_examples=12)
@@ -27,7 +42,7 @@ class TestLog2Matmul:
         s = compute_scale(w)
         packed = pack_nibbles(quantize_log2(w, s))
         x = jax.random.normal(jax.random.key(1), (M, K), dtype)
-        out = log2_matmul(x, packed, s, bm=64, bn=64)
+        out = log2_matmul(x, packed, s, bm=64, bn=64, interpret=True)
         expect = ref.log2_matmul_ref(x, packed, s)
         tol = 1e-4 if dtype == jnp.float32 else 2e-2
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
@@ -48,7 +63,7 @@ class TestDilatedConv:
         x = jax.random.normal(jax.random.key(0), (B, T, Cin))
         w = jax.random.normal(jax.random.key(1), (K, Cin, Cout)) * 0.2
         b = jax.random.normal(jax.random.key(2), (Cout,)) * 0.1
-        out = dilated_causal_conv(x, w, b, d, bco=32)
+        out = dilated_causal_conv(x, w, b, d, bco=32, interpret=True)
         expect = ref.dilated_conv_ref(x, w, b, d)
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                    rtol=1e-4, atol=1e-4)
@@ -59,9 +74,9 @@ class TestDilatedConv:
         x = jax.random.normal(jax.random.key(0), (B, T, C))
         w = jax.random.normal(jax.random.key(1), (K, C, C)) * 0.3
         b = jnp.zeros((C,))
-        y1 = dilated_causal_conv(x, w, b, d)
+        y1 = dilated_causal_conv(x, w, b, d, interpret=True)
         x2 = x.at[:, 20:].set(123.0)
-        y2 = dilated_causal_conv(x2, w, b, d)
+        y2 = dilated_causal_conv(x2, w, b, d, interpret=True)
         np.testing.assert_allclose(np.asarray(y1[:, :20]), np.asarray(y2[:, :20]),
                                    rtol=1e-5)
 
@@ -83,7 +98,7 @@ class TestKernelFuzz:
         s = compute_scale(w)
         packed = pack_nibbles(quantize_log2(w, s))
         x = jax.random.normal(jax.random.key(seed % 991), (M, K), dtype)
-        out = log2_matmul(x, packed, s, bm=bm, bn=bn)
+        out = log2_matmul(x, packed, s, bm=bm, bn=bn, interpret=True)
         expect = ref.log2_matmul_ref(x, packed, s)
         tol = 1e-4 if dtype == jnp.float32 else 2e-2
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
@@ -102,7 +117,7 @@ class TestKernelFuzz:
         x = jax.random.normal(jax.random.key(seed % 997), (B, T, Cin))
         w = jax.random.normal(jax.random.key(seed % 991), (K, Cin, Cout)) * 0.2
         b = jax.random.normal(jax.random.key(seed % 983), (Cout,)) * 0.1
-        out = dilated_causal_conv(x, w, b, d, bco=bco)
+        out = dilated_causal_conv(x, w, b, d, bco=bco, interpret=True)
         expect = ref.dilated_conv_ref(x, w, b, d)
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                    rtol=1e-4, atol=1e-4)
@@ -114,7 +129,7 @@ class TestProtoExtract:
     def test_vs_oracle(self, N, k, V):
         emb = jax.random.normal(jax.random.key(N), (N * k, V))
         onehot = jax.nn.one_hot(jnp.repeat(jnp.arange(N), k), N).T
-        W, b = proto_extract(emb, onehot, k, bn=64)
+        W, b = proto_extract(emb, onehot, k, bn=64, interpret=True)
         Wr, br = ref.proto_extract_ref(emb, onehot, k)
         np.testing.assert_allclose(np.asarray(W), np.asarray(Wr), atol=1e-4)
         np.testing.assert_allclose(np.asarray(b), np.asarray(br),
@@ -128,9 +143,236 @@ class TestProtoExtract:
         emb = jax.random.normal(jax.random.key(0), (N * k, V))
         labels = jnp.repeat(jnp.arange(N), k)
         onehot = jax.nn.one_hot(labels, N).T
-        Wk, bk = proto_extract(emb, onehot, k)
+        Wk, bk = proto_extract(emb, onehot, k, interpret=True)
         s = pn.support_sums(emb, labels, N)
         Wp, bp = pn.pn_fc_from_sums(s, k)
         np.testing.assert_allclose(np.asarray(Wk), np.asarray(Wp), atol=1e-4)
         np.testing.assert_allclose(np.asarray(bk), np.asarray(bp),
                                    rtol=1e-4, atol=1e-4)
+
+    def test_adapt_kernel_path_matches_jnp_path(self):
+        """core/protonet.adapt through the dispatch layer: the kernel path
+        (interpret) agrees with the segment-sum path it replaces."""
+        from repro.core.protonet import adapt
+        N, k, V = 4, 3, 16
+        emb = jax.random.normal(jax.random.key(3), (N * k, V))
+        labels = jnp.repeat(jnp.arange(N), k)
+        embed_fn = lambda params, batch: emb
+        w_ref_, b_ref_ = adapt(embed_fn, None, None, labels, N, k,
+                               backend="ref")
+        w_k, b_k = adapt(embed_fn, None, None, labels, N, k,
+                         backend="interpret")
+        np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_ref_),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(b_k), np.asarray(b_ref_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused TCN block: the streaming hot-loop kernel
+# ---------------------------------------------------------------------------
+
+def _block_inputs(seed, S, T, Cin, C, k, d, *, quantize, with_down):
+    """Random strips + a baked-layout weight dict for one block."""
+    rng = np.random.default_rng(seed)
+    n = (k - 1) * d
+    strip1 = jnp.asarray(rng.normal(size=(S, n + T, Cin)).astype(np.float32))
+    hist2 = jnp.asarray(rng.normal(size=(S, n, C)).astype(np.float32))
+
+    def mk_w(shape, key):
+        w = jax.random.normal(jax.random.key(key), shape) * 0.2
+        if not quantize:
+            return w, w
+        s = compute_scale(w)
+        q = quantize_log2(w, s)
+        from repro.quant.log2 import dequantize_log2
+        return dequantize_log2(q, s), {"codes": pack_nibbles(q), "scale": s}
+
+    w1x, w1 = mk_w((k, Cin, C), seed + 1)
+    w2x, w2 = mk_w((k, C, C), seed + 2)
+    p = {"conv1_w": w1,
+         "conv1_b": jax.random.normal(jax.random.key(seed + 3), (C,)) * 0.1,
+         "conv2_w": w2,
+         "conv2_b": jax.random.normal(jax.random.key(seed + 4), (C,)) * 0.1}
+    expanded = [w1x, w2x, None]
+    if with_down:
+        dwx, dw = mk_w((1, Cin, C), seed + 5)
+        p["down_w"] = dw
+        p["down_b"] = jax.random.normal(jax.random.key(seed + 6), (C,)) * 0.1
+        expanded[2] = dwx
+    return strip1, hist2, p, expanded
+
+
+CHAMELEON_DILATIONS = [2 ** i for i in range(7)]  # the 7-block FSL preset
+
+
+class TestTCNBlockFused:
+    """Bit-parity contract of kernels/tcn_block.py: the fused batched-jnp
+    fast path and the pallas kernel (interpret) against the per-position
+    ref oracle — across every chameleon_tcn dilation and a chunk-size
+    sweep, fp32 and nibble-packed log2."""
+
+    @pytest.mark.parametrize("d", CHAMELEON_DILATIONS)
+    @pytest.mark.parametrize("T", [1, 7, 32, 160])
+    def test_fused_vs_oracle_all_dilations_and_chunks(self, d, T):
+        k, Cin, C = 7, 1, 8  # chameleon kernel size; slim channels for speed
+        strip1, hist2, p, (w1, w2, dw) = _block_inputs(
+            d * 1000 + T, 2, T, Cin, C, k, d, quantize=False, with_down=True)
+        h, mid = jax.jit(lambda a, b, p: tcn_block_fused(
+            a, b, p, dilation=d, k=k))(strip1, hist2, p)
+        hr, mr = ref.tcn_block_ref(strip1, hist2, w1, p["conv1_b"], w2,
+                                   p["conv2_b"], dw, p["down_b"],
+                                   dilation=d, k=k)
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+        np.testing.assert_array_equal(np.asarray(mid), np.asarray(mr))
+
+    @pytest.mark.parametrize("d", [1, 8, 64])
+    @pytest.mark.parametrize("quantize", [False, True])
+    def test_pallas_interpret_vs_oracle(self, d, quantize):
+        k, T, Cin, C = 7, 24, 4, 8
+        strip1, hist2, p, (w1, w2, dw) = _block_inputs(
+            d + 17, 2, T, Cin, C, k, d, quantize=quantize, with_down=True)
+        h, mid = jax.jit(lambda a, b, p: tcn_block_pallas(
+            a, b, p, dilation=d, k=k, quantize=quantize,
+            interpret=True))(strip1, hist2, p)
+        hr, mr = ref.tcn_block_ref(strip1, hist2, w1, p["conv1_b"], w2,
+                                   p["conv2_b"], dw, p["down_b"],
+                                   dilation=d, k=k, quantize=quantize)
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+        np.testing.assert_array_equal(np.asarray(mid), np.asarray(mr))
+
+    @pytest.mark.parametrize("with_down", [False, True])
+    def test_quantized_packed_weights_expand_in_kernel(self, with_down):
+        """Packed codes (2/byte at rest) expand to the exact baked wq."""
+        k, d, T, Cin, C = 3, 2, 12, 8, 8
+        strip1, hist2, p, (w1, w2, dw) = _block_inputs(
+            5, 2, T, Cin, C, k, d, quantize=True, with_down=with_down)
+        assert p["conv1_w"]["codes"].dtype == jnp.uint8
+        assert p["conv1_w"]["codes"].shape[-1] == C // 2
+        np.testing.assert_array_equal(np.asarray(expand_weight(p["conv1_w"])),
+                                      np.asarray(w1))
+        h, mid = jax.jit(lambda a, b, p: tcn_block_fused(
+            a, b, p, dilation=d, k=k, quantize=True))(strip1, hist2, p)
+        db = p["down_b"] if with_down else None
+        hr, mr = ref.tcn_block_ref(strip1, hist2, w1, p["conv1_b"], w2,
+                                   p["conv2_b"], dw, db, dilation=d, k=k,
+                                   quantize=True)
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+        np.testing.assert_array_equal(np.asarray(mid), np.asarray(mr))
+
+    @given(st.integers(0, 2**31 - 1))
+    def test_fused_block_random_shapes(self, seed):
+        """Fuzz ratchet for the fused block: any (k, d, T, channels,
+        quantize, residual) draw must match the oracle bit for bit."""
+        rng = np.random.default_rng(seed)
+        k = int(rng.integers(2, 8))
+        d = int(rng.choice([1, 2, 4, 8, 16]))
+        T = int(rng.integers(1, 48))
+        Cin = 2 * int(rng.integers(1, 9))
+        C = 2 * int(rng.integers(1, 9))
+        quantize = bool(rng.integers(2))
+        with_down = bool(rng.integers(2)) or Cin != C
+        strip1, hist2, p, (w1, w2, dw) = _block_inputs(
+            seed % 100003, 2, T, Cin, C, k, d, quantize=quantize,
+            with_down=with_down)
+        h, mid = jax.jit(lambda a, b, p: tcn_block_fused(
+            a, b, p, dilation=d, k=k, quantize=quantize))(strip1, hist2, p)
+        db = p["down_b"] if with_down else None
+        hr, mr = ref.tcn_block_ref(strip1, hist2, w1, p["conv1_b"], w2,
+                                   p["conv2_b"], dw, db, dilation=d, k=k,
+                                   quantize=quantize)
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(hr))
+        np.testing.assert_array_equal(np.asarray(mid), np.asarray(mr))
+
+
+# ---------------------------------------------------------------------------
+# Backend dispatch: resolve-once semantics
+# ---------------------------------------------------------------------------
+
+class TestDispatch:
+    def test_auto_resolves_to_ref_on_cpu(self):
+        r = dispatch.resolve("auto")
+        assert r.backend == "ref" and not r.use_pallas and not r.interpret
+
+    def test_explicit_backends(self):
+        assert dispatch.resolve("interpret").interpret
+        assert dispatch.resolve("mosaic").use_pallas
+        assert not dispatch.resolve("mosaic").interpret
+        assert dispatch.resolve(None).backend == dispatch.resolve("auto").backend
+
+    def test_env_override(self, monkeypatch):
+        monkeypatch.setenv(dispatch.ENV_VAR, "interpret")
+        assert dispatch.resolve("auto").backend == "interpret"
+        # explicit requests beat the env override
+        assert dispatch.resolve("ref").backend == "ref"
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError):
+            dispatch.resolve("cuda13")
+        with pytest.raises(KeyError):
+            dispatch.build("not_an_op")
+
+    def test_registry_covers_all_ops(self):
+        assert {"dilated_conv", "log2_matmul", "proto_extract",
+                "tcn_block"} <= set(dispatch.registered_ops())
+
+    def test_ops_resolve_once_and_agree(self):
+        """Every registered op built as 'interpret' matches its 'ref'
+        build — the dispatch table is consistent, not just populated."""
+        x = jax.random.normal(jax.random.key(0), (5, 16))
+        w = jax.random.normal(jax.random.key(1), (16, 8)) * 0.1
+        s = compute_scale(w)
+        packed = pack_nibbles(quantize_log2(w, s))
+        a = make_log2_matmul_op("ref")(x, packed, s)
+        b = make_log2_matmul_op("interpret")(x, packed, s)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+        cw = jax.random.normal(jax.random.key(2), (3, 4, 8)) * 0.2
+        cb = jnp.zeros((8,))
+        cx = jax.random.normal(jax.random.key(3), (2, 20, 4))
+        a = make_dilated_conv_op("ref")(cx, cw, cb, 2)
+        b = make_dilated_conv_op("interpret")(cx, cw, cb, 2)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+        emb = jax.random.normal(jax.random.key(4), (12, 8))
+        onehot = jax.nn.one_hot(jnp.repeat(jnp.arange(4), 3), 4).T
+        (wa, ba) = make_proto_extract_op("ref")(emb, onehot, 3)
+        (wb, bb) = make_proto_extract_op("interpret")(emb, onehot, 3)
+        np.testing.assert_allclose(np.asarray(wa), np.asarray(wb),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ba), np.asarray(bb),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_archconfig_kernel_backend_reaches_dispatch(self, monkeypatch):
+        """cfg.kernel_backend is honored by the fused-path constructors
+        (backend=None defers to the config, not straight to platform)."""
+        from repro.configs import get_config
+        from repro.core.streaming import make_fused_chunk
+        from repro.models.tcn import make_fused_forward
+        calls = []
+        orig = dispatch.build
+
+        def spy(op, backend=None):
+            calls.append(backend)
+            return orig(op, backend)
+
+        monkeypatch.setattr(dispatch, "build", spy)
+        cfg = get_config("chameleon-tcn").smoke().replace(
+            kernel_backend="interpret")
+        make_fused_chunk(cfg)
+        make_fused_forward(cfg)
+        assert calls == ["interpret", "interpret"]
+        make_fused_chunk(cfg, backend="ref")  # explicit beats the config
+        assert calls[-1] == "ref"
+
+    def test_block_fn_backend_parity(self):
+        """make_block_fn('ref') and ('interpret') are bit-identical on the
+        same strips — the fused op dispatches without changing bits."""
+        strip1, hist2, p, _ = _block_inputs(9, 2, 10, 4, 8, 3, 2,
+                                            quantize=False, with_down=True)
+        fr = make_block_fn("ref")
+        fi = make_block_fn("interpret")
+        hr, mr = fr(strip1, hist2, p, dilation=2, k=3)
+        hi, mi = fi(strip1, hist2, p, dilation=2, k=3)
+        np.testing.assert_array_equal(np.asarray(hr), np.asarray(hi))
+        np.testing.assert_array_equal(np.asarray(mr), np.asarray(mi))

@@ -18,7 +18,12 @@ from repro.core.streaming import (
     stream_step_single,
 )
 from repro.models import build_bundle
-from repro.models.tcn import tcn_empty_state, tcn_forward
+from repro.models.tcn import (
+    bake_stream_params,
+    make_fused_forward,
+    tcn_empty_state,
+    tcn_forward,
+)
 from repro.sessions import (
     StreamSessionService,
     grid_init,
@@ -26,6 +31,7 @@ from repro.sessions import (
     grid_scan,
     grid_step,
     lengths_to_valid,
+    make_grid_fused,
     bank_init,
     bank_pspecs,
 )
@@ -304,6 +310,134 @@ def test_chunked_push_amortizes_dispatches():
         assert svc.dispatches - before == 1
     finally:
         svc.close(sid)
+
+
+# ---------------------------------------------------------------------------
+# Fused kernel fast path: grid executor + service, bit-identical to the
+# pre-existing chunked scan (PR 2's cross-program discipline must survive)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_fused_chunk_bit_identical_to_grid_scan(quantize):
+    """make_grid_fused on baked params == grid_scan on the same baked
+    params, bit for bit: outputs at valid positions AND end state, over a
+    multi-chunk schedule whose boundaries straddle ring wraparound, with
+    ragged lengths including a frozen zero-length slot."""
+    cfg, bundle, params, bn = _setup()
+    scan_p, scan_bn, fused_p = bake_stream_params(params, bn, cfg,
+                                                  quantize=quantize)
+    S, T = 4, 7  # 7 is coprime with every ring depth of this config
+    depths = {n for b in ring_sizes(cfg).values() for (n, _c) in b.values()}
+    assert all(T % n != 0 for n in depths), (T, depths)
+    scan = jax.jit(lambda p, b, s, xx, v: grid_scan(
+        p, b, cfg, s, xx, v, quantize=quantize))
+    fused = jax.jit(make_grid_fused(cfg, quantize=quantize))
+    ga, gb = grid_init(cfg, S), grid_init(cfg, S)
+    rng = np.random.default_rng(11)
+    for step in range(5):  # several wraps of every ring
+        x = rng.normal(size=(S, T, 2)).astype(np.float32)
+        lens = rng.integers(0, T + 1, size=S)
+        lens[step % S] = 0  # always one fully frozen slot
+        ga, emb_a, log_a = scan(scan_p, scan_bn, ga, jnp.asarray(x),
+                                lengths_to_valid(lens, T))
+        gb, emb_b, log_b = fused(fused_p, gb, jnp.asarray(x),
+                                 jnp.asarray(lens, jnp.int32))
+        emb_a, emb_b = np.asarray(emb_a), np.asarray(emb_b)
+        log_a, log_b = np.asarray(log_a), np.asarray(log_b)
+        for i in range(S):
+            np.testing.assert_array_equal(emb_a[i, :lens[i]],
+                                          emb_b[i, :lens[i]])
+            np.testing.assert_array_equal(log_a[i, :lens[i]],
+                                          log_b[i, :lens[i]])
+        for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("quantize", [False, True])
+def test_fused_service_bit_identical_incl_park_resume(quantize):
+    """A fused=True service == an unfused control running the existing
+    chunked scan on the same baked params — bit for bit through ragged
+    pushes, enrollment, tenant logits, explicit park, LRU eviction, and
+    resume in a different slot."""
+    cfg, bundle, params, bn = _setup()
+    scan_p, scan_bn, _ = bake_stream_params(params, bn, cfg,
+                                            quantize=quantize)
+    svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=2,
+                               t_chunk=4, quantize=quantize, fused=True,
+                               max_sessions=4)
+    ctl = StreamSessionService(bundle, scan_p, scan_bn, n_slots=2,
+                               max_tenants=2, t_chunk=4, quantize=quantize,
+                               max_sessions=4)
+    assert svc.stats()["fused"] and not ctl.stats()["fused"]
+    x = np.random.default_rng(12).normal(size=(3, 40, 2)).astype(np.float32)
+    shots = np.random.default_rng(13).normal(size=(3, 12, 2)).astype(np.float32)
+    fa, fb = svc.open_session(), svc.open_session(tenant=None)
+    ca, cb = ctl.open_session(), ctl.open_session(tenant=None)
+    for f_r, c_r in [(svc.push_audio({fa: x[0, :9], fb: x[1, :5]}),
+                      ctl.push_audio({ca: x[0, :9], cb: x[1, :5]}))]:
+        np.testing.assert_array_equal(f_r[fa]["emb"], c_r[ca]["emb"])
+        np.testing.assert_array_equal(f_r[fb]["logits"], c_r[cb]["logits"])
+    svc.enroll_shots(fb, shots)
+    ctl.enroll_shots(cb, shots)
+    svc.park(fa)
+    ctl.park(ca)
+    f_r = svc.push_audio({fa: x[0, 9:30], fb: x[1, 5:30]})
+    c_r = ctl.push_audio({ca: x[0, 9:30], cb: x[1, 5:30]})
+    np.testing.assert_array_equal(f_r[fa]["emb"], c_r[ca]["emb"])
+    np.testing.assert_array_equal(f_r[fb]["tenant_logits"],
+                                  c_r[cb]["tenant_logits"])
+    assert f_r[fb]["pred"] == c_r[cb]["pred"]
+    # slot pressure: opening a third session LRU-evicts; resume must be
+    # bit-identical in whatever slot comes free
+    fx, cx = svc.open_session(), ctl.open_session()
+    assert svc.poll(fa)["state"] == "parked"
+    svc.push_audio({fx: x[2, :4]})
+    ctl.push_audio({cx: x[2, :4]})
+    f_r = svc.push_audio({fa: x[0, 30:40]})
+    c_r = ctl.push_audio({ca: x[0, 30:40]})
+    np.testing.assert_array_equal(f_r[fa]["emb"], c_r[ca]["emb"])
+    np.testing.assert_array_equal(f_r[fa]["logits"], c_r[ca]["logits"])
+
+
+def test_fused_service_chunk_size_invariance():
+    """The fused service's cross-program discipline: pushing one stream
+    through different t_chunk buckets yields bit-identical outputs."""
+    cfg, bundle, params, bn = _setup()
+    x = np.random.default_rng(14).normal(size=(23, 2)).astype(np.float32)
+    outs = []
+    for t_chunk in (1, 4, 16):
+        svc = StreamSessionService(bundle, params, bn, n_slots=2,
+                                   t_chunk=t_chunk, fused=True)
+        sid = svc.open_session()
+        r = svc.push_audio({sid: x})[sid]
+        outs.append((r["emb"], r["logits"]))
+    for e, l in outs[1:]:
+        np.testing.assert_array_equal(outs[0][0], e)
+        np.testing.assert_array_equal(outs[0][1], l)
+
+
+def test_fused_forward_matches_stream_and_unfused():
+    """models/tcn.make_fused_forward: bit-identical to the fused chunk
+    executor run from a fresh state (same kernels, zero history == causal
+    left-pad), and allclose to raw tcn_forward (BN folding reassociates
+    by design — that is the documented fused-service caveat)."""
+    cfg, bundle, params, bn = _setup()
+    scan_p, scan_bn, fused_p = bake_stream_params(params, bn, cfg)
+    B, T = 3, 30
+    x = np.random.default_rng(15).normal(size=(B, T, 2)).astype(np.float32)
+    fwd = jax.jit(make_fused_forward(cfg))
+    emb_f, log_f = fwd(fused_p, jnp.asarray(x))
+    fused = jax.jit(make_grid_fused(cfg))
+    _, emb_s, log_s = fused(fused_p, grid_init(cfg, B), jnp.asarray(x),
+                            jnp.full((B,), T, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(emb_f), np.asarray(emb_s)[:, -1])
+    np.testing.assert_array_equal(np.asarray(log_f), np.asarray(log_s)[:, -1])
+    emb_r, log_r, _ = tcn_forward(params, bn, cfg, jnp.asarray(x),
+                                  train=False)
+    np.testing.assert_allclose(np.asarray(emb_f), np.asarray(emb_r),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(log_f), np.asarray(log_r),
+                               rtol=2e-4, atol=2e-5)
 
 
 # ---------------------------------------------------------------------------
