@@ -22,7 +22,15 @@ Gates (CI fails the job instead of merely uploading the artifact):
     T_chunk=160 for BOTH the fp32 and quantized sweeps, with the bench's
     bit-identity assertion recorded True, and must not fall below 1/3 of
     the committed baseline's speedup (degradation guard, sized to sit
-    outside shared-runner timing noise).
+    outside shared-runner timing noise);
+  * dispatch-latency telemetry — each section's ``dispatch_latency``
+    summary (the repro.obs per-dispatch histograms, post-warmup) must be
+    schema-valid (count > 0, p50 <= p99, every by_shape entry carrying
+    counts and quantiles) and its tail bounded: p99 <= max(5 x p50,
+    p50 + TAIL_SLACK_US).  The absolute-slack arm keeps the RATIO gate
+    from tripping on microsecond-scale dispatches, where one scheduler
+    hiccup on a shared runner is many multiples of p50; the ratio arm is
+    the real contract once dispatches are non-trivial.
 
 Old-schema baselines (pre --service split: no "tcn"/"lm" sections) are
 upgraded on the fly; missing baseline metrics are reported and skipped,
@@ -48,6 +56,8 @@ KERNEL_RATIO_MAX = 3.0
 COST_RATIO_MAX = 2.0
 BYTES_RATIO_MAX = 2.0
 NOISE_FLOOR = 4.0  # don't fail normalized-cost ratios in the noise band
+TAIL_RATIO_MAX = 5.0   # dispatch latency p99 <= 5x p50 ...
+TAIL_SLACK_US = 2000.0  # ... OR within p50 + 2ms (shared-runner hiccups)
 
 
 def _load(path):
@@ -72,6 +82,54 @@ def _norm_cost(section):
     return (park + resume) / tick
 
 
+def check_latency(name: str, section: dict) -> list[str]:
+    """Validate a section's ``dispatch_latency`` telemetry summary and
+    gate its tail.  Schema first (a malformed summary means the obs plane
+    broke, which this gate exists to catch), then
+    p99 <= max(TAIL_RATIO_MAX * p50, p50 + TAIL_SLACK_US)."""
+    errors = []
+    lat = section.get("dispatch_latency")
+    if lat is None:
+        errors.append(f"{name}: dispatch_latency summary missing "
+                      f"(obs histograms not wired into the bench?)")
+        return errors
+    for key in ("count", "p50_us", "p99_us", "mean_us", "by_shape"):
+        if key not in lat:
+            errors.append(f"{name}: dispatch_latency missing field {key!r}")
+    if errors:
+        return errors
+    count, p50, p99 = lat["count"], lat["p50_us"], lat["p99_us"]
+    if not (isinstance(count, int) and count > 0):
+        errors.append(f"{name}: dispatch_latency count={count!r} "
+                      f"(expected > 0 post-warmup samples)")
+        return errors
+    if not (0 < p50 <= p99):
+        errors.append(f"{name}: dispatch_latency quantiles inconsistent "
+                      f"(p50={p50}, p99={p99})")
+        return errors
+    shapes = lat["by_shape"]
+    if not isinstance(shapes, dict) or not shapes:
+        errors.append(f"{name}: dispatch_latency.by_shape empty")
+    else:
+        for shape, row in shapes.items():
+            if not all(k in row for k in ("count", "p50_us", "p99_us")):
+                errors.append(f"{name}: by_shape[{shape!r}] malformed: "
+                              f"{sorted(row)}")
+        total = sum(row.get("count", 0) for row in shapes.values())
+        if total != count:
+            errors.append(f"{name}: by_shape counts sum to {total}, "
+                          f"summary says {count}")
+    limit = max(TAIL_RATIO_MAX * p50, p50 + TAIL_SLACK_US)
+    if p99 > limit:
+        errors.append(f"{name}: dispatch latency tail p99={p99:.0f}us > "
+                      f"max({TAIL_RATIO_MAX}x p50, p50 + "
+                      f"{TAIL_SLACK_US:.0f}us) = {limit:.0f}us "
+                      f"(p50={p50:.0f}us, n={count})")
+    print(f"[gate] {name} dispatch latency: p50={p50:.0f}us "
+          f"p99={p99:.0f}us n={count} limit={limit:.0f}us")
+    return errors
+
+
 def check(fresh: dict, base: dict) -> list[str]:
     errors, skipped = [], []
 
@@ -89,12 +147,14 @@ def check(fresh: dict, base: dict) -> list[str]:
             s >= TCN_MIN_SPEEDUP,
             f"tcn chunk speedup {s:.2f}x < {TCN_MIN_SPEEDUP}x (160 vs 1)",
         )
+        errors += check_latency("tcn", tcn)
     if lm:
         s = lm.get("speedup_16_vs_1", 0.0)
         gate(
             s >= LM_MIN_SPEEDUP,
             f"lm chunk speedup {s:.2f}x < {LM_MIN_SPEEDUP}x (16 vs 1)",
         )
+        errors += check_latency("lm", lm)
         spec = lm.get("speculative")
         if not spec:
             skipped.append("lm: speculative sweep missing from fresh run")

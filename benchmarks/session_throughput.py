@@ -36,6 +36,16 @@ the cwd; CI compares it against the committed baseline with
 ``benchmarks.check_regression`` and fails on regression.  ``--smoke``
 shrinks the grids for CI runtime; the asserted properties are identical.
 
+Telemetry (repro.obs): every bench service reports into the process
+default registry, so the run also emits ``BENCH_metrics_snapshot.json``
+(the full registry snapshot — counters, gauges, per-shape latency
+histograms, kernel-build provenance) and each section carries a
+``dispatch_latency`` summary (merged p50/p99 of the service's OWN
+per-dispatch log2 histograms, reset after warmup so compile time never
+pollutes the tail).  ``check_regression`` validates the schema and gates
+the p99/p50 tail ratio.  Set ``REPRO_TRACE=trace.json`` to additionally
+capture a Perfetto-loadable span trace of the whole run.
+
     PYTHONPATH=src python -m benchmarks.session_throughput \\
         [--smoke] [--service {tcn,lm,both}] [--speculative K]
 """
@@ -53,6 +63,7 @@ from benchmarks.common import emit
 from repro.configs import get_config
 from repro.models import build_bundle
 from repro.models.tcn import tcn_empty_state
+from repro.obs.metrics import Histogram, default_registry
 from repro.sessions import (
     LMSessionService,
     SpeculativeDecoder,
@@ -73,11 +84,43 @@ LM_CHUNK_SWEEP = (1, 16)
 LM_TOKENS = 48       # tokens/session per timed LM sweep pass
 LM_REPS = 7          # best-of-N passes (container timing jitter)
 OUT_PATH = "BENCH_session_throughput.json"
+METRICS_PATH = "BENCH_metrics_snapshot.json"
 
 
 def _service(bundle, params, bn, *, n_slots, **kw):
+    # every bench service reports into the process-default registry so ONE
+    # snapshot (BENCH_metrics_snapshot.json) carries the whole run —
+    # services run sequentially, so shared counters never race
     return StreamSessionService(bundle, params, bn, n_slots=n_slots,
-                                max_tenants=8, max_ways=4, **kw)
+                                max_tenants=8, max_ways=4,
+                                metrics=default_registry(), **kw)
+
+
+def _latency_summary(svc) -> dict:
+    """p50/p99 of the service's per-shape dispatch-latency histograms,
+    merged into one distribution (log2 buckets add exactly), plus the
+    per-shape breakdown.  Callers reset the registry after warmup so
+    compile-time outliers never pollute the steady-state tail."""
+    rows = svc.metrics().get("dispatch_latency_us", [])
+    rows = [r for r in rows
+            if r["labels"].get("service") == svc._service_name and r["count"]]
+    m = Histogram()
+    for r in rows:
+        for i, n in r["buckets"].items():
+            m.buckets[int(i)] += n
+        m.count += r["count"]
+        m.sum += r["sum"]
+        m.min = min(m.min, r["min"])
+        m.max = max(m.max, r["max"])
+    return {
+        "count": m.count,
+        "p50_us": m.percentile(50),
+        "p99_us": m.percentile(99),
+        "mean_us": m.mean,
+        "by_shape": {r["labels"].get("shape", "?"):
+                     {"count": r["count"], "p50_us": r["p50"],
+                      "p99_us": r["p99"]} for r in rows},
+    }
 
 
 def _chunk_sweep(cfg, bundle, params, bn, *, n_slots, n_samples):
@@ -92,6 +135,7 @@ def _chunk_sweep(cfg, bundle, params, bn, *, n_slots, n_samples):
         chunk = {sid: x[i] if t_chunk > 1 else x[i, 0]
                  for i, sid in enumerate(sids)}
         svc.push_audio(chunk)  # compile
+        svc.metrics_registry.reset()  # drop compile-time latency outliers
         ticks = max(n_samples // t_chunk, 1)
         t0 = time.perf_counter()
         for _ in range(ticks):
@@ -99,8 +143,9 @@ def _chunk_sweep(cfg, bundle, params, bn, *, n_slots, n_samples):
         dt = time.perf_counter() - t0
         rate = ticks * t_chunk / dt  # samples/sec/session
         out[t_chunk] = {"samples_per_sec_per_session": rate,
-                        "dispatches": svc.dispatches - 1,
-                        "us_per_tick": dt / ticks * 1e6}
+                        "dispatches": svc.dispatches,
+                        "us_per_tick": dt / ticks * 1e6,
+                        "dispatch_latency": _latency_summary(svc)}
         emit(f"sessions/chunk_T{t_chunk}", dt / ticks * 1e6,
              f"{rate:.0f} samples/s/session over {n_slots} sessions")
     speedup = (out[160]["samples_per_sec_per_session"]
@@ -161,6 +206,7 @@ def run_tcn(smoke: bool = False):
     sids += [svc.open_session(tenant=None) for _ in range(4)]
     shots = rng.normal(size=(3, 12, cfg.tcn_in_channels)).astype(np.float32)
     svc.push_audio({sid: x[i, 0] for i, sid in enumerate(sids)})  # compile
+    svc.metrics_registry.reset()  # steady-state tails only (no compile)
     lat = []
     for t in range(1, ticks + 1):
         if t == 5:  # tenants enroll keywords mid-stream, streams stay live
@@ -175,6 +221,14 @@ def run_tcn(smoke: bool = False):
     rate = n_slots / (lat.mean() * 1e-6)
     emit(f"sessions/steady_{n_slots}", lat.mean(),
          f"{rate:.0f} sessions*samples/s p50={p50:.0f}us p99={p99:.0f}us")
+    # the service's OWN histogram view of the same ticks (the telemetry
+    # plane the regression gate reads) — captured before the chunk sweep
+    # resets the shared registry
+    steady_latency = _latency_summary(svc)
+    emit("sessions/dispatch_latency", steady_latency["p50_us"],
+         f"hist p50={steady_latency['p50_us']:.0f}us "
+         f"p99={steady_latency['p99_us']:.0f}us "
+         f"n={steady_latency['count']}")
 
     # -- chunked dispatch amortization (the tentpole metric) ----------------
     sweep, speedup = _chunk_sweep(cfg, bundle, params, bn,
@@ -224,6 +278,7 @@ def run_tcn(smoke: bool = False):
     return {
         "config": cfg.name, "smoke": smoke, "n_slots": n_slots,
         "steady_p50_us": p50, "steady_p99_us": p99,
+        "dispatch_latency": steady_latency,
         "chunk_sweep": {str(k): v for k, v in sweep.items()},
         "speedup_160_vs_1": speedup,
         "parked_state_bytes": st["slot_state_bytes"],
@@ -237,6 +292,7 @@ def run_tcn(smoke: bool = False):
 
 def _lm_service(bundle, params, *, n_slots, t_chunk, **kw):
     kw.setdefault("seq_cap", 16 + (2 + LM_REPS) * LM_TOKENS)
+    kw.setdefault("metrics", default_registry())
     return LMSessionService(bundle, params, n_slots=n_slots, t_chunk=t_chunk,
                             **kw)
 
@@ -265,6 +321,7 @@ def run_lm(smoke: bool = False, speculative_k: int = 4):
         # along); then best-of-N steady-state passes (container timing
         # jitter dwarfs the single-pass signal)
         out = svc.decode({sid: n_tokens for sid in sids})
+        svc.metrics_registry.reset()  # drop compile-time latency outliers
         best, nd = 0.0, 0
         for _ in range(LM_REPS):
             d0 = svc.dispatches
@@ -277,7 +334,8 @@ def run_lm(smoke: bool = False, speculative_k: int = 4):
                 best, nd = n_tokens / dt, svc.dispatches - d0
         sweep[t_chunk] = {"tokens_per_sec_per_session": best,
                           "dispatches": nd,
-                          "us_per_dispatch": n_tokens / best / nd * 1e6}
+                          "us_per_dispatch": n_tokens / best / nd * 1e6,
+                          "dispatch_latency": _latency_summary(svc)}
         streams[t_chunk] = [out[sid] for sid in sids]
         emit(f"lm/chunk_T{t_chunk}", n_tokens / best / nd * 1e6,
              f"{best:.0f} tokens/s/session over {n_slots} sessions")
@@ -324,6 +382,7 @@ def run_lm(smoke: bool = False, speculative_k: int = 4):
 
     return {
         "config": cfg.name, "smoke": smoke, "n_slots": n_slots,
+        "dispatch_latency": sweep[16]["dispatch_latency"],
         "chunk_sweep": {str(k): v for k, v in sweep.items()},
         "speedup_16_vs_1": speedup,
         "parked_blob_bytes": blob,
@@ -362,11 +421,13 @@ def run_lm_speculative(smoke: bool = False, k: int = 4):
         return best
 
     plain = LMSessionService(bundle, params, n_slots=n_slots,
-                             seq_cap=seq_cap, t_chunk=16)
+                             seq_cap=seq_cap, t_chunk=16,
+                             metrics=default_registry())
     base = best_of(plain.decode, [plain.open_session(p) for p in prompts])
 
     svc = LMSessionService(bundle, params, n_slots=n_slots,
-                           seq_cap=seq_cap, t_chunk=16)
+                           seq_cap=seq_cap, t_chunk=16,
+                           metrics=default_registry())
     sp = SpeculativeDecoder(svc, ngram_drafter(), k=k, verify="parallel")
     spec = best_of(sp.decode, [svc.open_session(p) for p in prompts])
 
@@ -404,6 +465,12 @@ def _write_out(sections: dict):
     with open(OUT_PATH, "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote {OUT_PATH} ({', '.join(sections)})", flush=True)
+    # the full telemetry snapshot of the run (every bench service reports
+    # into the process-default registry, kernel builds included) — the CI
+    # artifact a failed gate is debugged from
+    with open(METRICS_PATH, "w") as f:
+        json.dump(default_registry().snapshot(), f, indent=2)
+    print(f"# wrote {METRICS_PATH}", flush=True)
 
 
 def main():

@@ -91,11 +91,22 @@ def register(op: str, *, ref, pallas) -> None:
 
 def build(op: str, backend: str | None = "auto"):
     """Resolve ``backend`` once and return the concrete implementation for
-    ``op``.  The returned callable carries no backend logic of its own."""
+    ``op``.  The returned callable carries no backend logic of its own.
+
+    Each build reports to the process-default metrics registry and trace
+    (op construction happens outside jit, so this costs one dict lookup),
+    which makes "what lowered where" visible in any metrics snapshot —
+    the first question when a run is slow on the wrong backend."""
     if op not in _REGISTRY:
         raise KeyError(f"unknown kernel op {op!r}; registered: "
                        f"{sorted(_REGISTRY)}")
     r = resolve(backend)
+    from repro.obs.metrics import default_registry
+    from repro.obs.trace import get_tracer
+    default_registry().counter("kernel_ops_built_total", op=op,
+                               backend=r.backend).inc()
+    get_tracer().instant("kernel_build", cat="kernels", op=op,
+                         backend=r.backend)
     entry = _REGISTRY[op]
     if not r.use_pallas:
         return entry["ref"]

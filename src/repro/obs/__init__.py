@@ -1,0 +1,38 @@
+"""Serving telemetry plane: metrics, trace spans, in-scan device counters.
+
+Three layers, all zero-dependency:
+
+  * metrics.py — ``Counter``/``Gauge``/``Histogram`` (log2 latency
+    buckets) in a labeled ``MetricsRegistry`` with JSON snapshot +
+    Prometheus text exposition; every service reports through one;
+  * trace.py   — Chrome-trace/Perfetto span tracer (``trace.span(...)``
+    context manager, instants, counter tracks), ring-buffered, activated
+    process-wide by ``REPRO_TRACE=path``;
+  * device.py  — in-jit counters threaded through the scans as extra
+    outputs (speculative acceptance per lane, chunk occupancy,
+    pow2-padding waste, masked-vs-live ratios) — one small reduce per
+    dispatch, off by default, bit-identical on session state.
+"""
+
+from repro.obs.device import (
+    acceptance_stats,
+    decode_occupancy,
+    env_device_counters,
+    occupancy_stats,
+    valid_stats,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+)
+from repro.obs.trace import Tracer, get_tracer, trace
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
+    "Tracer", "get_tracer", "trace",
+    "acceptance_stats", "decode_occupancy", "env_device_counters",
+    "occupancy_stats", "valid_stats",
+]

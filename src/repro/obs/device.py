@@ -1,0 +1,106 @@
+"""Device-side counters: hot-loop efficiency measured WITHOUT leaving jit.
+
+The slot-grid scans are deliberately shape-static — masked lanes and
+padded steps still compute — so the interesting efficiency numbers
+(how much of the compiled grid did real work?) exist only *inside* the
+jitted program.  These helpers compute them there, as a few extra scalar
+reduces on values the scan already materializes, and return them as one
+small extra output per dispatch:
+
+  * ``occupancy_stats(lengths, t_pad)``  -> (4,) i32
+        [live_steps, total_steps, live_lanes, n_lanes]
+    for a grid/decode dispatch with per-lane valid-prefix lengths: the
+    masked-vs-live step ratio, lane occupancy, and pow2-padding waste of
+    the tick are all host-derivable from this one vector
+    (``decode_occupancy``);
+  * ``acceptance_stats(ys, draft, n_draft)`` -> (S,) i32
+    per-lane accepted-draft counts of a speculative verify — the length
+    of each lane's matching prefix, computed on device from the verify
+    outputs (the host does the same comparison for control flow; the
+    device counter exists so acceptance is measurable per dispatch even
+    when the host loop is elsewhere, and it is the cross-check the
+    instrumentation tests pin against the host arithmetic).
+
+Contract (tested in tests/test_obs.py): threading these outputs through a
+jitted scan changes NOTHING about the session state or the decoded
+outputs — the instrumented program is bit-identical to the uninstrumented
+one on every state leaf.  The counters are pure functions of inputs the
+program already carries (lengths, masks, argmax outputs); no state math
+is touched, no extra sync is added (the stats ride the same host fetch
+as the outputs).
+
+Off by default: services compile the instrumented twin only when
+constructed with ``device_counters=True`` (or ``REPRO_DEVICE_COUNTERS=1``).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+ENV_VAR = "REPRO_DEVICE_COUNTERS"
+
+
+def env_device_counters() -> bool:
+    return os.environ.get(ENV_VAR, "").strip().lower() in ("1", "true", "yes")
+
+
+def occupancy_stats(lengths, t_pad: int):
+    """(S,) per-lane valid-prefix lengths -> (4,) i32 stats vector
+    [live_steps, total_steps, live_lanes, n_lanes].  Call INSIDE the
+    jitted dispatch wrapper; one tiny transfer carries the whole tick's
+    efficiency story."""
+    lengths = jnp.asarray(lengths, jnp.int32)
+    s = lengths.shape[0]
+    return jnp.stack([
+        jnp.sum(lengths),
+        jnp.int32(s * t_pad),
+        jnp.sum((lengths > 0).astype(jnp.int32)),
+        jnp.int32(s),
+    ])
+
+
+def valid_stats(valid):
+    """(S, T) bool validity mask -> the same (4,) i32 vector (the mask is
+    ``lengths_to_valid`` of the prefix lengths, so the row-sums recover
+    them)."""
+    valid = jnp.asarray(valid)
+    return occupancy_stats(valid.sum(axis=1), valid.shape[1])
+
+
+def acceptance_stats(ys, draft, n_draft):
+    """Per-lane accepted-draft counts of one verify dispatch.
+
+    ys (S, K+1) verify outputs, draft (S, K) proposed tokens, n_draft (S,)
+    valid drafts per lane.  Returns (S,) i32 — the length of each lane's
+    matching prefix (the ``m`` the host rollback arithmetic computes)."""
+    ys, draft = jnp.asarray(ys), jnp.asarray(draft)
+    k = draft.shape[1]
+    match = (ys[:, :k] == draft) & (jnp.arange(k)[None, :]
+                                    < jnp.asarray(n_draft)[:, None])
+    # cumprod trick: 1 while the prefix matches, 0 forever after the first
+    # mismatch; the row sum IS the matching-prefix length
+    return jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+
+
+def decode_occupancy(stats) -> dict:
+    """Host-side view of an ``occupancy_stats`` vector: ratios derived once
+    per dispatch (never on device — the device's job ends at the reduces).
+
+      live_step_ratio  live / total grid steps (masked-vs-live);
+      lane_occupancy   lanes doing any work / compiled lanes;
+      pad_waste        padded-but-dead steps WITHIN live lanes / their
+                       padded extent — the pow2 bucket's overhang."""
+    live, total, lanes_live, lanes = (int(x) for x in stats)
+    t_pad = total // lanes if lanes else 0
+    live_extent = lanes_live * t_pad
+    return {
+        "live_steps": live,
+        "total_steps": total,
+        "live_lanes": lanes_live,
+        "lanes": lanes,
+        "live_step_ratio": live / total if total else 0.0,
+        "lane_occupancy": lanes_live / lanes if lanes else 0.0,
+        "pad_waste": 1.0 - live / live_extent if live_extent else 0.0,
+    }

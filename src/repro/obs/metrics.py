@@ -1,0 +1,259 @@
+"""Zero-dependency metrics plane: Counter / Gauge / Histogram + registry.
+
+The serving stack (slot grids, LM sessions, speculative decode, fused
+kernels) is a performance artifact — every headline claim of the source
+paper is a *measurement* — yet until this module its only counters were
+two bare ints on ``SlotGridService``.  This registry is the one surface
+every service reports through:
+
+  * ``Counter``   — monotonically increasing float/int (evictions,
+    dispatches, drafted/accepted tokens);
+  * ``Gauge``     — last-write-wins scalar (bound slots, parked bytes,
+    occupancy of the most recent dispatch);
+  * ``Histogram`` — log2-bucketed distribution for latency: bucket ``i``
+    covers ``(2^(i-1), 2^i]``, so microsecond-scale dispatch times and
+    millisecond-scale park/resume costs land in one compact fixed-size
+    array with ~41% worst-case quantile error at the bucket edges —
+    ``percentile()`` interpolates geometrically inside the winning bucket
+    (exact when samples are log-uniform within it), which is plenty for
+    a p99/p50 tail-ratio CI gate.
+
+Metrics are keyed by (name, labels) where labels is a small frozen dict
+(``service=``, ``tenant=``, ``backend=``, ``shape=`` ...) — the Prometheus
+data model, without the dependency.  ``snapshot()`` returns a pure-JSON
+tree (what ``service.metrics()`` surfaces and the bench writes to disk);
+``prometheus()`` renders the text exposition format so a scrape endpoint
+is one ``app.route`` away.
+
+Everything here is host-side and allocation-light: a ``Histogram.record``
+is two adds and an int log2 — safe to leave enabled on the hot path.
+Device-side (in-jit) counters live in obs/device.py; they FEED this
+registry but never depend on it.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+from typing import Iterable
+
+# log2 buckets: index i holds samples in (2^(i-1), 2^i].  64 buckets cover
+# [1, 2^63] — from 1 us to ~292k years when recording microseconds.
+N_BUCKETS = 64
+
+
+def _label_key(labels: dict) -> tuple:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class Counter:
+    """Monotonic counter.  ``inc`` only; resets are a registry operation."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int | float = 1) -> None:
+        if n < 0:
+            raise ValueError(f"counter increment must be >= 0, got {n}")
+        self.value += n
+
+    def to_dict(self) -> dict:
+        return {"type": "counter", "value": self.value}
+
+
+class Gauge:
+    """Last-write-wins scalar."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def inc(self, n: float = 1) -> None:
+        self.value += n
+
+    def dec(self, n: float = 1) -> None:
+        self.value -= n
+
+    def to_dict(self) -> dict:
+        return {"type": "gauge", "value": self.value}
+
+
+class Histogram:
+    """Log2-bucketed histogram (see module docstring for the bucket rule).
+
+    Records non-negative values; values in [0, 1] land in bucket 0.  Keeps
+    exact ``count``/``sum``/``min``/``max`` alongside the buckets, so means
+    are exact and only quantiles are bucket-approximate."""
+
+    __slots__ = ("buckets", "count", "sum", "min", "max")
+
+    def __init__(self):
+        self.buckets = [0] * N_BUCKETS
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def record(self, v: float) -> None:
+        if v < 0:
+            raise ValueError(f"histogram value must be >= 0, got {v}")
+        i = 0 if v <= 1 else min(math.ceil(math.log2(v)), N_BUCKETS - 1)
+        self.buckets[i] += 1
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+
+    def reset(self) -> None:
+        """Drop all samples (benches call this after warmup so compile-time
+        outliers never pollute steady-state tails)."""
+        self.__init__()
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Approximate quantile ``q`` in [0, 100]: find the bucket holding
+        the q-th sample, interpolate geometrically between its bounds
+        (log-uniform assumption), clamp to the observed min/max."""
+        if not 0 <= q <= 100:
+            raise ValueError(f"percentile must be in [0, 100], got {q}")
+        if self.count == 0:
+            return 0.0
+        rank = q / 100 * self.count
+        seen = 0
+        for i, n in enumerate(self.buckets):
+            if n == 0:
+                continue
+            if seen + n >= rank:
+                lo = 1.0 if i == 0 else float(2 ** (i - 1))
+                hi = float(2 ** i)
+                frac = (rank - seen) / n
+                v = lo * (hi / lo) ** frac
+                return float(min(max(v, self.min), self.max))
+            seen += n
+        return float(self.max)
+
+    def to_dict(self) -> dict:
+        # sparse bucket encoding: {exponent: count} for non-empty buckets
+        return {"type": "histogram", "count": self.count, "sum": self.sum,
+                "min": self.min if self.count else None,
+                "max": self.max if self.count else None,
+                "p50": self.percentile(50), "p99": self.percentile(99),
+                "buckets": {str(i): n for i, n in enumerate(self.buckets)
+                            if n}}
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+
+
+class MetricsRegistry:
+    """Get-or-create store of (name, labels) -> metric.
+
+    Thread-safe on the create path (an asyncio/worker front-end will share
+    one registry across slot-grid workers); reads of plain int/float slots
+    are atomic under CPython and need no lock."""
+
+    def __init__(self):
+        self._metrics: dict[tuple, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, kind: str, name: str, labels: dict):
+        key = (name, _label_key(labels))
+        m = self._metrics.get(key)
+        if m is None:
+            with self._lock:
+                m = self._metrics.get(key)
+                if m is None:
+                    m = _KINDS[kind]()
+                    self._metrics[key] = m
+        if not isinstance(m, _KINDS[kind]):
+            raise TypeError(
+                f"metric {name!r}{dict(labels)} already registered as "
+                f"{type(m).__name__}, requested {kind}")
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", name, labels)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._get("histogram", name, labels)
+
+    def reset(self) -> None:
+        """Reset every metric in place (handles stay valid)."""
+        with self._lock:
+            for m in self._metrics.values():
+                m.__init__()
+
+    # -- exposition ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Pure-JSON tree: {name: [{labels: {...}, **metric}]}.  The shape
+        ``service.metrics()`` returns and BENCH_metrics_snapshot.json
+        persists."""
+        out: dict[str, list] = {}
+        for (name, lk), m in sorted(self._metrics.items()):
+            out.setdefault(name, []).append(
+                {"labels": dict(lk), **m.to_dict()})
+        return out
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.snapshot(), **kw)
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition format (v0.0.4).  Histograms render
+        cumulative ``le`` buckets at the log2 upper bounds plus the
+        conventional ``_sum``/``_count`` series."""
+        lines: list[str] = []
+        typed: set[str] = set()
+        for (name, lk), m in sorted(self._metrics.items()):
+            kind = ("counter" if isinstance(m, Counter)
+                    else "gauge" if isinstance(m, Gauge) else "histogram")
+            if name not in typed:
+                lines.append(f"# TYPE {name} {kind}")
+                typed.add(name)
+            if isinstance(m, Histogram):
+                cum = 0
+                for i, n in enumerate(m.buckets):
+                    if n == 0:
+                        continue
+                    cum += n
+                    lines.append(f"{name}_bucket"
+                                 f"{_prom_labels(lk, le=float(2 ** i))} {cum}")
+                lines.append(f"{name}_bucket{_prom_labels(lk, le='+Inf')} "
+                             f"{m.count}")
+                lines.append(f"{name}_sum{_prom_labels(lk)} {m.sum}")
+                lines.append(f"{name}_count{_prom_labels(lk)} {m.count}")
+            else:
+                lines.append(f"{name}{_prom_labels(lk)} {m.value}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+def _prom_labels(lk: Iterable[tuple], **extra) -> str:
+    pairs = list(lk) + [(k, v) for k, v in extra.items()]
+    if not pairs:
+        return ""
+    body = ",".join(f'{k}="{v}"' for k, v in pairs)
+    return "{" + body + "}"
+
+
+# The process-default registry: module-level producers that have no service
+# to hang a registry on (kernels/dispatch.py op builds) report here, and
+# standalone tools (benches) can fold it into their snapshots.
+DEFAULT = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    return DEFAULT

@@ -114,6 +114,10 @@ class LMServer:
     def finish(self, rid: int):
         self.service.close(rid)
 
+    def metrics(self) -> dict:
+        """Telemetry snapshot of the underlying service (obs registry)."""
+        return self.service.metrics()
+
 
 class TCNStreamServer:
     """Real-time streaming classification (the paper's KWS deployment):
@@ -150,3 +154,7 @@ class TCNStreamServer:
         embs = np.stack([res[sid]["emb"] for sid in self.sids])
         logits = np.stack([res[sid]["logits"] for sid in self.sids])
         return embs, logits
+
+    def metrics(self) -> dict:
+        """Telemetry snapshot of the underlying service (obs registry)."""
+        return self.service.metrics()

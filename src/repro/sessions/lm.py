@@ -48,12 +48,14 @@ replicated, and placement survives decode dispatches
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.device import occupancy_stats
 from repro.sessions.service import SessionRecord, SlotGridService
 from repro.sessions.state import (
     column_pspecs,
@@ -214,15 +216,20 @@ class LMSessionService(SlotGridService):
     and retirement (the historical LMServer contract)."""
 
     _session_cls = _LMSession
+    _service_name = "lm"
 
     def __init__(self, bundle, params, *, n_slots: int = 8,
                  seq_cap: int = 512, t_chunk: int = 16,
                  max_sessions: int | None = None, prefill_chunk: int = 64,
-                 mesh=None, cost_fn=None, stale_window: int = 0):
+                 mesh=None, cost_fn=None, stale_window: int = 0,
+                 metrics=None, tracer=None,
+                 device_counters: bool | None = None):
         if cost_fn is None:
             cost_fn = self._park_cost  # O(pos) bytes: cost-aware by default
         super().__init__(n_slots, t_chunk=t_chunk, max_sessions=max_sessions,
-                         cost_fn=cost_fn, stale_window=stale_window)
+                         cost_fn=cost_fn, stale_window=stale_window,
+                         metrics=metrics, tracer=tracer,
+                         device_counters=device_counters)
         self.bundle = bundle
         self.seq_cap = int(seq_cap)
         self._params = params
@@ -253,9 +260,25 @@ class LMSessionService(SlotGridService):
             else:
                 self._park_fixed += per
         self.outputs: dict[int, list[int]] = {}
-        self._decode_scan = jax.jit(
-            make_decode_scan(bundle.decode_fn, self._batch_axes,
-                             self._seq_axes))
+        # the un-jitted scan stays reachable so the speculative decoder and
+        # the instrumented twin below wrap the SAME program body
+        self._decode_scan_raw = make_decode_scan(
+            bundle.decode_fn, self._batch_axes, self._seq_axes)
+        self._decode_scan = jax.jit(self._decode_scan_raw)
+        # instrumented twin: identical scan + one in-jit reduce of the
+        # per-lane step counts (obs.device) as an extra output — session
+        # state and tokens stay bit-identical (tests/test_obs.py)
+        self._decode_scan_inst = None
+        if self.device_counters:
+            raw = self._decode_scan_raw
+
+            def _inst(params, cache, tok, pos, inp, n_inp, n_steps):
+                cache, tok, pos, ys = raw(params, cache, tok, pos, inp,
+                                          n_inp, n_steps)
+                return (cache, tok, pos, ys,
+                        occupancy_stats(n_steps, inp.shape[1]))
+
+            self._decode_scan_inst = jax.jit(_inst)
         # true chunked prefill: only where EVERY cache leaf is
         # position-indexed (a seq axis to write rows into).  Recurrent
         # leaves (RWKV wkv state, Mamba conv/ssm state) advance by value
@@ -334,10 +357,14 @@ class LMSessionService(SlotGridService):
             slot = jnp.int32(self.sched.slot_of[sid])
             off = 0
             for n in pow2_chunks(prompt.size - 1, self.prefill_chunk):
-                self.cache = self._prefill_col(
-                    self._params, self.cache, slot,
-                    jnp.asarray(prompt[off:off + n])[None], jnp.int32(off))
-                self.dispatches += 1
+                t0 = time.perf_counter()
+                with self.tracer.span("prefill", cat="lm", sid=sid,
+                                      shape=f"P{n}", pos=off):
+                    self.cache = self._prefill_col(
+                        self._params, self.cache, slot,
+                        jnp.asarray(prompt[off:off + n])[None],
+                        jnp.int32(off))
+                self._record_dispatch(time.perf_counter() - t0, f"P{n}")
                 off += n
             self.sessions[sid].steps = off
         return sid
@@ -347,6 +374,9 @@ class LMSessionService(SlotGridService):
         reuse, outputs kept, record marked done (a further decode raises)."""
         self.sched.release(sid)
         self.sessions[sid].done = True
+        self.metrics_registry.counter("retired_total", service="lm").inc()
+        self.tracer.instant("retire", cat="lm", sid=sid,
+                            pos=self.sessions[sid].steps)
 
     # -- the hot path -------------------------------------------------------
     def _validate_want(self, want: dict[int, int]) -> None:
@@ -418,11 +448,19 @@ class LMSessionService(SlotGridService):
                 n_steps[s] = n
                 tok[s] = sess.tok
                 pos[s] = sess.steps
-            self.cache, tok2, _, ys = self._decode_scan(
-                self._params, self.cache, jnp.asarray(tok), jnp.asarray(pos),
-                jnp.asarray(inp), jnp.asarray(n_inp), jnp.asarray(n_steps))
-            self.dispatches += 1
-            tok2, ys = np.asarray(tok2), np.asarray(ys)
+            scan = self._decode_scan_inst or self._decode_scan
+            shape = f"T{t_pad}"
+            t0 = time.perf_counter()
+            with self.tracer.span("dispatch", cat="lm", shape=shape,
+                                  lanes=len(lanes)):
+                self.cache, tok2, _, ys, *dev = scan(
+                    self._params, self.cache, jnp.asarray(tok),
+                    jnp.asarray(pos), jnp.asarray(inp), jnp.asarray(n_inp),
+                    jnp.asarray(n_steps))
+                tok2, ys = np.asarray(tok2), np.asarray(ys)
+            self._record_dispatch(time.perf_counter() - t0, shape)
+            if dev:
+                self._ingest_occupancy(np.asarray(dev[0]))
             for sid, s in lanes.items():
                 sess = self.sessions[sid]
                 q = max(len(sess.prompt), 1)

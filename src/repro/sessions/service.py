@@ -53,6 +53,7 @@ to replicated and behaviour is unchanged.
 from __future__ import annotations
 
 import os
+import time
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -62,6 +63,14 @@ import numpy as np
 
 from repro.checkpoint.store import load_sessions, save_sessions
 from repro.core.protonet import pn_logits_banked
+from repro.obs.device import (
+    decode_occupancy,
+    env_device_counters,
+    occupancy_stats,
+    valid_stats,
+)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 from repro.models.tcn import bake_stream_params, tcn_empty_state
 from repro.sessions.scheduler import AdmissionError, SlotScheduler
 from repro.sessions.state import (
@@ -119,11 +128,14 @@ class SlotGridService:
     """
 
     _session_cls = SessionRecord
+    _service_name = "grid"  # metrics/trace label; subclasses override
 
     def __init__(self, n_slots: int, *, t_chunk: int = 1,
                  max_sessions: int | None = None,
                  cost_fn: Callable[[int], float] | None = None,
-                 stale_window: int = 0):
+                 stale_window: int = 0,
+                 metrics: MetricsRegistry | None = None,
+                 tracer=None, device_counters: bool | None = None):
         if t_chunk < 1:
             raise ValueError(f"t_chunk must be >= 1, got {t_chunk}")
         self.n_slots = n_slots
@@ -133,8 +145,86 @@ class SlotGridService:
         self.parking: dict[int, dict] = {}        # sid -> host blob
         self.sessions: dict[int, Any] = {}        # sid -> session record
         self._next_sid = 0
-        self.evictions = 0
-        self.dispatches = 0  # jitted calls (the amortization metric)
+        # -- telemetry plane (repro.obs): every counter the service keeps
+        # lives in ONE registry; pass ``metrics=`` to share a registry
+        # across services (a multi-worker front-end), default is private.
+        # The tracer defaults to the process-global one (REPRO_TRACE=path
+        # enables it); ``device_counters`` compiles the instrumented scan
+        # twins (extra in-jit stats outputs, bit-identical session state).
+        self.metrics_registry = metrics if metrics is not None \
+            else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.device_counters = (env_device_counters()
+                                if device_counters is None
+                                else bool(device_counters))
+        svc = self._service_name
+        reg = self.metrics_registry
+        self._c_dispatches = reg.counter("dispatches_total", service=svc)
+        self._c_evictions = reg.counter("evictions_total", service=svc)
+        self._g_bound = reg.gauge("sessions_bound", service=svc)
+        self._g_parked = reg.gauge("sessions_parked", service=svc)
+        self._lat_hists: dict[str, Any] = {}  # shape -> Histogram (cached)
+
+    # -- telemetry ----------------------------------------------------------
+    # Backward-compat surface for the historical bare-int counters: reads
+    # and writes route through the registry, so ``svc.dispatches`` and
+    # ``svc.metrics()["dispatches_total"]`` can never disagree.
+    @property
+    def dispatches(self) -> int:
+        """Jitted calls (the amortization metric)."""
+        return int(self._c_dispatches.value)
+
+    @dispatches.setter
+    def dispatches(self, v: int) -> None:
+        self._c_dispatches.value = v
+
+    @property
+    def evictions(self) -> int:
+        return int(self._c_evictions.value)
+
+    @evictions.setter
+    def evictions(self, v: int) -> None:
+        self._c_evictions.value = v
+
+    def metrics(self) -> dict:
+        """JSON snapshot of the service's metrics registry."""
+        return self.metrics_registry.snapshot()
+
+    def _latency_hist(self, shape: str):
+        h = self._lat_hists.get(shape)
+        if h is None:
+            h = self.metrics_registry.histogram(
+                "dispatch_latency_us", service=self._service_name,
+                shape=shape)
+            self._lat_hists[shape] = h
+        return h
+
+    def _record_dispatch(self, seconds: float, shape: str) -> None:
+        """One jitted call completed: count it, record wall time in the
+        per-compiled-shape log2 histogram, refresh occupancy gauges."""
+        self._c_dispatches.inc()
+        self._latency_hist(shape).record(seconds * 1e6)
+        self._g_bound.set(len(self.sched.slot_of))
+        self._g_parked.set(len(self.parking))
+        self.tracer.counter(f"{self._service_name}_sessions",
+                            bound=len(self.sched.slot_of),
+                            parked=len(self.parking))
+
+    def _ingest_occupancy(self, stats) -> None:
+        """Fold one dispatch's device-side occupancy vector
+        (obs.device.occupancy_stats) into the registry."""
+        occ = decode_occupancy(stats)
+        svc = self._service_name
+        reg = self.metrics_registry
+        reg.counter("device_live_steps_total", service=svc).inc(
+            occ["live_steps"])
+        reg.counter("device_masked_steps_total", service=svc).inc(
+            occ["total_steps"] - occ["live_steps"])
+        reg.gauge("device_lane_occupancy", service=svc).set(
+            occ["lane_occupancy"])
+        reg.gauge("device_pad_waste", service=svc).set(occ["pad_waste"])
+        reg.gauge("device_live_step_ratio", service=svc).set(
+            occ["live_step_ratio"])
 
     # -- state hooks (subclass responsibility) ------------------------------
     def _pack(self, slot: int, sid: int) -> dict:
@@ -170,24 +260,45 @@ class SlotGridService:
         return sid
 
     def _bind(self, sid: int, pinned: set[int] = frozenset()) -> int:
-        slot, evicted = self.sched.bind(sid, pinned)
-        if evicted is not None:
-            self.parking[evicted] = self._pack(slot, evicted)
-            self.evictions += 1
-        if sid in self.parking:
-            self._unpack(slot, self.parking.pop(sid))
-        elif self.sessions[sid].steps == 0:
-            self._reset(slot)
-        else:  # rebinding after evicted==None cannot lose state
-            raise AssertionError("bound session missing parked state")
-        self._on_bind(sid, slot)
+        with self.tracer.span("bind", cat=self._service_name, sid=sid):
+            slot, evicted = self.sched.bind(sid, pinned)
+            if evicted is not None:
+                with self.tracer.span("pack", cat=self._service_name,
+                                      sid=evicted, slot=slot):
+                    blob = self._pack(slot, evicted)
+                self.parking[evicted] = blob
+                self._c_evictions.inc()
+                if self.tracer.enabled:
+                    cost = self.sched.cost_fn(evicted) \
+                        if self.sched.cost_fn is not None else None
+                    self.tracer.instant("evict", cat=self._service_name,
+                                        victim=evicted, slot=slot,
+                                        for_sid=sid, park_cost=cost)
+            if sid in self.parking:
+                with self.tracer.span("unpack", cat=self._service_name,
+                                      sid=sid, slot=slot):
+                    self._unpack(slot, self.parking.pop(sid))
+                self.tracer.instant("resume", cat=self._service_name,
+                                    sid=sid, slot=slot)
+            elif self.sessions[sid].steps == 0:
+                self._reset(slot)
+            else:  # rebinding after evicted==None cannot lose state
+                raise AssertionError("bound session missing parked state")
+            self._on_bind(sid, slot)
         return slot
 
     def park(self, sid: int) -> None:
-        """Explicitly swap a session's slot column to host memory."""
+        """Explicitly swap a session's slot column to host memory.
+        Raises ``KeyError`` for a sid that was never admitted (the same
+        contract as ``_touch_and_bind``); parking an already-parked
+        session stays a no-op."""
+        if sid not in self.sessions:
+            raise KeyError(f"unknown session {sid}")
         slot = self.sched.park(sid)
         if slot is not None:
-            self.parking[sid] = self._pack(slot, sid)
+            with self.tracer.span("park", cat=self._service_name,
+                                  sid=sid, slot=slot):
+                self.parking[sid] = self._pack(slot, sid)
             self._on_unbind(slot)
 
     def close(self, sid: int) -> None:
@@ -318,6 +429,7 @@ class StreamSessionService(SlotGridService):
     """Multi-tenant streaming TCN service over a fixed slot grid."""
 
     _session_cls = _Session
+    _service_name = "tcn"
 
     def __init__(self, bundle, params, bn_state=None, *, n_slots: int = 8,
                  max_tenants: int = 8, max_ways: int = 8,
@@ -325,9 +437,13 @@ class StreamSessionService(SlotGridService):
                  t_chunk: int = 16, mesh=None,
                  cost_fn: Callable[[int], float] | None = None,
                  stale_window: int = 0, fused: bool | None = None,
-                 kernel_backend: str | None = None):
+                 kernel_backend: str | None = None,
+                 metrics: MetricsRegistry | None = None, tracer=None,
+                 device_counters: bool | None = None):
         super().__init__(n_slots, t_chunk=t_chunk, max_sessions=max_sessions,
-                         cost_fn=cost_fn, stale_window=stale_window)
+                         cost_fn=cost_fn, stale_window=stale_window,
+                         metrics=metrics, tracer=tracer,
+                         device_counters=device_counters)
         cfg = bundle.cfg
         self.cfg = cfg
         self.max_ways = max_ways
@@ -380,10 +496,17 @@ class StreamSessionService(SlotGridService):
                                   jnp.repeat(tenant_ids, t))
             return tl.reshape(s, t, -1)
 
+        # device counters ride the SAME dispatch as extra outputs (one
+        # in-jit reduce of the validity mask) — the state math is the
+        # identical op graph, so instrumented and plain services stay
+        # bit-identical on session state (tests/test_obs.py asserts it)
+        dev = self.device_counters
+
         def _scan(p, bn, states, x, valid, bank, tenant_ids):
             new_states, emb, logits = grid_scan(
                 p, bn, cfg, states, x, valid, quantize=quantize)
-            return new_states, emb, logits, _banked(emb, bank, tenant_ids)
+            out = (new_states, emb, logits, _banked(emb, bank, tenant_ids))
+            return out + (valid_stats(valid),) if dev else out
 
         self._scan = jax.jit(_scan)
         if fused:
@@ -392,7 +515,10 @@ class StreamSessionService(SlotGridService):
 
             def _scan_fused(fp, states, x, lengths, bank, tenant_ids):
                 new_states, emb, logits = fused_chunk(fp, states, x, lengths)
-                return new_states, emb, logits, _banked(emb, bank, tenant_ids)
+                out = (new_states, emb, logits,
+                       _banked(emb, bank, tenant_ids))
+                return out + (occupancy_stats(lengths, x.shape[1]),) \
+                    if dev else out
 
             self._scan_fused = jax.jit(_scan_fused)
         # shot embedding for enrollment — the TCN bundle's embed_fn honours
@@ -562,20 +688,31 @@ class StreamSessionService(SlotGridService):
                 if seg.shape[0]:
                     x[slot_of[sid], :seg.shape[0]] = seg
                     tick_lens[slot_of[sid]] = seg.shape[0]
-            if self.fused:
-                self.states, emb, logits, tlogits = self._scan_fused(
-                    self._fused_params, self.states, jnp.asarray(x),
-                    jnp.asarray(tick_lens), self.bank,
-                    jnp.asarray(self.tenant_of_slot))
-            else:
-                valid = np.arange(t_pad)[None, :] < tick_lens[:, None]
-                self.states, emb, logits, tlogits = self._scan(
-                    self._params, self._bn, self.states, jnp.asarray(x),
-                    jnp.asarray(valid), self.bank,
-                    jnp.asarray(self.tenant_of_slot))
-            self.dispatches += 1
-            emb, logits, tlogits = (np.asarray(emb), np.asarray(logits),
-                                    np.asarray(tlogits))
+            shape = f"T{t_pad}"
+            dev_stats = None
+            t0 = time.perf_counter()
+            with self.tracer.span("dispatch", cat="tcn", shape=shape,
+                                  lanes=len(arrs),
+                                  fused=self.fused):
+                if self.fused:
+                    self.states, emb, logits, tlogits, *dev = \
+                        self._scan_fused(
+                            self._fused_params, self.states, jnp.asarray(x),
+                            jnp.asarray(tick_lens), self.bank,
+                            jnp.asarray(self.tenant_of_slot))
+                else:
+                    valid = np.arange(t_pad)[None, :] < tick_lens[:, None]
+                    self.states, emb, logits, tlogits, *dev = self._scan(
+                        self._params, self._bn, self.states, jnp.asarray(x),
+                        jnp.asarray(valid), self.bank,
+                        jnp.asarray(self.tenant_of_slot))
+                emb, logits, tlogits = (np.asarray(emb), np.asarray(logits),
+                                        np.asarray(tlogits))
+                if dev:
+                    dev_stats = np.asarray(dev[0])
+            self._record_dispatch(time.perf_counter() - t0, shape)
+            if dev_stats is not None:
+                self._ingest_occupancy(dev_stats)
             for sid in arrs:
                 n = min(max(lens[sid] - off, 0), t_pad)
                 if n:

@@ -55,9 +55,13 @@ when speculation should win).
 
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.device import acceptance_stats
 
 # ---------------------------------------------------------------------------
 # Drafters
@@ -269,6 +273,51 @@ class SpeculativeDecoder:
         self.drafted = 0       # draft tokens submitted for verification
         self.accepted = 0      # draft tokens accepted
         self.accepts: dict[int, int] = {}  # per-session accepted counts
+        # telemetry: draft economics report through the SERVICE's registry
+        # (one surface per grid), labeled by verify mode
+        reg = service.metrics_registry
+        self._c_drafted = reg.counter("spec_drafted_total", service="lm",
+                                      verify=verify)
+        self._c_accepted = reg.counter("spec_accepted_total", service="lm",
+                                       verify=verify)
+        # device-side acceptance twin: the verify program additionally
+        # returns each lane's matching-prefix length, computed in-jit from
+        # outputs it already materializes (obs.device.acceptance_stats).
+        # Same state math; tests pin it against the host rollback
+        # arithmetic bit-for-bit.
+        self._verify_inst = None
+        self.last_device_accepts = None  # (S,) of the latest dispatch
+        if service.device_counters:
+            self._verify_inst = self._build_instrumented()
+
+    def _build_instrumented(self):
+        """Jitted verify twin returning (cache, ys, per-lane accepted)."""
+        svc = self.svc
+        if self.verify == "parallel":
+            raw = make_verify_chunk(svc.bundle.step_fn, svc._batch_axes)
+
+            def inst(params, cache, toks, pos, active, n_draft):
+                cache, ys = raw(params, cache, toks, pos, active)
+                return cache, ys, acceptance_stats(ys, toks[:, 1:], n_draft)
+
+            return jax.jit(inst)
+        if svc.parallel_safe:
+            raw = svc._decode_scan_raw
+
+            def inst(params, cache, tok, pos, inp, n_inp, n_steps, n_draft):
+                cache, _, _, ys = raw(params, cache, tok, pos, inp, n_inp,
+                                      n_steps)
+                return cache, ys, acceptance_stats(ys, inp[:, 1:], n_draft)
+
+            return jax.jit(inst)
+        raw = make_verify_scan(svc.bundle.decode_fn, svc._batch_axes,
+                               svc._seq_axes)
+
+        def inst(params, cache, tok, pos, draft, n_draft, active):
+            cache, ys = raw(params, cache, tok, pos, draft, n_draft, active)
+            return cache, ys, acceptance_stats(ys, draft, n_draft)
+
+        return jax.jit(inst)
 
     # -- introspection ------------------------------------------------------
     @property
@@ -283,33 +332,71 @@ class SpeculativeDecoder:
 
     # -- dispatch plumbing --------------------------------------------------
     def _dispatch(self, tok, pos, draft, n_draft, n_steps):
-        """One batched verify over the grid.  Returns ys (S, K+1)."""
+        """One batched verify over the grid.  Returns ys (S, K+1).
+
+        With device counters enabled on the service, the instrumented
+        verify twin also returns per-lane accepted counts computed in-jit
+        (``last_device_accepts``); the state math is identical either way."""
         svc = self.svc
-        if self.verify == "parallel":
-            toks = np.concatenate([tok[:, None], draft], axis=1)
-            # inactive lanes are value-masked, but their (K+1)-row write
-            # must still land in bounds or the update would clamp-shift
-            active = n_steps > 0
-            pos = np.minimum(pos, svc.seq_cap - self.k - 1).astype(np.int32)
-            svc.cache, ys = self._verify_chunk(
-                svc._params, svc.cache, jnp.asarray(toks), jnp.asarray(pos),
-                jnp.asarray(active))
-        elif svc.parallel_safe:
-            # pure-KV exact mode: the service's own decode_scan, drafts as
-            # forced tokens.  Steps past a mismatch feed the (wrong) draft
-            # and write rows past the accepted position — dead by position,
-            # exactly like decode_scan's masked steps.
-            inp = np.concatenate([tok[:, None], draft], axis=1)
-            svc.cache, _, _, ys = svc._decode_scan(
-                svc._params, svc.cache, jnp.asarray(tok), jnp.asarray(pos),
-                jnp.asarray(inp), jnp.asarray(n_steps), jnp.asarray(n_steps))
-        else:
-            svc.cache, ys = self._verify_scan(
-                svc._params, svc.cache, jnp.asarray(tok), jnp.asarray(pos),
-                jnp.asarray(draft), jnp.asarray(n_draft),
-                jnp.asarray(n_steps > 0))
-        svc.dispatches += 1
-        return np.asarray(ys)
+        inst = self._verify_inst
+        shape = f"V{self.k + 1}"
+        acc = None
+        t0 = time.perf_counter()
+        with svc.tracer.span("verify", cat="spec", shape=shape,
+                             mode=self.verify,
+                             lanes=int((n_steps > 0).sum())):
+            if self.verify == "parallel":
+                toks = np.concatenate([tok[:, None], draft], axis=1)
+                # inactive lanes are value-masked, but their (K+1)-row write
+                # must still land in bounds or the update would clamp-shift
+                active = n_steps > 0
+                pos = np.minimum(pos, svc.seq_cap - self.k - 1) \
+                    .astype(np.int32)
+                if inst is not None:
+                    svc.cache, ys, acc = inst(
+                        svc._params, svc.cache, jnp.asarray(toks),
+                        jnp.asarray(pos), jnp.asarray(active),
+                        jnp.asarray(n_draft))
+                else:
+                    svc.cache, ys = self._verify_chunk(
+                        svc._params, svc.cache, jnp.asarray(toks),
+                        jnp.asarray(pos), jnp.asarray(active))
+            elif svc.parallel_safe:
+                # pure-KV exact mode: the service's own decode_scan, drafts
+                # as forced tokens.  Steps past a mismatch feed the (wrong)
+                # draft and write rows past the accepted position — dead by
+                # position, exactly like decode_scan's masked steps.
+                inp = np.concatenate([tok[:, None], draft], axis=1)
+                if inst is not None:
+                    svc.cache, ys, acc = inst(
+                        svc._params, svc.cache, jnp.asarray(tok),
+                        jnp.asarray(pos), jnp.asarray(inp),
+                        jnp.asarray(n_steps), jnp.asarray(n_steps),
+                        jnp.asarray(n_draft))
+                else:
+                    svc.cache, _, _, ys = svc._decode_scan(
+                        svc._params, svc.cache, jnp.asarray(tok),
+                        jnp.asarray(pos), jnp.asarray(inp),
+                        jnp.asarray(n_steps), jnp.asarray(n_steps))
+            else:
+                if inst is not None:
+                    svc.cache, ys, acc = inst(
+                        svc._params, svc.cache, jnp.asarray(tok),
+                        jnp.asarray(pos), jnp.asarray(draft),
+                        jnp.asarray(n_draft), jnp.asarray(n_steps > 0))
+                else:
+                    svc.cache, ys = self._verify_scan(
+                        svc._params, svc.cache, jnp.asarray(tok),
+                        jnp.asarray(pos), jnp.asarray(draft),
+                        jnp.asarray(n_draft), jnp.asarray(n_steps > 0))
+            ys = np.asarray(ys)
+        svc._record_dispatch(time.perf_counter() - t0, shape)
+        if acc is not None:
+            self.last_device_accepts = np.asarray(acc)
+            svc.metrics_registry.counter(
+                "spec_device_accepted_total", service="lm").inc(
+                    int(self.last_device_accepts.sum()))
+        return ys
 
     # -- the speculative hot path -------------------------------------------
     def decode(self, want: dict[int, int]) -> dict[int, list[int]]:
@@ -404,6 +491,8 @@ class SpeculativeDecoder:
                 emitted = [int(t) for t in ys[s, :m + 1]]
                 self.drafted += nd
                 self.accepted += m
+                self._c_drafted.inc(nd)
+                self._c_accepted.inc(m)
                 self.accepts[sid] = self.accepts.get(sid, 0) + m
                 svc.outputs[sid].extend(emitted)
                 out[sid].extend(emitted)

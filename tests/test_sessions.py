@@ -439,6 +439,69 @@ def test_service_cost_aware_eviction():
     assert svc.poll(a)["state"] == "active"
 
 
+def test_scheduler_finite_stale_window_bounds_the_pool():
+    """With a FINITE window > 0, only candidates within ``stale_window``
+    clock ticks of the oldest are cost-arbitrated; a cheaper victim that
+    is too fresh stays bound (the pool/min-cost path of bind())."""
+    costs = {1: 50, 2: 5, 3: 1}
+    sched = SlotScheduler(3, cost_fn=costs.get, stale_window=2)
+    for sid in (1, 2, 3):
+        sched.admit(sid)
+        sched.bind(sid)
+    # clocks after admit+bind: lu = {1: 1, 2: 2, 3: 3}; refresh 2 and 3
+    sched.touch(2)  # lu 2 -> 4
+    sched.touch(3)  # lu 3 -> 5
+    sched.admit(4)
+    # oldest = lu(1) = 1; pool = {1} (2 and 3 are > 2 ticks fresher), so
+    # the expensive-but-stale 1 is evicted despite 3's far cheaper park
+    _, evicted = sched.bind(4)
+    assert evicted == 1
+
+    # a wider window re-admits 2 to the pool and cost wins over staleness
+    costs = {1: 50, 2: 5, 3: 1}
+    sched = SlotScheduler(3, cost_fn=costs.get, stale_window=4)
+    for sid in (1, 2, 3):
+        sched.admit(sid)
+        sched.bind(sid)
+    sched.touch(2)  # lu = {1: 1, 2: 4, 3: 3}: pool = {1, 2, 3} minus none
+    sched.touch(3)  # lu 3 -> 5: pool = {1 (0), 2 (3), 3 (4)} all <= 4
+    sched.admit(4)
+    _, evicted = sched.bind(4)
+    assert evicted == 3  # cheapest in pool
+
+
+def test_scheduler_cost_tie_breaks_by_staleness():
+    """Equal park costs inside the pool fall back to LRU order — the
+    (cost, last_used) secondary key."""
+    sched = SlotScheduler(3, cost_fn=lambda sid: 7, stale_window=1 << 30)
+    for sid in (1, 2, 3):
+        sched.admit(sid)
+        sched.bind(sid)
+    sched.touch(1)  # 2 is now the least-recently-touched
+    sched.admit(4)
+    _, evicted = sched.bind(4)
+    assert evicted == 2
+
+
+def test_service_finite_stale_window_excludes_fresh_cheap_victim():
+    """Service-level: the cheap session is outside the staleness window
+    (recently pushed), so the expensive-but-stale one is parked."""
+    cfg, bundle, params, bn = _setup()
+    costs = {}
+    svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1,
+                               cost_fn=lambda sid: costs.get(sid, 0),
+                               stale_window=1)
+    a = svc.open_session()
+    b = svc.open_session()
+    costs[a], costs[b] = 1, 100  # a is far cheaper to park...
+    x = np.zeros(cfg.tcn_in_channels, np.float32)
+    for _ in range(3):  # ...but pushing keeps it fresh, outside the window
+        svc.push_audio({a: x})
+    svc.open_session()
+    assert svc.poll(b)["state"] == "parked"
+    assert svc.poll(a)["state"] == "active"
+
+
 # ---------------------------------------------------------------------------
 # packed-nibble parking (quantized service)
 # ---------------------------------------------------------------------------
