@@ -17,6 +17,13 @@ Gates (CI fails the job instead of merely uploading the artifact):
     a 2x growth of that ratio means pack/unpack genuinely got heavier;
   * parked-state bytes — within 2x of baseline (structural, exact on the
     TCN side; O(pos) at the bench's fixed position on the LM side);
+  * paged capacity contract — the lm section must carry a "capacity"
+    subsection (the paged slot-memory bench), and on it: >= 8x resident
+    sessions vs the dense control at equal device cache bytes, admission
+    p99 >= 5x lower than dense (O(1) host table setup vs O(seq_cap)
+    device scrub), and the in-bench paged==dense bit-identity flag True.
+    These are absolute floors of the fresh run — no baseline needed —
+    so a stale artifact or a silently-skipped section fails CI;
   * kernel fused fast path (--kernels BENCH_kernels.json) — the fused
     chunk executor must be >= 1.2x the unfused scan on CPU at
     T_chunk=160 for BOTH the fp32 and quantized sweeps, with the bench's
@@ -48,6 +55,8 @@ import sys
 TCN_MIN_SPEEDUP = 5.0
 LM_MIN_SPEEDUP = 3.0
 SPEC_MIN_SPEEDUP = 1.3  # speculative K=4 self-draft vs plain decode
+CAP_MIN_RATIO = 8.0  # paged resident sessions vs dense at equal bytes
+ADMIT_P99_MIN_RATIO = 5.0  # dense admission p99 / paged admission p99
 KERNEL_MIN_SPEEDUP = 1.2  # fused vs unfused chunk scan, CPU floor
 # degradation guard vs the committed baseline; wide enough to absorb
 # shared-runner timing noise (observed ~2x swing under container load) —
@@ -155,6 +164,33 @@ def check(fresh: dict, base: dict) -> list[str]:
             f"lm chunk speedup {s:.2f}x < {LM_MIN_SPEEDUP}x (16 vs 1)",
         )
         errors += check_latency("lm", lm)
+        cap = lm.get("capacity")
+        if not cap:
+            # hard error, not a skip: the paged-capacity contract is part
+            # of the lm bench schema — a missing section means the sweep
+            # silently didn't run (or the artifact is stale)
+            errors.append("lm: capacity section missing from fresh run "
+                          "(paged slot-memory sweep did not run?)")
+        else:
+            r = cap.get("capacity_ratio", 0.0)
+            gate(
+                r >= CAP_MIN_RATIO,
+                f"lm paged capacity {r:.1f}x < {CAP_MIN_RATIO}x resident "
+                f"sessions vs dense at equal bytes "
+                f"(paged={cap.get('paged', {}).get('resident_sessions')}, "
+                f"dense={cap.get('dense', {}).get('resident_sessions')})",
+            )
+            a = cap.get("admission_p99_ratio", 0.0)
+            gate(
+                a >= ADMIT_P99_MIN_RATIO,
+                f"lm paged admission p99 only {a:.1f}x lower than dense "
+                f"(< {ADMIT_P99_MIN_RATIO}x; O(1) admission regressed?)",
+            )
+            gate(
+                bool(cap.get("bit_identical")),
+                "lm paged capacity bench: paged decode not bit-identical "
+                "to dense under churn",
+            )
         spec = lm.get("speculative")
         if not spec:
             skipped.append("lm: speculative sweep missing from fresh run")
@@ -261,6 +297,14 @@ def main():
         nc = _norm_cost(f)
         cost = nc if nc is None else round(nc, 2)
         print(f"[gate] {name}: speedup={speedup} norm_park_resume={cost}")
+    cap = fresh.get("lm", {}).get("capacity")
+    if cap:
+        print(
+            f"[gate] lm capacity: {round(cap.get('capacity_ratio', 0), 1)}x "
+            f"resident, admission p99 "
+            f"{round(cap.get('admission_p99_ratio', 0), 1)}x lower, "
+            f"bit_identical={cap.get('bit_identical')}",
+        )
     spec = fresh.get("lm", {}).get("speculative")
     if spec:
         print(

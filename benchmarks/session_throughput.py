@@ -30,6 +30,15 @@ LM sessions (--service lm):
     amortizes the per-step MATH (K+1 positions per weight pass), so the
     model must be large enough that per-step math — not dispatch — is
     the wall being attacked.  check_regression gates the speedup >=1.3x.
+  * paged capacity (``--capacity`` reruns just this section): a paged
+    grid (sessions/paging.py block pool) vs a dense grid holding the
+    SAME device cache bytes, fed heavy-tailed session lengths — resident
+    sessions admitted before back-pressure (gated >= 8x dense), and
+    admission p50/p99 over open/close cycles (dense admission scrubs a
+    seq_cap column on device, paged admission is a host table write;
+    p99 gated >= 5x lower).  The paged grid's token streams are asserted
+    bit-identical to the dense grid's under slot churn in the same run,
+    so the capacity win can never come from a decode divergence.
 
 Emits ``BENCH_session_throughput.json`` ({"tcn": ..., "lm": ...}) next to
 the cwd; CI compares it against the committed baseline with
@@ -47,7 +56,7 @@ the p99/p50 tail ratio.  Set ``REPRO_TRACE=trace.json`` to additionally
 capture a Perfetto-loadable span trace of the whole run.
 
     PYTHONPATH=src python -m benchmarks.session_throughput \\
-        [--smoke] [--service {tcn,lm,both}] [--speculative K]
+        [--smoke] [--service {tcn,lm,both}] [--speculative K] [--capacity]
 """
 
 import argparse
@@ -65,6 +74,7 @@ from repro.models import build_bundle
 from repro.models.tcn import tcn_empty_state
 from repro.obs.metrics import Histogram, default_registry
 from repro.sessions import (
+    AdmissionError,
     LMSessionService,
     SpeculativeDecoder,
     StreamSessionService,
@@ -388,6 +398,7 @@ def run_lm(smoke: bool = False, speculative_k: int = 4):
         "parked_blob_bytes": blob,
         "park_us": park_us, "resume_us": resume_us,
         "speculative": run_lm_speculative(smoke=smoke, k=speculative_k),
+        "capacity": run_lm_capacity(smoke=smoke),
     }
 
 
@@ -444,6 +455,131 @@ def run_lm_speculative(smoke: bool = False, k: int = 4):
     }
 
 
+def run_lm_capacity(smoke: bool = False):
+    """Paged vs dense resident capacity at EQUAL device cache bytes, plus
+    admission latency (the O(1) admission claim) and in-bench bit-identity.
+
+    The dense control reserves a full seq_cap column per slot, so its
+    resident ceiling is its slot count.  The paged grid backs 16x the
+    slots with a block pool holding the SAME bytes (dense_slots *
+    seq_cap positions + one NULL block); heavy-tailed session lengths —
+    most prompts fit one block, a long tail takes several — let it bind
+    many more live sessions before the pool pushes back.  Admission is
+    measured over open/close cycles of 1-token prompts (no prefill on
+    either path): dense admission scrubs the slot's cache column with
+    per-leaf device writes, paged admission zeroes a host int32 table
+    row.  Both ratios are gated by check_regression; the bit-identity
+    flag is asserted here (paged streams == dense streams under slot
+    churn), so a capacity win can never ride on a decode divergence."""
+    block_len, seq_cap, dense_slots = 8, 128, 4
+    n_blocks = dense_slots * (seq_cap // block_len)   # equal cache bytes
+    paged_slots = dense_slots * 16
+    cfg = get_config("olmo-1b").smoke().replace(
+        n_layers=2, d_model=16, d_ff=32, vocab_size=32, head_dim=8)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    # heavy-tailed session lengths: mostly one-block prompts, every 9th
+    # is a 5-block long-form session (the mix paging exists to serve)
+    n_cand = 2 * paged_slots
+    lens = rng.integers(3, 8, size=n_cand)
+    lens[::9] = 41
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in lens]
+
+    def svc_pair():
+        dense = LMSessionService(
+            bundle, params, n_slots=dense_slots, seq_cap=seq_cap,
+            t_chunk=8, max_sessions=dense_slots, metrics=default_registry())
+        paged = LMSessionService(
+            bundle, params, n_slots=paged_slots, seq_cap=seq_cap,
+            t_chunk=8, max_sessions=paged_slots, paged=True,
+            block_len=block_len, n_blocks=n_blocks, prefix_cache=False,
+            metrics=default_registry())
+        return dense, paged
+
+    def cache_bytes(svc):
+        return int(sum(np.asarray(a).nbytes
+                       for a in jax.tree.leaves(svc.cache)))
+
+    def admit_until_backpressure(svc):
+        opened = []
+        try:
+            for p in prompts:
+                opened.append(svc.open_session(p))
+        except AdmissionError:
+            pass
+        else:
+            raise AssertionError("candidate pool never hit back-pressure")
+        return opened
+
+    def admission_cycles(svc, reps=100):
+        tok = np.array([1], np.int32)
+        for _ in range(3):  # warm the eager scrub ops / host paths
+            svc.close(svc.open_session(tok))
+        lat = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            sid = svc.open_session(tok)
+            jax.block_until_ready(jax.tree.leaves(svc.cache))
+            lat.append((time.perf_counter() - t0) * 1e6)
+            svc.close(sid)
+        lat = np.asarray(lat)
+        return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+    dense, paged = svc_pair()
+    out = {}
+    for name, svc in (("dense", dense), ("paged", paged)):
+        opened = admit_until_backpressure(svc)
+        resident = len(opened)
+        for sid in opened:
+            svc.close(sid)
+        p50, p99 = admission_cycles(svc)
+        out[name] = {"n_slots": svc.n_slots, "seq_cap": seq_cap,
+                     "resident_sessions": resident,
+                     "cache_bytes": cache_bytes(svc),
+                     "admit_p50_us": p50, "admit_p99_us": p99}
+        emit(f"lm/capacity_{name}", p50,
+             f"{resident} resident sessions in {cache_bytes(svc)}B "
+             f"admit p50={p50:.0f}us p99={p99:.0f}us")
+    out["paged"].update(block_len=block_len, n_blocks=n_blocks)
+    if paged.paged:
+        paged.pool.check()  # nothing leaked across the admission storm
+
+    # -- paged == dense bit-identity under slot churn (same run) ------------
+    bi_prompts = [rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+                  for _ in range(4)]
+
+    def churn_streams(**kw):
+        svc = LMSessionService(bundle, params, n_slots=2, seq_cap=seq_cap,
+                               t_chunk=8, max_sessions=8,
+                               metrics=default_registry(), **kw)
+        sids = [svc.open_session(p) for p in bi_prompts]
+        streams = {s: [] for s in sids}
+        for _ in range(3):  # pairs alternate slots: every round churns
+            for i in (0, 2):
+                got = svc.decode({sids[i]: 5, sids[i + 1]: 5})
+                for s, toks in got.items():
+                    streams[s] += toks
+        return list(streams.values())
+
+    identical = churn_streams() == churn_streams(paged=True,
+                                                 block_len=block_len)
+    assert identical, "paged decode diverged from dense under churn"
+
+    ratio = out["paged"]["resident_sessions"] / out["dense"]["resident_sessions"]
+    p99_ratio = out["dense"]["admit_p99_us"] / out["paged"]["admit_p99_us"]
+    out.update(capacity_ratio=ratio, admission_p99_ratio=p99_ratio,
+               admission_p50_ratio=(out["dense"]["admit_p50_us"]
+                                    / out["paged"]["admit_p50_us"]),
+               bit_identical=identical, smoke=smoke)
+    emit("lm/capacity_ratio", 0.0,
+         f"{ratio:.1f}x resident at equal bytes, admission p99 "
+         f"{p99_ratio:.1f}x lower, bit_identical={identical}")
+    return out
+
+
 def run(smoke: bool = False):
     """benchmarks/run.py harness entry: both services + the JSON artifact."""
     _write_out({"tcn": run_tcn(smoke=smoke), "lm": run_lm(smoke=smoke)})
@@ -481,14 +617,25 @@ def main():
                     default="both")
     ap.add_argument("--speculative", type=int, default=4, metavar="K",
                     help="draft length for the lm speculative sweep")
+    ap.add_argument("--capacity", action="store_true",
+                    help="rerun ONLY the paged-capacity section and merge "
+                         "it into the existing lm subtree")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     sections = {}
-    if args.service in ("tcn", "both"):
-        sections["tcn"] = run_tcn(smoke=args.smoke)
-    if args.service in ("lm", "both"):
-        sections["lm"] = run_lm(smoke=args.smoke,
-                                speculative_k=args.speculative)
+    if args.capacity:
+        prev = {}
+        if os.path.exists(OUT_PATH):
+            with open(OUT_PATH) as f:
+                prev = json.load(f).get("lm", {})
+        sections["lm"] = {**prev,
+                          "capacity": run_lm_capacity(smoke=args.smoke)}
+    else:
+        if args.service in ("tcn", "both"):
+            sections["tcn"] = run_tcn(smoke=args.smoke)
+        if args.service in ("lm", "both"):
+            sections["lm"] = run_lm(smoke=args.smoke,
+                                    speculative_k=args.speculative)
     _write_out(sections)
 
 

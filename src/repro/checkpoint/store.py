@@ -184,8 +184,18 @@ def _flatten_parking(parking: dict) -> dict:
 
 
 def save_sessions(path: str, parking: dict, meta: dict | None = None) -> str:
-    """Atomically spill a session parking lot (+ optional metadata) to disk."""
+    """Atomically spill a session parking lot (+ optional metadata) to disk.
+
+    Every sid must contribute at least one array — a blob that flattens to
+    nothing would silently vanish from the npz and the restore would drop
+    the session instead of refusing.  (Paged LM blobs always carry their
+    "pv" geometry marker, so even a zero-block session round-trips.)"""
     flat = _flatten_parking(parking)
+    seen = {key.split("/", 1)[0] for key in flat}
+    empty = [sid for sid in parking if str(int(sid)) not in seen]
+    if empty:
+        raise ValueError(f"session blobs with no arrays cannot round-trip "
+                         f"through npz: sids {sorted(empty)}")
     def needs_sidecar(dt: np.dtype) -> bool:
         try:  # native dtypes round-trip by name; ml_dtypes ones do not
             return np.dtype(dt.name) != dt

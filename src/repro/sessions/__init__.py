@@ -14,19 +14,32 @@ state + many more sessions than compiled slots) for BOTH serving paths:
                    chunked prefill (multi-token cached steps)
   * spec.py      — speculative decoding: pluggable drafters + draft-verify
                    dispatches (exact forced-token scan / parallel chunk)
+  * paging.py    — paged slot memory: block-pool allocator, CoW refcounts,
+                   exact-prefix block registry (LMSessionService paged=True)
 """
 
 from repro.sessions.lm import (
     LMSessionService,
     make_decode_scan,
+    make_decode_scan_paged,
     make_prefill_column,
+    make_prefill_paged,
     pow2_chunks,
+)
+from repro.sessions.paging import (
+    NULL_BLOCK,
+    BlockPool,
+    PoolExhausted,
+    PrefixCache,
+    prefix_keys,
 )
 from repro.sessions.scheduler import AdmissionError, CapacityError, SlotScheduler
 from repro.sessions.spec import (
     SpeculativeDecoder,
     make_verify_chunk,
+    make_verify_chunk_paged,
     make_verify_scan,
+    make_verify_scan_paged,
     ngram_drafter,
 )
 from repro.sessions.service import (
@@ -38,6 +51,7 @@ from repro.sessions.service import (
 from repro.sessions.state import (
     column_pspecs,
     decode_parked,
+    gather_column,
     grid_init,
     grid_pspecs,
     grid_scan,
@@ -45,12 +59,16 @@ from repro.sessions.state import (
     leaf_axes,
     lengths_to_valid,
     make_grid_fused,
+    make_pools,
+    pack_blocks,
     pack_column,
     pack_slot,
     parked_bytes,
     reset_slot,
     slot_park_bytes,
     slot_state_bytes,
+    split_blocks,
+    unpack_blocks,
     unpack_column,
     unpack_slot,
     zero_from_column,
@@ -72,16 +90,18 @@ from repro.sessions.tenancy import (
 __all__ = [
     "AdmissionError", "CapacityError", "SlotScheduler",
     "NO_TENANT", "SessionRecord", "SlotGridService", "StreamSessionService",
-    "LMSessionService", "make_decode_scan", "make_prefill_column",
-    "pow2_chunks",
-    "SpeculativeDecoder", "make_verify_chunk", "make_verify_scan",
-    "ngram_drafter",
-    "column_pspecs", "decode_parked", "grid_init", "grid_pspecs",
-    "grid_scan", "grid_step",
-    "leaf_axes", "lengths_to_valid", "make_grid_fused", "pack_column",
-    "pack_slot",
+    "LMSessionService", "make_decode_scan", "make_decode_scan_paged",
+    "make_prefill_column", "make_prefill_paged", "pow2_chunks",
+    "NULL_BLOCK", "BlockPool", "PoolExhausted", "PrefixCache", "prefix_keys",
+    "SpeculativeDecoder", "make_verify_chunk", "make_verify_chunk_paged",
+    "make_verify_scan", "make_verify_scan_paged", "ngram_drafter",
+    "column_pspecs", "decode_parked", "gather_column", "grid_init",
+    "grid_pspecs", "grid_scan", "grid_step",
+    "leaf_axes", "lengths_to_valid", "make_grid_fused", "make_pools",
+    "pack_blocks", "pack_column", "pack_slot",
     "parked_bytes", "reset_slot", "slot_park_bytes", "slot_state_bytes",
-    "unpack_column", "unpack_slot", "zero_from_column",
+    "split_blocks", "unpack_blocks", "unpack_column", "unpack_slot",
+    "zero_from_column",
     "TenantBank", "bank_add_class", "bank_clear_tenant", "bank_fc",
     "bank_init", "bank_pack_tenant", "bank_pspecs", "bank_row_bytes",
     "bank_store", "bank_unpack_tenant", "bank_update_class",

@@ -48,6 +48,7 @@ replicated, and placement survives decode dispatches
 
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 
@@ -56,11 +57,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs.device import occupancy_stats
+from repro.sessions.paging import BlockPool, PoolExhausted, PrefixCache, prefix_keys
 from repro.sessions.service import SessionRecord, SlotGridService
 from repro.sessions.state import (
+    PAGED_MARKER,
     column_pspecs,
+    copy_block,
+    gather_column,
     leaf_axes,
+    make_pools,
+    pack_blocks,
     pack_column,
+    paged_flags,
+    split_blocks,
+    unpack_blocks,
     unpack_column,
 )
 
@@ -148,6 +158,86 @@ def make_decode_scan(decode_fn, batch_axes, seq_axes=None):
     return scan
 
 
+def make_decode_scan_paged(decode_fn, batch_axes, seq_axes, block_len):
+    """Paged twin of ``make_decode_scan``: the same scan, reading the
+    cache through per-lane block tables.
+
+    The signature gains the tables: ``scan(params, cache, tables, tok,
+    pos, inp, n_inp, n_steps)`` with ``tables`` (S, max_blocks) int32.
+    Every seq-axis leaf of ``cache`` is a shared
+    ``(..., n_blocks + 1, block_len, ...)`` pool (state.make_pools);
+    recurrent leaves keep their dense per-lane layout and the dense
+    scan's value-masking discipline unchanged.
+
+    Bit-identity contract: each lane gathers its table row into the EXACT
+    dense column (state.gather_column) and runs the *same* ``decode_fn``
+    graph on it, then writes back only the one block containing the
+    step's row.  A masked lane's write lands in its own frozen-position
+    block — or, for free/retired lanes whose table rows are cleared, in
+    the reserved NULL block 0 — so no step can touch bytes another
+    session or the prefix registry still reads: shared blocks are cloned
+    by the service BEFORE they enter a lane's write range (copy-on-
+    write), and rows past a lane's kv_len are masked to -inf inside the
+    attention itself — exactly the discipline that already makes stale
+    dense rows (e.g. rejected speculative suffixes) unobservable."""
+
+    recurrent = jax.tree.map(lambda sax: sax < 0, seq_axes)
+    pooled = jax.tree.map(lambda sax: sax >= 0, seq_axes)
+    # pool leaves broadcast whole into every lane (shared memory); dense
+    # leaves still slice their per-lane column
+    col_axes = jax.tree.map(
+        lambda bax, pg: None if pg else bax, batch_axes, pooled)
+
+    def scan(params, cache, tables, tok, pos, inp, n_inp, n_steps):
+        def body(carry, xs):
+            cache, tok, pos = carry
+            inp_t, j = xs
+
+            def lane(cs, row, tk, ps, it, ni, ns):
+                col = jax.tree.map(
+                    lambda a, bax, pg: gather_column(a, row, bax) if pg else a,
+                    cs, batch_axes, pooled)
+                c = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
+                                 col, batch_axes)
+                t = jnp.where(j < ni, it, tk)
+                logits, c2 = decode_fn(params, c,
+                                       {"tokens": t[None, None], "pos": ps})
+                c2 = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax),
+                                  c2, batch_axes)
+                y = jnp.argmax(logits[0], -1).astype(jnp.int32)
+                v = j < ns
+                keep = lambda n, o: jnp.where(v, n, o)
+                c2 = jax.tree.map(
+                    lambda new, old, rec: keep(new, old) if rec else new,
+                    c2, col, recurrent)
+                # write back ONLY the block holding this step's row; the
+                # rest of the gathered column is untouched pool bytes
+                b = ps // block_len
+                upd = jax.tree.map(
+                    lambda a, bax, pg: jax.lax.dynamic_slice_in_dim(
+                        a, b * block_len, block_len, axis=bax) if pg else a,
+                    c2, batch_axes, pooled)
+                return upd, row[b], keep(y, tk), keep(ps + 1, ps), y
+
+            upd, pb, tok, pos, y = jax.vmap(
+                lane, in_axes=(col_axes, 0, 0, 0, 0, 0, 0),
+                out_axes=(batch_axes, 0, 0, 0, 0))(
+                    cache, tables, tok, pos, inp_t, n_inp, n_steps)
+            cache = jax.tree.map(
+                lambda a, u, bax, pg:
+                    a.at[(slice(None),) * bax + (pb,)].set(u) if pg else u,
+                cache, upd, batch_axes, pooled)
+            return (cache, tok, pos), y
+
+        T = inp.shape[1]
+        (cache, tok, pos), ys = jax.lax.scan(
+            body, (cache, tok, pos),
+            (jnp.moveaxis(inp, 1, 0), jnp.arange(T, dtype=jnp.int32)))
+        return cache, tok, pos, jnp.moveaxis(ys, 0, 1)
+
+    return scan
+
+
 def make_prefill_column(step_fn, batch_axes):
     """Build the true chunked-prefill step: one session's cache column is
     sliced out of the grid, advanced by a whole (1, S) prompt chunk through
@@ -175,6 +265,36 @@ def make_prefill_column(step_fn, batch_axes):
             lambda a, c, ax: jax.lax.dynamic_update_slice_in_dim(
                 a, c.astype(a.dtype), slot, ax),
             cache, col, batch_axes)
+
+    return prefill
+
+
+def make_prefill_paged(step_fn, batch_axes, block_len):
+    """Paged twin of ``make_prefill_column``: the lane's column is
+    gathered through its block-table ``row``, advanced by the SAME
+    multi-token cached ``step_fn``, and scattered back block-wise over
+    the whole row.  Blocks the lane does not own map to the reserved
+    NULL block, which absorbs their (never-read) writes; shared prefix
+    blocks receive their own bytes back bit-identically (the chunk
+    program only rewrites rows [pos, pos+S) and passes every other row
+    through).  Only built for fully position-indexed bundles — the same
+    ``parallel_safe`` gate as chunked prefill itself.
+
+    Returns ``prefill(params, cache, row (max_blocks,) i32, tokens
+    (1, S), pos) -> cache``."""
+
+    def prefill(params, cache, row, tokens, pos):
+        col = jax.tree.map(
+            lambda a, bax: jnp.expand_dims(gather_column(a, row, bax), bax),
+            cache, batch_axes)
+        _, col = step_fn(params, col, {"tokens": tokens, "pos": pos})
+
+        def put(a, c, bax):
+            blk = split_blocks(jnp.squeeze(c.astype(a.dtype), bax),
+                               bax, block_len)
+            return a.at[(slice(None),) * bax + (row,)].set(blk)
+
+        return jax.tree.map(put, cache, col, batch_axes)
 
     return prefill
 
@@ -223,7 +343,9 @@ class LMSessionService(SlotGridService):
                  max_sessions: int | None = None, prefill_chunk: int = 64,
                  mesh=None, cost_fn=None, stale_window: int = 0,
                  metrics=None, tracer=None,
-                 device_counters: bool | None = None):
+                 device_counters: bool | None = None,
+                 paged: bool | None = None, block_len: int = 16,
+                 n_blocks: int | None = None, prefix_cache: bool = True):
         if cost_fn is None:
             cost_fn = self._park_cost  # O(pos) bytes: cost-aware by default
         super().__init__(n_slots, t_chunk=t_chunk, max_sessions=max_sessions,
@@ -233,7 +355,6 @@ class LMSessionService(SlotGridService):
         self.bundle = bundle
         self.seq_cap = int(seq_cap)
         self._params = params
-        self.cache = bundle.empty_cache(n_slots, seq_cap)
         # per-leaf session/sequence axes by eval_shape diffing — never by
         # matching concrete extents that might coincide with n_slots
         self._batch_axes = leaf_axes(
@@ -246,6 +367,59 @@ class LMSessionService(SlotGridService):
             if ax < 0:
                 raise ValueError("cache has a leaf without a per-session "
                                  "axis; cannot virtualize slots")
+        # true chunked prefill: only where EVERY cache leaf is
+        # position-indexed (a seq axis to write rows into).  Recurrent
+        # leaves (RWKV wkv state, Mamba conv/ssm state) advance by value
+        # through a reassociated chunk recurrence — not bit-identical to
+        # per-token stepping — so those families keep the forced-token
+        # scan prefill (still dispatch-amortized by t_chunk).
+        self.parallel_safe = all(
+            sax >= 0 for sax in jax.tree.leaves(self._seq_axes))
+        # paged slot memory: seq-axis leaves become shared block pools
+        # read through per-lane int32 block tables (ROADMAP: the capacity
+        # lever).  Bundles with no seq-axis leaf at all (pure recurrent —
+        # RWKV) have nothing to page and silently stay dense.
+        if paged is None:
+            paged = os.environ.get(
+                "REPRO_PAGED", "0").strip().lower() in ("1", "true", "yes")
+        self.paged = bool(paged) and any(
+            sax >= 0 for sax in jax.tree.leaves(self._seq_axes))
+        self.block_len = int(block_len)
+        if self.paged and mesh is not None:
+            raise ValueError("paged=True does not compose with mesh= "
+                             "sharding yet; use the dense layout on meshes")
+        if self.paged and self.seq_cap % self.block_len:
+            raise ValueError(f"seq_cap={self.seq_cap} must be a multiple "
+                             f"of block_len={self.block_len}")
+        self.cache = bundle.empty_cache(n_slots, seq_cap)
+        if self.paged:
+            self.max_blocks = self.seq_cap // self.block_len
+            # default pool = the dense layout's byte budget (n_slots full
+            # columns); heavy-tailed real lengths then fit many times more
+            # resident sessions in the same bytes (the capacity bench)
+            self.pool = BlockPool(int(n_blocks) if n_blocks is not None
+                                  else n_slots * self.max_blocks)
+            self._paged_flags = paged_flags(self._batch_axes, self._seq_axes)
+            self._all_paged = all(jax.tree.leaves(self._paged_flags))
+            self.cache = make_pools(self.cache, self._batch_axes,
+                                    self._seq_axes, self.pool.extent,
+                                    self.block_len)
+            self._table = np.zeros((n_slots, self.max_blocks), np.int32)
+            self._blocks: dict[int, list[int]] = {}
+            # exact-prefix CoW sharing needs every leaf paged: a recurrent
+            # leaf cannot skip prompt steps by adopting cache rows
+            self._prefix = (PrefixCache(self.pool)
+                            if prefix_cache and self.parallel_safe else None)
+            reg = self.metrics_registry
+            reg.gauge("pool_blocks_total", service=self._service_name).set(
+                self.pool.n_blocks)
+            self._g_pool_free = reg.gauge(
+                "pool_blocks_free", service=self._service_name)
+            self._g_pool_live = reg.gauge(
+                "pool_blocks_live", service=self._service_name)
+            self._g_pool_shared = reg.gauge(
+                "pool_blocks_cow_shared", service=self._service_name)
+            self._update_pool_gauges()
         # closed-form parked-footprint coefficients (the eviction cost_fn
         # runs per victim candidate on every bind — no re-tracing there)
         self._park_fixed = self._park_per_pos = 0
@@ -262,8 +436,13 @@ class LMSessionService(SlotGridService):
         self.outputs: dict[int, list[int]] = {}
         # the un-jitted scan stays reachable so the speculative decoder and
         # the instrumented twin below wrap the SAME program body
-        self._decode_scan_raw = make_decode_scan(
-            bundle.decode_fn, self._batch_axes, self._seq_axes)
+        if self.paged:
+            self._decode_scan_raw = make_decode_scan_paged(
+                bundle.decode_fn, self._batch_axes, self._seq_axes,
+                self.block_len)
+        else:
+            self._decode_scan_raw = make_decode_scan(
+                bundle.decode_fn, self._batch_axes, self._seq_axes)
         self._decode_scan = jax.jit(self._decode_scan_raw)
         # instrumented twin: identical scan + one in-jit reduce of the
         # per-lane step counts (obs.device) as an extra output — session
@@ -271,29 +450,30 @@ class LMSessionService(SlotGridService):
         self._decode_scan_inst = None
         if self.device_counters:
             raw = self._decode_scan_raw
-
-            def _inst(params, cache, tok, pos, inp, n_inp, n_steps):
-                cache, tok, pos, ys = raw(params, cache, tok, pos, inp,
-                                          n_inp, n_steps)
-                return (cache, tok, pos, ys,
-                        occupancy_stats(n_steps, inp.shape[1]))
+            if self.paged:
+                def _inst(params, cache, tables, tok, pos, inp, n_inp,
+                          n_steps):
+                    cache, tok, pos, ys = raw(params, cache, tables, tok,
+                                              pos, inp, n_inp, n_steps)
+                    return (cache, tok, pos, ys,
+                            occupancy_stats(n_steps, inp.shape[1]))
+            else:
+                def _inst(params, cache, tok, pos, inp, n_inp, n_steps):
+                    cache, tok, pos, ys = raw(params, cache, tok, pos, inp,
+                                              n_inp, n_steps)
+                    return (cache, tok, pos, ys,
+                            occupancy_stats(n_steps, inp.shape[1]))
 
             self._decode_scan_inst = jax.jit(_inst)
-        # true chunked prefill: only where EVERY cache leaf is
-        # position-indexed (a seq axis to write rows into).  Recurrent
-        # leaves (RWKV wkv state, Mamba conv/ssm state) advance by value
-        # through a reassociated chunk recurrence — not bit-identical to
-        # per-token stepping — so those families keep the forced-token
-        # scan prefill (still dispatch-amortized by t_chunk).
-        self.parallel_safe = all(
-            sax >= 0 for sax in jax.tree.leaves(self._seq_axes))
         step_fn = getattr(bundle, "step_fn", None)
         self.prefill_chunk = (int(prefill_chunk)
                               if prefill_chunk and self.parallel_safe
                               and step_fn is not None else 0)
         if self.prefill_chunk:
             self._prefill_col = jax.jit(
-                make_prefill_column(step_fn, self._batch_axes))
+                make_prefill_paged(step_fn, self._batch_axes, self.block_len)
+                if self.paged
+                else make_prefill_column(step_fn, self._batch_axes))
         if mesh is not None:  # shard the session axis of every leaf -> data
             from jax.sharding import NamedSharding
             specs = column_pspecs(
@@ -304,27 +484,183 @@ class LMSessionService(SlotGridService):
                                          specs))
         self.mesh = mesh
 
+    # -- block-pool management (paged only) ---------------------------------
+    def _update_pool_gauges(self) -> None:
+        self._g_pool_free.set(self.pool.n_free)
+        self._g_pool_live.set(self.pool.n_live)
+        self._g_pool_shared.set(self.pool.n_shared)
+
+    def _device_table(self):
+        """The per-lane block tables as a device array — rebuilt per
+        dispatch from the int32 host mirror (tiny: n_slots x max_blocks)."""
+        return jnp.asarray(self._table)
+
+    def _alloc_blocks(self, n: int) -> list[int]:
+        """O(1)-per-block allocation; a dry pool first reclaims LRU
+        prefix-registry pins (blocks no live session shares).  All-or-
+        nothing: on exhaustion the partial allocation is rolled back and
+        PoolExhausted (an AdmissionError) propagates — paged capacity
+        pressure surfaces as admission back-pressure, never as a silent
+        eviction storm."""
+        out: list[int] = []
+        try:
+            for _ in range(n):
+                while (self.pool.n_free == 0 and self._prefix is not None
+                       and self._prefix.release_lru()):
+                    pass
+                out.append(self.pool.alloc())
+        except PoolExhausted:
+            for b in reversed(out):
+                self.pool.free(b)
+            raise PoolExhausted(
+                f"block pool exhausted ({self.pool.n_live}/"
+                f"{self.pool.n_blocks} blocks live, "
+                f"{len(self.sched.slot_of)} bound sessions); close or park "
+                f"sessions, or grow n_blocks") from None
+        return out
+
+    def _ensure_blocks(self, sid: int, start: int, end: int) -> None:
+        """Grow ``sid``'s table to cover cache rows [0, end) and make the
+        write range [start, end) exclusively owned (copy-on-write: a
+        shared block is cloned into a fresh one before the lane may write
+        it, so prefix-sharing tenants never see each other's bytes)."""
+        if not self.paged or end <= 0:
+            return
+        bl = self.block_len
+        need = min(-(-end // bl), self.max_blocks)
+        bids = self._blocks.setdefault(sid, [])
+        slot = self.sched.slot_of[sid]
+        while len(bids) < need:
+            bid = self._alloc_blocks(1)[0]
+            self._table[slot, len(bids)] = bid
+            bids.append(bid)
+        for i in range(max(start // bl, 0), need):
+            nb, src = self.pool.writable(bids[i])
+            if src is not None:  # shared: clone device bytes src -> nb
+                self.cache = jax.tree.map(
+                    lambda a, pg, bax:
+                        copy_block(a, src, nb, bax) if pg else a,
+                    self.cache, self._paged_flags, self._batch_axes)
+                bids[i] = nb
+                self._table[slot, i] = nb
+        self._update_pool_gauges()
+
+    def _trim_blocks(self, sid: int) -> None:
+        """Free blocks wholly past the session's position — the paged
+        form of rejected-suffix rollback (the dense path scrubs rows by
+        position; the paged path returns whole blocks to the pool)."""
+        if not self.paged:
+            return
+        bids = self._blocks.get(sid)
+        if not bids:
+            return
+        keep = min(len(bids), -(-self.sessions[sid].steps // self.block_len))
+        if keep == len(bids):
+            return
+        for b in bids[keep:]:
+            self.pool.free(b)
+        del bids[keep:]
+        slot = self.sched.slot_of.get(sid)
+        if slot is not None:
+            self._table[slot, keep:] = 0
+        self._update_pool_gauges()
+
+    def _free_session_blocks(self, sid: int) -> None:
+        for b in self._blocks.pop(sid, []):
+            self.pool.free(b)
+
     # -- slot-column state hooks --------------------------------------------
     def _pack(self, slot: int, sid: int) -> dict:
         sess = self.sessions[sid]
-        return {"kv": pack_column(self.cache, self._batch_axes, slot,
-                                  trunc_axes=self._seq_axes,
-                                  trunc_len=sess.steps)}
+        if not self.paged:
+            return {"kv": pack_column(self.cache, self._batch_axes, slot,
+                                      trunc_axes=self._seq_axes,
+                                      trunc_len=sess.steps)}
+        # paged park: gather ONLY the blocks covering [0, steps) — the
+        # O(pos) truncation contract, now block-granular — then free the
+        # session's device blocks (a parked session owns none; resume
+        # allocates fresh ones, content is position-independent through
+        # the table).  The blob carries a [block_len, n_keep] marker so a
+        # differently-paged or dense service refuses it atomically.
+        bids = self._blocks.get(sid, [])
+        n_keep = min(len(bids), -(-sess.steps // self.block_len))
+        keep = bids[:n_keep]
+        blob = jax.tree.map(
+            lambda a, bax, pg:
+                (pack_blocks(a, keep, bax) if pg
+                 else np.asarray(a[(slice(None),) * bax + (slot,)])),
+            self.cache, self._batch_axes, self._paged_flags)
+        self._free_session_blocks(sid)
+        self._update_pool_gauges()
+        return {"kv": blob,
+                PAGED_MARKER: np.asarray([self.block_len, n_keep], np.int32)}
 
     def _unpack(self, slot: int, blob: dict) -> None:
-        self.cache = unpack_column(self.cache, self._batch_axes, slot,
-                                   blob["kv"])
+        if not self.paged:
+            self.cache = unpack_column(self.cache, self._batch_axes, slot,
+                                       blob["kv"])
+            return
+        sid = self.sched.sid_of[slot]
+        n_keep = int(np.asarray(blob[PAGED_MARKER]).reshape(-1)[1])
+        bids = self._alloc_blocks(n_keep)
+        self._blocks[sid] = bids
+        self._table[slot, :] = 0
+        self._table[slot, :n_keep] = bids
+
+        def put(a, bax, pg, p):
+            if pg:
+                return unpack_blocks(a, bids, p, bax)
+            col = np.asarray(p)
+            if col.dtype != a.dtype and col.dtype.itemsize == a.dtype.itemsize:
+                col = col.view(a.dtype)  # npz round trip loses exotic dtypes
+            return a.at[(slice(None),) * bax + (slot,)].set(
+                jnp.asarray(col, a.dtype))
+
+        self.cache = jax.tree.map(put, self.cache, self._batch_axes,
+                                  self._paged_flags, blob["kv"])
+        self._update_pool_gauges()
 
     def _reset(self, slot: int) -> None:
-        self.cache = jax.tree.map(
-            lambda a, ax: a.at[(slice(None),) * ax + (slot,)].set(0),
-            self.cache, self._batch_axes)
+        if not self.paged:
+            self.cache = jax.tree.map(
+                lambda a, ax: a.at[(slice(None),) * ax + (slot,)].set(0),
+                self.cache, self._batch_axes)
+            return
+        # O(1) admission: clearing the table row (host int32) makes every
+        # stale pool byte unreachable — reads past a lane's kv_len are
+        # -inf-masked inside attention and the NULL block absorbs masked
+        # writes, so no device scrub is needed (the same discipline that
+        # keeps stale dense rows after speculative rollback unobservable)
+        self._blocks[self.sched.sid_of[slot]] = []
+        self._table[slot, :] = 0
+        if not self._all_paged:  # recurrent leaves are value-carried: zero
+            self.cache = jax.tree.map(
+                lambda a, bax, pg:
+                    a if pg
+                    else a.at[(slice(None),) * bax + (slot,)].set(0),
+                self.cache, self._batch_axes, self._paged_flags)
+
+    def _on_unbind(self, slot: int) -> None:
+        # an unbound slot's table row must be all-NULL: a masked lane's
+        # per-step write follows its row, and only NULL may absorb it
+        if self.paged:
+            self._table[slot, :] = 0
+
+    def _on_close(self, sid: int, sess) -> None:
+        if self.paged:
+            self._free_session_blocks(sid)
+            self._update_pool_gauges()
 
     # -- cost model ---------------------------------------------------------
     def _park_cost(self, sid: int) -> float:
         """Host bytes this session would occupy parked: O(pos) — the
-        non-uniform cost the eviction policy trades against staleness."""
-        return float(self.kv_park_bytes(self.sessions[sid].steps))
+        non-uniform cost the eviction policy trades against staleness.
+        Paged parking is block-granular, so the cost rounds up to the
+        owned-block boundary."""
+        steps = self.sessions[sid].steps
+        if self.paged:
+            steps = -(-steps // self.block_len) * self.block_len
+        return float(self.kv_park_bytes(steps))
 
     def kv_park_bytes(self, pos: int) -> int:
         """STRUCTURAL parked footprint of a KV session at position ``pos``
@@ -352,26 +688,92 @@ class LMSessionService(SlotGridService):
         self.sched.admit(sid)  # may raise AdmissionError (back-pressure)
         self.sessions[sid] = _LMSession(prompt=prompt)
         self.outputs[sid] = []
-        self._bind(sid)
-        if self.prefill_chunk and prompt.size > 1:
-            slot = jnp.int32(self.sched.slot_of[sid])
-            off = 0
-            for n in pow2_chunks(prompt.size - 1, self.prefill_chunk):
-                t0 = time.perf_counter()
-                with self.tracer.span("prefill", cat="lm", sid=sid,
-                                      shape=f"P{n}", pos=off):
-                    self.cache = self._prefill_col(
-                        self._params, self.cache, slot,
-                        jnp.asarray(prompt[off:off + n])[None],
-                        jnp.int32(off))
-                self._record_dispatch(time.perf_counter() - t0, f"P{n}")
-                off += n
-            self.sessions[sid].steps = off
+        try:
+            self._bind(sid)
+            if self.prefill_chunk and prompt.size > 1:
+                self._prefill_prompt(sid, prompt)
+        except PoolExhausted:
+            # all-or-nothing admission: unwind every trace of the session
+            # (blocks, slot, records) before re-raising the back-pressure
+            self._abort_open(sid)
+            raise
         return sid
+
+    def _abort_open(self, sid: int) -> None:
+        self._free_session_blocks(sid)
+        slot = self.sched.release(sid)
+        if slot is not None:
+            self._on_unbind(slot)
+        self.sessions.pop(sid, None)
+        self.outputs.pop(sid, None)
+        self._update_pool_gauges()
+
+    def _prefill_prompt(self, sid: int, prompt: np.ndarray) -> None:
+        slot = self.sched.slot_of[sid]
+        off = 0
+        if self.paged and self._prefix is not None:
+            # copy-on-write prefix sharing: full prompt blocks already in
+            # the registry (common system prompts across tenants) map to
+            # the same physical blocks — their prefill chunks are skipped
+            off = self._adopt_prefix(sid, slot, prompt)
+            self.sessions[sid].steps = off
+        for n in pow2_chunks(prompt.size - 1 - off, self.prefill_chunk):
+            t0 = time.perf_counter()
+            with self.tracer.span("prefill", cat="lm", sid=sid,
+                                  shape=f"P{n}", pos=off):
+                toks = jnp.asarray(prompt[off:off + n])[None]
+                if self.paged:
+                    self._ensure_blocks(sid, off, off + n)
+                    self.cache = self._prefill_col(
+                        self._params, self.cache,
+                        jnp.asarray(self._table[slot]), toks, jnp.int32(off))
+                else:
+                    self.cache = self._prefill_col(
+                        self._params, self.cache, jnp.int32(slot), toks,
+                        jnp.int32(off))
+            self._record_dispatch(time.perf_counter() - t0, f"P{n}")
+            off += n
+        self.sessions[sid].steps = off
+        if self.paged and self._prefix is not None:
+            self._register_prefix(sid, prompt)
+
+    def _adopt_prefix(self, sid: int, slot: int, prompt) -> int:
+        """Longest-prefix match of the prompt body's FULL blocks against
+        the registry; hits are adopted by reference (no prefill compute,
+        no new bytes).  Returns the adopted position offset."""
+        keys = prefix_keys(prompt[:-1], self.block_len)
+        hits = self._prefix.match(keys) if keys else []
+        if not hits:
+            return 0
+        bids = self._blocks.setdefault(sid, [])
+        bids.extend(hits)
+        self._table[slot, :len(hits)] = hits
+        self.metrics_registry.counter(
+            "prefix_block_hits_total", service=self._service_name).inc(
+                len(hits))
+        self._update_pool_gauges()
+        return len(hits) * self.block_len
+
+    def _register_prefix(self, sid: int, prompt) -> None:
+        """Register the session's full prompt-body blocks so later
+        tenants with the same prefix share them (each entry pins its
+        block with a registry reference, surviving the donor's park)."""
+        keys = prefix_keys(prompt[:-1], self.block_len)
+        for key, bid in zip(keys, self._blocks.get(sid, [])):
+            self._prefix.insert(key, bid)
+        self._update_pool_gauges()
 
     def _retire(self, sid: int) -> None:
         """Take a session that hit seq_cap out of rotation: slot freed for
-        reuse, outputs kept, record marked done (a further decode raises)."""
+        reuse, outputs kept, record marked done (a further decode raises).
+        Paged grids also return the session's blocks to the pool and
+        NULL the table row before the slot can host a masked lane."""
+        if self.paged:
+            slot = self.sched.slot_of.get(sid)
+            if slot is not None:
+                self._table[slot, :] = 0
+            self._free_session_blocks(sid)
+            self._update_pool_gauges()
         self.sched.release(sid)
         self.sessions[sid].done = True
         self.metrics_registry.counter("retired_total", service="lm").inc()
@@ -442,6 +844,8 @@ class LMSessionService(SlotGridService):
                 s = self.sched.slot_of[sid]
                 lanes[sid] = s
                 n = min(rem, t_pad)
+                if self.paged:  # CoW-safe blocks for this tick's writes
+                    self._ensure_blocks(sid, sess.steps, sess.steps + n)
                 feed = sess.prompt[sess.steps : sess.steps + n]
                 inp[s, :feed.size] = feed
                 n_inp[s] = feed.size
@@ -453,10 +857,11 @@ class LMSessionService(SlotGridService):
             t0 = time.perf_counter()
             with self.tracer.span("dispatch", cat="lm", shape=shape,
                                   lanes=len(lanes)):
+                args = ((self._device_table(),) if self.paged else ()) + (
+                    jnp.asarray(tok), jnp.asarray(pos), jnp.asarray(inp),
+                    jnp.asarray(n_inp), jnp.asarray(n_steps))
                 self.cache, tok2, _, ys, *dev = scan(
-                    self._params, self.cache, jnp.asarray(tok),
-                    jnp.asarray(pos), jnp.asarray(inp), jnp.asarray(n_inp),
-                    jnp.asarray(n_steps))
+                    self._params, self.cache, *args)
                 tok2, ys = np.asarray(tok2), np.asarray(ys)
             self._record_dispatch(time.perf_counter() - t0, shape)
             if dev:
@@ -490,16 +895,74 @@ class LMSessionService(SlotGridService):
                           tok=int(info.get("tok", 0)),
                           prompt=np.asarray(info.get("prompt", []), np.int32))
 
+    def _spill_extra(self) -> dict:
+        if not self.paged:
+            return {}
+        return {"paged": {"block_len": self.block_len,
+                          "n_blocks": self.pool.n_blocks}}
+
     def _restore_validate(self, parking: dict, meta: dict) -> None:
         """All-or-nothing gate: a spill from an incompatible service (longer
-        seq_cap, different cache geometry) must be refused BEFORE any
-        mutation, not crash mid-_bind on the first decode."""
+        seq_cap, different cache geometry, different PAGING geometry) must
+        be refused BEFORE any mutation, not crash mid-_bind on the first
+        decode — a half-admitted paged spill would leak pool blocks."""
+        pm = (meta or {}).get("paged")
+        if not self.paged and pm is not None:
+            raise ValueError(
+                f"incompatible LM spill: paged-layout spill (block_len="
+                f"{pm.get('block_len')}, n_blocks={pm.get('n_blocks')}) "
+                f"offered to a dense-layout service")
+        if self.paged and pm is not None and (
+                int(pm.get("block_len", -1)) != self.block_len
+                or int(pm.get("n_blocks", 0)) > self.pool.n_blocks):
+            raise ValueError(
+                f"incompatible LM spill: pool geometry (block_len="
+                f"{pm.get('block_len')}, n_blocks={pm.get('n_blocks')}) "
+                f"does not fit this service's (block_len={self.block_len}, "
+                f"n_blocks={self.pool.n_blocks})")
         for sid, blob in parking.items():
             info = meta.get("sessions", {}).get(str(sid), {})
             if int(info.get("steps", 0)) > self.seq_cap:
                 raise ValueError(
                     f"session {sid} parked at position {info.get('steps')} "
                     f"> this service's seq_cap={self.seq_cap}")
+            pv = blob.get(PAGED_MARKER) if isinstance(blob, dict) else None
+            if self.paged != (pv is not None):
+                raise ValueError(
+                    f"incompatible LM spill: session {sid} blob is "
+                    f"{'paged' if pv is not None else 'dense'}-layout but "
+                    f"this service is "
+                    f"{'paged' if self.paged else 'dense'}-layout")
+            if self.paged:
+                bl, n_keep = (int(x) for x in
+                              np.asarray(pv).reshape(-1)[:2])
+                if bl != self.block_len:
+                    raise ValueError(
+                        f"incompatible LM spill: session {sid} parked with "
+                        f"block_len={bl} != this service's {self.block_len}")
+                if n_keep > self.max_blocks:
+                    raise ValueError(
+                        f"incompatible LM spill: session {sid} owns "
+                        f"{n_keep} blocks > this service's per-session max "
+                        f"{self.max_blocks}")
+
+                def check_paged(a, bax, pg, p):
+                    got = np.asarray(p).shape
+                    want = ((a.shape[:bax] + (n_keep,) + a.shape[bax + 1:])
+                            if pg else a.shape[:bax] + a.shape[bax + 1:])
+                    if got != want:
+                        raise ValueError(
+                            f"session {sid}: parked cache leaf {got} does "
+                            f"not fit this service's "
+                            f"{'pool blocks' if pg else 'column'} {want}")
+                    return None
+
+                try:
+                    jax.tree.map(check_paged, self.cache, self._batch_axes,
+                                 self._paged_flags, blob["kv"])
+                except (KeyError, ValueError, TypeError) as e:
+                    raise ValueError(f"incompatible LM spill: {e}") from e
+                continue
 
             def check(a, bax, sax, p):
                 want = a.shape[:bax] + a.shape[bax + 1:]
@@ -548,7 +1011,18 @@ class LMSessionService(SlotGridService):
                 "last": sess.last}
 
     def _extra_stats(self) -> dict:
-        return {"seq_cap": self.seq_cap,
-                "slot_state_bytes": self.kv_park_bytes(self.seq_cap),
-                "parked_bytes": {sid: self._park_cost(sid)
-                                 for sid in self.parking}}
+        out = {"seq_cap": self.seq_cap,
+               "slot_state_bytes": self.kv_park_bytes(self.seq_cap),
+               "parked_bytes": {sid: self._park_cost(sid)
+                                for sid in self.parking}}
+        if self.paged:
+            out["paged"] = {
+                "block_len": self.block_len,
+                "n_blocks": self.pool.n_blocks,
+                "blocks_free": self.pool.n_free,
+                "blocks_live": self.pool.n_live,
+                "blocks_cow_shared": self.pool.n_shared,
+                "prefix_entries":
+                    len(self._prefix) if self._prefix is not None else 0,
+            }
+        return out

@@ -1,0 +1,211 @@
+"""Block-pool allocator for paged slot memory.
+
+Host-side bookkeeping for the vLLM-style paged cache layout: every
+seq-axis cache leaf becomes a shared ``(..., n_blocks + 1, block_len,
+...)`` pool and each lane reads it through an int32 block-table row.
+This module owns the free list, the per-block refcounts that make
+copy-on-write prefix sharing safe, and the exact-prefix registry that
+maps full prompt blocks to physical block ids.
+
+Design points:
+
+  * Block id 0 is the reserved NULL block.  It is never allocated and
+    never read at a live position — it exists so that masked lanes and
+    unbound slots have a harmless scatter target (their per-step write
+    lands in block 0's garbage instead of another session's memory).
+    ``BlockPool(n)`` therefore manages usable ids ``1..n`` over a device
+    pool of physical extent ``n + 1``.
+  * Refcounts: a block is owned by every session whose table references
+    it plus (optionally) the prefix registry.  ``free`` decrements and
+    returns the block to the free list at zero; ``writable`` implements
+    the CoW contract — exclusive blocks are returned as-is, shared ones
+    get a fresh id (the caller copies the device bytes ``src -> new``).
+  * ``PrefixCache`` keys full prompt blocks by the EXACT token tuple of
+    the chain up to and including that block (not a hash — collisions
+    would silently corrupt another tenant's stream).  Matching takes a
+    reference per hit; entries hold one registry reference each and are
+    reclaimed LRU-first when the pool runs dry.
+
+Exhaustion raises :class:`PoolExhausted`, a subclass of the scheduler's
+``AdmissionError`` — paged capacity pressure surfaces through the same
+back-pressure contract as live-session admission control.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from repro.sessions.scheduler import AdmissionError
+
+NULL_BLOCK = 0
+
+
+class PoolExhausted(AdmissionError):
+    """Raised when the block pool has no free block (park or close
+    sessions, or construct the service with a larger ``n_blocks``)."""
+
+
+class BlockPool:
+    """Free-list allocator over ``n_blocks`` usable blocks with per-block
+    refcounts (ids ``1..n_blocks``; id 0 is the reserved NULL block)."""
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
+        self.n_blocks = int(n_blocks)
+        # physical extent of the device pool axis (usable blocks + NULL)
+        self.extent = self.n_blocks + 1
+        self._refs = [0] * self.extent
+        # LIFO free list: recently-freed blocks are re-used first (their
+        # pool bytes are more likely to still be in cache)
+        self._free = list(range(self.n_blocks, 0, -1))
+        self._n_shared = 0  # blocks with refcount >= 2, kept incrementally
+
+    # -- stats ------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_live(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    @property
+    def n_shared(self) -> int:
+        return self._n_shared
+
+    def refcount(self, bid: int) -> int:
+        return self._refs[bid]
+
+    # -- allocation -------------------------------------------------------
+    def alloc(self) -> int:
+        """O(1): pop a free block with refcount 1."""
+        if not self._free:
+            raise PoolExhausted(
+                f"block pool exhausted ({self.n_blocks} blocks, 0 free)")
+        bid = self._free.pop()
+        self._refs[bid] = 1
+        return bid
+
+    def ref(self, bid: int) -> int:
+        """Take an extra reference (prefix sharing / registry pin)."""
+        if bid == NULL_BLOCK or self._refs[bid] <= 0:
+            raise ValueError(f"ref of unallocated block {bid}")
+        self._refs[bid] += 1
+        if self._refs[bid] == 2:
+            self._n_shared += 1
+        return bid
+
+    def free(self, bid: int) -> None:
+        """Drop one reference; the block returns to the free list at 0."""
+        if bid == NULL_BLOCK:
+            raise ValueError("free of the reserved NULL block")
+        if self._refs[bid] <= 0:
+            raise ValueError(f"double free of block {bid}")
+        self._refs[bid] -= 1
+        if self._refs[bid] == 1:
+            self._n_shared -= 1
+        elif self._refs[bid] == 0:
+            self._free.append(bid)
+
+    def writable(self, bid: int) -> tuple[int, int | None]:
+        """Copy-on-write gate before a session writes into ``bid``.
+
+        Returns ``(bid, None)`` when the block is exclusively owned, or
+        ``(new_bid, bid)`` when it was shared: the caller's reference is
+        moved to a fresh block and the caller must copy the device bytes
+        ``bid -> new_bid`` before writing."""
+        if bid == NULL_BLOCK or self._refs[bid] <= 0:
+            raise ValueError(f"writable() on unallocated block {bid}")
+        if self._refs[bid] == 1:
+            return bid, None
+        new = self.alloc()
+        self.free(bid)  # drop the caller's share (refcount stays >= 1)
+        return new, bid
+
+    def check(self) -> None:
+        """Invariant audit (tests): free list and refcounts reconcile."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("free list contains duplicates")
+        if NULL_BLOCK in free or self._refs[NULL_BLOCK] != 0:
+            raise AssertionError("NULL block leaked into circulation")
+        for bid in range(1, self.extent):
+            r = self._refs[bid]
+            if r < 0:
+                raise AssertionError(f"negative refcount on block {bid}")
+            if (r == 0) != (bid in free):
+                raise AssertionError(
+                    f"block {bid}: refcount {r} disagrees with free list")
+        shared = sum(1 for r in self._refs if r >= 2)
+        if shared != self._n_shared:
+            raise AssertionError(
+                f"shared counter {self._n_shared} != recount {shared}")
+
+
+def prefix_keys(tokens, block_len: int) -> list[tuple[int, ...]]:
+    """Chain keys for every FULL block of ``tokens``: key ``i`` is the
+    exact tuple of all tokens up to and including block ``i`` (prefix
+    chains are content-addressed without hash-collision risk)."""
+    toks = [int(t) for t in tokens]
+    n_full = len(toks) // block_len
+    return [tuple(toks[: (i + 1) * block_len]) for i in range(n_full)]
+
+
+class PrefixCache:
+    """Exact-prefix registry: full prompt blocks -> physical block ids.
+
+    Each entry pins its block with one registry reference, so a donor
+    session can park/close and later tenants still share the bytes.
+    ``match`` returns the longest chain of hits (taking one reference
+    per hit for the caller); ``release_lru`` drops the least-recently
+    -matched entry so exhausted pools can reclaim registry-only blocks.
+    """
+
+    def __init__(self, pool: BlockPool, max_entries: int | None = None):
+        self.pool = pool
+        self.max_entries = max_entries
+        self._map: OrderedDict[tuple[int, ...], int] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+    def match(self, keys: list[tuple[int, ...]]) -> list[int]:
+        """Longest-prefix match.  Returns the shared block ids (one NEW
+        reference taken per returned block — the caller owns them)."""
+        out: list[int] = []
+        for key in keys:
+            bid = self._map.get(key)
+            if bid is None:
+                self.misses += 1
+                break
+            self._map.move_to_end(key)
+            out.append(self.pool.ref(bid))
+            self.hits += 1
+        return out
+
+    def insert(self, key: tuple[int, ...], bid: int) -> None:
+        """Register a full block (no-op if the chain key is known)."""
+        if key in self._map:
+            self._map.move_to_end(key)
+            return
+        self.pool.ref(bid)
+        self._map[key] = bid
+        if self.max_entries is not None and len(self._map) > self.max_entries:
+            self.release_lru()
+
+    def release_lru(self) -> bool:
+        """Evict the least-recently-matched entry, dropping its registry
+        reference (frees the block iff no session still shares it).
+        Returns False when the registry is empty."""
+        if not self._map:
+            return False
+        _, bid = self._map.popitem(last=False)
+        self.pool.free(bid)
+        return True
+
+    def clear(self) -> None:
+        while self.release_lru():
+            pass

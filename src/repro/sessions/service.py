@@ -79,6 +79,7 @@ from repro.sessions.state import (
     grid_scan,
     make_grid_fused,
     pack_slot,
+    parked_bytes,
     reset_slot,
     slot_park_bytes,
     unpack_slot,
@@ -163,7 +164,31 @@ class SlotGridService:
         self._c_evictions = reg.counter("evictions_total", service=svc)
         self._g_bound = reg.gauge("sessions_bound", service=svc)
         self._g_parked = reg.gauge("sessions_parked", service=svc)
+        # parking-lot host footprint, maintained incrementally at the blob
+        # store/take sites (summing every blob per mutation would be
+        # O(parked * leaves) on the bind path)
+        self._g_parked_bytes = reg.gauge("parked_bytes", service=svc)
+        self._parked_blob_bytes: dict[int, int] = {}  # sid -> host bytes
         self._lat_hists: dict[str, Any] = {}  # shape -> Histogram (cached)
+
+    # -- parking-lot accounting ---------------------------------------------
+    @property
+    def parked_blob_bytes(self) -> int:
+        """Total host bytes of the parking lot (exact: sums each parked
+        blob's array bytes, nibble-packed and block-granular blobs count
+        as stored)."""
+        return sum(self._parked_blob_bytes.values())
+
+    def _park_store(self, sid: int, blob) -> None:
+        self.parking[sid] = blob
+        self._parked_blob_bytes[sid] = parked_bytes(blob)
+        self._g_parked_bytes.set(self.parked_blob_bytes)
+
+    def _park_take(self, sid: int, default=None):
+        blob = self.parking.pop(sid, default)
+        if self._parked_blob_bytes.pop(sid, None) is not None:
+            self._g_parked_bytes.set(self.parked_blob_bytes)
+        return blob
 
     # -- telemetry ----------------------------------------------------------
     # Backward-compat surface for the historical bare-int counters: reads
@@ -266,7 +291,7 @@ class SlotGridService:
                 with self.tracer.span("pack", cat=self._service_name,
                                       sid=evicted, slot=slot):
                     blob = self._pack(slot, evicted)
-                self.parking[evicted] = blob
+                self._park_store(evicted, blob)
                 self._c_evictions.inc()
                 if self.tracer.enabled:
                     cost = self.sched.cost_fn(evicted) \
@@ -277,7 +302,7 @@ class SlotGridService:
             if sid in self.parking:
                 with self.tracer.span("unpack", cat=self._service_name,
                                       sid=sid, slot=slot):
-                    self._unpack(slot, self.parking.pop(sid))
+                    self._unpack(slot, self._park_take(sid))
                 self.tracer.instant("resume", cat=self._service_name,
                                     sid=sid, slot=slot)
             elif self.sessions[sid].steps == 0:
@@ -298,14 +323,14 @@ class SlotGridService:
         if slot is not None:
             with self.tracer.span("park", cat=self._service_name,
                                   sid=sid, slot=slot):
-                self.parking[sid] = self._pack(slot, sid)
+                self._park_store(sid, self._pack(slot, sid))
             self._on_unbind(slot)
 
     def close(self, sid: int) -> None:
         slot = self.sched.release(sid)
         if slot is not None:
             self._on_unbind(slot)
-        self.parking.pop(sid, None)
+        self._park_take(sid)
         sess = self.sessions.pop(sid)
         self._on_close(sid, sess)
 
@@ -388,7 +413,7 @@ class SlotGridService:
             info = meta["sessions"].get(str(sid), {})
             self.sched.admit(sid)
             self.sessions[sid] = self._restore_session(info)
-            self.parking[sid] = parked
+            self._park_store(sid, parked)
             restored.append(sid)
         self._next_sid = max(self._next_sid, int(meta.get("next_sid", 0)))
         self._post_restore(restored, meta)

@@ -62,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.obs.device import acceptance_stats
+from repro.sessions.state import gather_column, split_blocks
 
 # ---------------------------------------------------------------------------
 # Drafters
@@ -180,6 +181,76 @@ def make_verify_scan(decode_fn, batch_axes, seq_axes=None):
     return verify
 
 
+def make_verify_scan_paged(decode_fn, batch_axes, seq_axes, block_len):
+    """Paged twin of ``make_verify_scan`` for mixed bundles (recurrent +
+    seq-axis leaves) running over a block pool.
+
+    Signature gains the tables: ``verify(params, cache, tables, tok, pos,
+    draft, n_draft, active)``.  Same alive-mask semantics as the dense
+    verify scan — recurrent leaves commit by VALUE only on alive steps,
+    KV rows by POSITION — but each lane gathers its pooled leaves through
+    its block-table row and writes back only the one block holding the
+    step's row (lm.make_decode_scan_paged's discipline).  Dead steps
+    rewrite the lane's frozen-position block, or the NULL block for
+    cleared table entries; either way no bytes another session reads."""
+    recurrent = jax.tree.map(lambda sax: sax < 0, seq_axes)
+    pooled = jax.tree.map(lambda sax: sax >= 0, seq_axes)
+    col_axes = jax.tree.map(
+        lambda bax, pg: None if pg else bax, batch_axes, pooled)
+
+    def verify(params, cache, tables, tok, pos, draft, n_draft, active):
+        S, K = draft.shape
+        zero = jnp.zeros((S, 1), jnp.int32)
+        d_in = jnp.concatenate([zero, draft], axis=1)
+        d_chk = jnp.concatenate([draft, zero], axis=1)
+
+        def body(carry, xs):
+            cache, tok, pos, alive = carry
+            din_t, dchk_t, j = xs
+
+            def lane(cs, row, tk, ps, al, di, dc, nd):
+                col = jax.tree.map(
+                    lambda a, bax, pg: gather_column(a, row, bax) if pg else a,
+                    cs, batch_axes, pooled)
+                c = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
+                                 col, batch_axes)
+                t = jnp.where(j > 0, di, tk)
+                logits, c2 = decode_fn(params, c,
+                                       {"tokens": t[None, None], "pos": ps})
+                c2 = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax),
+                                  c2, batch_axes)
+                y = jnp.argmax(logits[0], -1).astype(jnp.int32)
+                keep = lambda nw, od: jnp.where(al, nw, od)
+                c2 = jax.tree.map(
+                    lambda nw, od, rec: keep(nw, od) if rec else nw,
+                    c2, col, recurrent)
+                b = ps // block_len
+                upd = jax.tree.map(
+                    lambda a, bax, pg: jax.lax.dynamic_slice_in_dim(
+                        a, b * block_len, block_len, axis=bax) if pg else a,
+                    c2, batch_axes, pooled)
+                match = al & (j < nd) & (y == dc)
+                return upd, row[b], keep(y, tk), keep(ps + 1, ps), match, y
+
+            upd, pb, tok, pos, alive, y = jax.vmap(
+                lane, in_axes=(col_axes, 0, 0, 0, 0, 0, 0, 0),
+                out_axes=(batch_axes, 0, 0, 0, 0, 0))(
+                    cache, tables, tok, pos, alive, din_t, dchk_t, n_draft)
+            cache = jax.tree.map(
+                lambda a, u, bax, pg:
+                    a.at[(slice(None),) * bax + (pb,)].set(u) if pg else u,
+                cache, upd, batch_axes, pooled)
+            return (cache, tok, pos, alive), y
+
+        (cache, _, _, _), ys = jax.lax.scan(
+            body, (cache, tok, pos, active),
+            (jnp.moveaxis(d_in, 1, 0), jnp.moveaxis(d_chk, 1, 0),
+             jnp.arange(K + 1, dtype=jnp.int32)))
+        return cache, jnp.moveaxis(ys, 0, 1)
+
+    return verify
+
+
 def make_verify_chunk(step_fn, batch_axes):
     """Parallel verify for pure-KV bundles: all K+1 positions in one
     multi-token cached step per lane (vmapped B=1, per-lane positions —
@@ -205,6 +276,52 @@ def make_verify_chunk(step_fn, batch_axes):
 
         return jax.vmap(lane, in_axes=(batch_axes, 0, 0, 0),
                         out_axes=(batch_axes, 0))(cache, toks, pos, active)
+
+    return verify
+
+
+def make_verify_chunk_paged(step_fn, batch_axes, seq_axes, block_len):
+    """Paged twin of ``make_verify_chunk``: each lane gathers its column
+    through its block-table row, runs the SAME multi-token cached step,
+    and scatters the column back block-wise over the whole row
+    (lm.make_prefill_paged's write pattern).
+
+    Signature gains the tables: ``verify(params, cache, tables, toks,
+    pos, active) -> (cache, ys)``.  Inactive lanes are value-masked
+    whole, so they scatter their own gathered bytes back bit-identically;
+    table entries a lane does not own map to the reserved NULL block,
+    whose duplicate writes all carry block 0's pass-through bytes.
+    Callers must have allocated (CoW-cloned) every block covering
+    ``[pos, pos + K + 1)`` for active lanes before dispatch."""
+    pooled = jax.tree.map(lambda sax: sax >= 0, seq_axes)
+    col_axes = jax.tree.map(
+        lambda bax, pg: None if pg else bax, batch_axes, pooled)
+
+    def verify(params, cache, tables, toks, pos, active):
+        def lane(cs, row, tk, ps, act):
+            col = jax.tree.map(
+                lambda a, bax, pg: gather_column(a, row, bax) if pg else a,
+                cs, batch_axes, pooled)
+            c = jax.tree.map(lambda a, ax: jnp.expand_dims(a, ax),
+                             col, batch_axes)
+            logits, c2 = step_fn(params, c, {"tokens": tk[None], "pos": ps})
+            c2 = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax),
+                              c2, batch_axes)
+            c2 = jax.tree.map(lambda nw, od: jnp.where(act, nw, od), c2, col)
+            out = jax.tree.map(
+                lambda a, ref, bax, pg: split_blocks(
+                    a.astype(ref.dtype), bax, block_len) if pg else a,
+                c2, cs, batch_axes, pooled)
+            return out, jnp.argmax(logits[0], -1).astype(jnp.int32)
+
+        blks, ys = jax.vmap(lane, in_axes=(col_axes, 0, 0, 0, 0),
+                            out_axes=(batch_axes, 0))(
+                                cache, tables, toks, pos, active)
+        cache = jax.tree.map(
+            lambda a, u, bax, pg:
+                a.at[(slice(None),) * bax + (tables,)].set(u) if pg else u,
+            cache, blks, batch_axes, pooled)
+        return cache, ys
 
     return verify
 
@@ -255,18 +372,39 @@ class SpeculativeDecoder:
                 raise ValueError(
                     "parallel verify needs the bundle's multi-token cached "
                     "step_fn; this bundle has none — use verify='scan'")
-            self._verify_chunk = getattr(service, "_spec_verify_chunk", None)
-            if self._verify_chunk is None:
-                self._verify_chunk = service._spec_verify_chunk = jax.jit(
-                    make_verify_chunk(service.bundle.step_fn,
-                                      service._batch_axes))
+            if getattr(service, "paged", False):
+                self._verify_chunk = getattr(
+                    service, "_spec_verify_chunk_paged", None)
+                if self._verify_chunk is None:
+                    self._verify_chunk = service._spec_verify_chunk_paged = \
+                        jax.jit(make_verify_chunk_paged(
+                            service.bundle.step_fn, service._batch_axes,
+                            service._seq_axes, service.block_len))
+            else:
+                self._verify_chunk = getattr(
+                    service, "_spec_verify_chunk", None)
+                if self._verify_chunk is None:
+                    self._verify_chunk = service._spec_verify_chunk = jax.jit(
+                        make_verify_chunk(service.bundle.step_fn,
+                                          service._batch_axes))
         elif not service.parallel_safe:
             # recurrent leaves: the alive-masked scan (value rollback)
-            self._verify_scan = getattr(service, "_spec_verify_scan", None)
-            if self._verify_scan is None:
-                self._verify_scan = service._spec_verify_scan = jax.jit(
-                    make_verify_scan(service.bundle.decode_fn,
-                                     service._batch_axes, service._seq_axes))
+            if getattr(service, "paged", False):
+                self._verify_scan = getattr(
+                    service, "_spec_verify_scan_paged", None)
+                if self._verify_scan is None:
+                    self._verify_scan = service._spec_verify_scan_paged = \
+                        jax.jit(make_verify_scan_paged(
+                            service.bundle.decode_fn, service._batch_axes,
+                            service._seq_axes, service.block_len))
+            else:
+                self._verify_scan = getattr(service, "_spec_verify_scan",
+                                            None)
+                if self._verify_scan is None:
+                    self._verify_scan = service._spec_verify_scan = jax.jit(
+                        make_verify_scan(service.bundle.decode_fn,
+                                         service._batch_axes,
+                                         service._seq_axes))
         # pure-KV scan mode reuses service._decode_scan verbatim (see
         # _dispatch): same compiled program as plain decode => bit-identity
         # by program identity, and zero extra compilations.
@@ -291,9 +429,23 @@ class SpeculativeDecoder:
             self._verify_inst = self._build_instrumented()
 
     def _build_instrumented(self):
-        """Jitted verify twin returning (cache, ys, per-lane accepted)."""
+        """Jitted verify twin returning (cache, ys, per-lane accepted).
+        Paged services thread the block tables through as an extra leading
+        device argument; the state math is otherwise identical."""
         svc = self.svc
+        paged = getattr(svc, "paged", False)
         if self.verify == "parallel":
+            if paged:
+                raw = make_verify_chunk_paged(
+                    svc.bundle.step_fn, svc._batch_axes, svc._seq_axes,
+                    svc.block_len)
+
+                def inst(params, cache, tables, toks, pos, active, n_draft):
+                    cache, ys = raw(params, cache, tables, toks, pos, active)
+                    return cache, ys, acceptance_stats(ys, toks[:, 1:],
+                                                       n_draft)
+
+                return jax.jit(inst)
             raw = make_verify_chunk(svc.bundle.step_fn, svc._batch_axes)
 
             def inst(params, cache, toks, pos, active, n_draft):
@@ -302,12 +454,34 @@ class SpeculativeDecoder:
 
             return jax.jit(inst)
         if svc.parallel_safe:
-            raw = svc._decode_scan_raw
+            raw = svc._decode_scan_raw  # paged or dense signature alike
 
-            def inst(params, cache, tok, pos, inp, n_inp, n_steps, n_draft):
-                cache, _, _, ys = raw(params, cache, tok, pos, inp, n_inp,
-                                      n_steps)
-                return cache, ys, acceptance_stats(ys, inp[:, 1:], n_draft)
+            if paged:
+                def inst(params, cache, tables, tok, pos, inp, n_inp,
+                         n_steps, n_draft):
+                    cache, _, _, ys = raw(params, cache, tables, tok, pos,
+                                          inp, n_inp, n_steps)
+                    return cache, ys, acceptance_stats(ys, inp[:, 1:],
+                                                       n_draft)
+            else:
+                def inst(params, cache, tok, pos, inp, n_inp, n_steps,
+                         n_draft):
+                    cache, _, _, ys = raw(params, cache, tok, pos, inp,
+                                          n_inp, n_steps)
+                    return cache, ys, acceptance_stats(ys, inp[:, 1:],
+                                                       n_draft)
+
+            return jax.jit(inst)
+        if paged:
+            raw = make_verify_scan_paged(svc.bundle.decode_fn,
+                                         svc._batch_axes, svc._seq_axes,
+                                         svc.block_len)
+
+            def inst(params, cache, tables, tok, pos, draft, n_draft,
+                     active):
+                cache, ys = raw(params, cache, tables, tok, pos, draft,
+                                n_draft, active)
+                return cache, ys, acceptance_stats(ys, draft, n_draft)
 
             return jax.jit(inst)
         raw = make_verify_scan(svc.bundle.decode_fn, svc._batch_axes,
@@ -341,6 +515,9 @@ class SpeculativeDecoder:
         inst = self._verify_inst
         shape = f"V{self.k + 1}"
         acc = None
+        # paged services read/write the cache through the lane block
+        # tables: one extra leading device arg, same program body
+        tb = (svc._device_table(),) if getattr(svc, "paged", False) else ()
         t0 = time.perf_counter()
         with svc.tracer.span("verify", cat="spec", shape=shape,
                              mode=self.verify,
@@ -354,12 +531,12 @@ class SpeculativeDecoder:
                     .astype(np.int32)
                 if inst is not None:
                     svc.cache, ys, acc = inst(
-                        svc._params, svc.cache, jnp.asarray(toks),
+                        svc._params, svc.cache, *tb, jnp.asarray(toks),
                         jnp.asarray(pos), jnp.asarray(active),
                         jnp.asarray(n_draft))
                 else:
                     svc.cache, ys = self._verify_chunk(
-                        svc._params, svc.cache, jnp.asarray(toks),
+                        svc._params, svc.cache, *tb, jnp.asarray(toks),
                         jnp.asarray(pos), jnp.asarray(active))
             elif svc.parallel_safe:
                 # pure-KV exact mode: the service's own decode_scan, drafts
@@ -369,24 +546,24 @@ class SpeculativeDecoder:
                 inp = np.concatenate([tok[:, None], draft], axis=1)
                 if inst is not None:
                     svc.cache, ys, acc = inst(
-                        svc._params, svc.cache, jnp.asarray(tok),
+                        svc._params, svc.cache, *tb, jnp.asarray(tok),
                         jnp.asarray(pos), jnp.asarray(inp),
                         jnp.asarray(n_steps), jnp.asarray(n_steps),
                         jnp.asarray(n_draft))
                 else:
                     svc.cache, _, _, ys = svc._decode_scan(
-                        svc._params, svc.cache, jnp.asarray(tok),
+                        svc._params, svc.cache, *tb, jnp.asarray(tok),
                         jnp.asarray(pos), jnp.asarray(inp),
                         jnp.asarray(n_steps), jnp.asarray(n_steps))
             else:
                 if inst is not None:
                     svc.cache, ys, acc = inst(
-                        svc._params, svc.cache, jnp.asarray(tok),
+                        svc._params, svc.cache, *tb, jnp.asarray(tok),
                         jnp.asarray(pos), jnp.asarray(draft),
                         jnp.asarray(n_draft), jnp.asarray(n_steps > 0))
                 else:
                     svc.cache, ys = self._verify_scan(
-                        svc._params, svc.cache, jnp.asarray(tok),
+                        svc._params, svc.cache, *tb, jnp.asarray(tok),
                         jnp.asarray(pos), jnp.asarray(draft),
                         jnp.asarray(n_draft), jnp.asarray(n_steps > 0))
             ys = np.asarray(ys)
@@ -468,6 +645,15 @@ class SpeculativeDecoder:
                 n_steps[s] = d.size + 1
                 tok[s] = sess.tok
                 pos[s] = sess.steps
+                if getattr(svc, "paged", False):
+                    # the verify writes rows [steps, steps + n) — K+1 whole
+                    # rows in parallel mode (rejected rows land in owned
+                    # blocks and are trimmed after rollback), the masked
+                    # scan writes at most n_steps rows
+                    n = self.k + 1 if self.verify == "parallel" \
+                        else int(n_steps[s])
+                    svc._ensure_blocks(sid, sess.steps,
+                                       min(sess.steps + n, svc.seq_cap))
 
             if not n_draft.any():
                 # nothing to verify anywhere (cold drafters, or every lane
@@ -501,6 +687,10 @@ class SpeculativeDecoder:
                 remaining[sid] -= m + 1
                 sess.last = {"tokens": emitted, "step": sess.steps,
                              "accepted": m}
+                if getattr(svc, "paged", False):
+                    # rollback frees the rejected suffix's blocks instead
+                    # of zeroing ranges — they return to the pool now
+                    svc._trim_blocks(sid)
             for sid in lanes:
                 if svc.sessions[sid].steps >= svc.seq_cap:
                     svc._retire(sid)

@@ -364,6 +364,97 @@ def column_pspecs(tree_shapes, batch_axes, mesh, rules: dict | None = None):
     return jax.tree.map(spec, tree_shapes, batch_axes)
 
 
+# ---------------------------------------------------------------------------
+# Paged columns: shared block pools + per-lane block tables
+# ---------------------------------------------------------------------------
+#
+# The paged layout replaces each seq-axis leaf's dense (..., B, S, ...)
+# storage with a shared (..., n_blocks + 1, block_len, ...) pool; a lane
+# owns rows through an int32 table row (max_blocks = S // block_len
+# entries; 0 is the reserved NULL block, see sessions/paging.py).  The
+# layout is only defined for leaves whose sequence axis immediately
+# follows the session axis (sax == bax + 1 — true of every KV/MLA/cross
+# cache in models/build.py), because then swapping (B, S) -> (n_blocks,
+# block_len) keeps every other axis in place and a gather + reshape
+# reconstructs the EXACT dense column: decode programs read through
+# ``gather_column`` and stay bit-identical to the dense path.  Leaves
+# without a sequence axis (recurrent states) keep their dense per-lane
+# storage.
+
+PAGED_MARKER = "pv"  # paged park-blob marker: np.int32 [block_len, n_keep]
+
+
+def paged_flags(batch_axes, seq_axes):
+    """Per-leaf bool tree: True where the leaf pages (has a seq axis)."""
+    return jax.tree.map(lambda bax, sax: sax >= 0, batch_axes, seq_axes)
+
+
+def make_pools(cache, batch_axes, seq_axes, extent: int, block_len: int):
+    """Dense cache tree -> mixed pool tree: every seq-axis leaf becomes a
+    shared pool with ``extent`` physical blocks of ``block_len`` rows
+    (extent counts the NULL block); recurrent leaves pass through."""
+    def mk(a, bax, sax):
+        if sax < 0:
+            return a
+        if sax != bax + 1:
+            raise ValueError(
+                f"paged layout needs the sequence axis adjacent to the "
+                f"session axis (got bax={bax}, sax={sax})")
+        if a.shape[sax] % block_len:
+            raise ValueError(
+                f"seq_cap {a.shape[sax]} not divisible by "
+                f"block_len {block_len}")
+        shape = list(a.shape)
+        shape[bax], shape[sax] = extent, block_len
+        return jnp.zeros(tuple(shape), a.dtype)
+
+    return jax.tree.map(mk, cache, batch_axes, seq_axes)
+
+
+def gather_column(pool, row, bax: int):
+    """One lane's dense column view of a pool: gather the table row's
+    blocks and merge (max_blocks, block_len) -> S at axis ``bax``.  Used
+    INSIDE the jitted decode programs — the gathered column is
+    bit-identical to the dense layout's column at every live position."""
+    g = jnp.take(pool, row, axis=bax)
+    shape = g.shape[:bax] + (g.shape[bax] * g.shape[bax + 1],) + g.shape[bax + 2:]
+    return g.reshape(shape)
+
+
+def split_blocks(col, bax: int, block_len: int):
+    """Inverse of the ``gather_column`` merge: (..., S, ...) column ->
+    (..., S // block_len, block_len, ...) block stack at axis ``bax``."""
+    nb = col.shape[bax] // block_len
+    return col.reshape(col.shape[:bax] + (nb, block_len) + col.shape[bax + 1:])
+
+
+def pack_blocks(pool, bids, bax: int) -> np.ndarray:
+    """Copy a session's owned blocks to host memory — the paged analog of
+    ``pack_column``'s O(pos) truncation: park moves ONLY the blocks the
+    session owns, (..., len(bids), block_len, ...) bytes."""
+    idx = jnp.asarray(np.asarray(bids, np.int32))
+    return np.asarray(jnp.take(pool, idx, axis=bax))
+
+
+def unpack_blocks(pool, bids, blocks, bax: int):
+    """Scatter a ``pack_blocks`` blob into freshly-allocated blocks of the
+    pool (any free blocks work — pool content is position-independent
+    through the table indirection)."""
+    blk = np.asarray(blocks)
+    if blk.dtype != pool.dtype and blk.dtype.itemsize == pool.dtype.itemsize:
+        blk = blk.view(pool.dtype)  # npz round trip loses exotic dtypes
+    idx = jnp.asarray(np.asarray(bids, np.int32))
+    return pool.at[(slice(None),) * bax + (idx,)].set(jnp.asarray(blk, pool.dtype))
+
+
+def copy_block(pool, src: int, dst: int, bax: int):
+    """Device copy of one block (the copy-on-write clone: a write into a
+    shared block first duplicates its bytes into the writer's fresh
+    block, leaving every other referent untouched)."""
+    blk = pool[(slice(None),) * bax + (src,)]
+    return pool.at[(slice(None),) * bax + (dst,)].set(blk)
+
+
 def slot_park_bytes(cfg: ArchConfig, *, quantize: bool = False) -> int:
     """STRUCTURAL parked footprint of one session — content-independent,
     so it is a stable metric (the actual ``parked_bytes`` of a given

@@ -27,10 +27,46 @@ except ImportError:
         def example(self, rng) -> int:
             return int(rng.integers(self.lo, self.hi + 1))
 
+    class _SampledStrategy:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def example(self, rng):
+            return self.elements[int(rng.integers(0, len(self.elements)))]
+
+    class _TupleStrategy:
+        def __init__(self, parts):
+            self.parts = parts
+
+        def example(self, rng):
+            return tuple(p.example(rng) for p in self.parts)
+
+    class _ListStrategy:
+        def __init__(self, elements, min_size: int, max_size: int):
+            self.elements = elements
+            self.lo, self.hi = int(min_size), int(max_size)
+
+        def example(self, rng):
+            n = int(rng.integers(self.lo, self.hi + 1))
+            return [self.elements.example(rng) for _ in range(n)]
+
     class _Strategies:
         @staticmethod
         def integers(min_value: int, max_value: int) -> _IntStrategy:
             return _IntStrategy(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements) -> _SampledStrategy:
+            return _SampledStrategy(elements)
+
+        @staticmethod
+        def tuples(*parts) -> _TupleStrategy:
+            return _TupleStrategy(parts)
+
+        @staticmethod
+        def lists(elements, min_size: int = 0,
+                  max_size: int = 10) -> _ListStrategy:
+            return _ListStrategy(elements, min_size, max_size)
 
     st = _Strategies()
 
@@ -47,7 +83,7 @@ except ImportError:
             _MAX_EXAMPLES = int(cls._profiles.get(name, {}).get(
                 "max_examples", _MAX_EXAMPLES))
 
-    def given(*strategies_):
+    def given(*strategies_, **kw_strategies):
         def deco(fn):
             # NB: no functools.wraps — copying the signature would make
             # pytest treat the drawn arguments as fixtures.
@@ -55,7 +91,10 @@ except ImportError:
                 seed = zlib.crc32(fn.__qualname__.encode())
                 rng = np.random.default_rng(seed)
                 for _ in range(_MAX_EXAMPLES):
-                    fn(*args, *[s.example(rng) for s in strategies_], **kwargs)
+                    drawn = {k: s.example(rng)
+                             for k, s in kw_strategies.items()}
+                    fn(*args, *[s.example(rng) for s in strategies_],
+                       **drawn, **kwargs)
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
             return wrapper

@@ -18,6 +18,7 @@ from repro.sessions import (
     StreamSessionService,
     parked_bytes,
 )
+from repro.sessions.state import PAGED_MARKER
 
 settings.register_profile("lm", deadline=None, max_examples=10)
 settings.load_profile("lm")
@@ -403,10 +404,13 @@ def _churn_services():
                                            max_tenants=1, quantize=q,
                                            t_chunk=4, max_sessions=8)
     lcfg, lbundle, lparams = _lm_setup()
-    mklm = lambda n: LMSessionService(lbundle, lparams, n_slots=n,
-                                      seq_cap=128, t_chunk=4, max_sessions=8)
+    mklm = lambda n, **kw: LMSessionService(lbundle, lparams, n_slots=n,
+                                            seq_cap=128, t_chunk=4,
+                                            max_sessions=8, **kw)
+    # the paged grid churns against the DENSE reference: the cross-layout
+    # bit-identity ratchet of the paged slot memory PR
     return ((mk(2, False), mk(4, False)), (mk(2, True), mk(4, True)),
-            (mklm(2), mklm(4)))
+            (mklm(2), mklm(4)), (mklm(2, paged=True), mklm(4)))
 
 
 def test_churn_property_mixed_services_bit_identical():
@@ -416,7 +420,8 @@ def test_churn_property_mixed_services_bit_identical():
     @given(st.integers(0, 2**31 - 1))
     def prop(seed):
         rng = np.random.default_rng(seed)
-        (svc_f, ref_f), (svc_q, ref_q), (svc_lm, ref_lm) = _churn_services()
+        ((svc_f, ref_f), (svc_q, ref_q),
+         *lm_pairs) = _churn_services()  # dense and paged LM grids
         x = rng.normal(size=(3, 40, 2)).astype(np.float32)
         prompts = [rng.integers(0, 64, size=rng.integers(1, 5))
                    .astype(np.int32) for _ in range(3)]
@@ -425,8 +430,10 @@ def test_churn_property_mixed_services_bit_identical():
                 "rids": [r.open_session() for _ in range(3)],
                 "pos": [0, 0, 0]}
                for s, r in ((svc_f, ref_f), (svc_q, ref_q))]
-        lm = {"sids": [svc_lm.open_session(p) for p in prompts],
-              "rids": [ref_lm.open_session(p) for p in prompts]}
+        lms = [{"svc": s, "ref": r,
+                "sids": [s.open_session(p) for p in prompts],
+                "rids": [r.open_session(p) for p in prompts]}
+               for s, r in lm_pairs]
         try:
             for _ in range(6):
                 for grp in tcn:
@@ -452,28 +459,196 @@ def test_churn_property_mixed_services_bit_identical():
                         np.testing.assert_array_equal(g["emb"], w["emb"])
                         np.testing.assert_array_equal(g["logits"],
                                                       w["logits"])
-                picks = [i for i in range(3) if rng.random() < 0.6][:2]
-                if rng.random() < 0.3 and picks:
-                    svc_lm.park(lm["sids"][picks[0]])
-                wants = {lm["sids"][i]: int(rng.integers(1, 5))
-                         for i in picks}
-                if wants:
-                    got = svc_lm.decode(wants)
-                    want = ref_lm.decode(
-                        {lm["rids"][i]: wants[lm["sids"][i]]
-                         for i in picks})
-                    for i in picks:
-                        assert got[lm["sids"][i]] == want[lm["rids"][i]]
+                for lm in lms:
+                    picks = [i for i in range(3) if rng.random() < 0.6][:2]
+                    if rng.random() < 0.3 and picks:
+                        lm["svc"].park(lm["sids"][picks[0]])
+                    wants = {lm["sids"][i]: int(rng.integers(1, 5))
+                             for i in picks}
+                    if wants:
+                        got = lm["svc"].decode(wants)
+                        want = lm["ref"].decode(
+                            {lm["rids"][i]: wants[lm["sids"][i]]
+                             for i in picks})
+                        for i in picks:
+                            assert got[lm["sids"][i]] == want[lm["rids"][i]]
             assert svc_f.stats()["evictions"] + svc_q.stats()["evictions"] \
-                + svc_lm.stats()["evictions"] >= 0
+                + sum(lm["svc"].stats()["evictions"] for lm in lms) >= 0
         finally:
             for grp in tcn:
                 for sid in grp["sids"]:
                     grp["svc"].close(sid)
                 for rid in grp["rids"]:
                     grp["ref"].close(rid)
-            for sid in lm["sids"]:
-                svc_lm.close(sid)
-            for rid in lm["rids"]:
-                ref_lm.close(rid)
+            for lm in lms:
+                for sid in lm["sids"]:
+                    lm["svc"].close(sid)
+                for rid in lm["rids"]:
+                    lm["ref"].close(rid)
+            for lm in lms:  # paged churn may never leak a block
+                if lm["svc"].paged:
+                    lm["svc"].pool.check()
+                    assert lm["svc"].pool.n_live == len(lm["svc"]._prefix)
     prop()
+
+
+# ---------------------------------------------------------------------------
+# paged slot memory (block-pool cache, CoW prefix sharing)
+# ---------------------------------------------------------------------------
+
+def _paged_svc(**kw):
+    kw.setdefault("max_sessions", 8)
+    return _svc(paged=True, **kw)
+
+
+def test_paged_decode_bit_identical_to_dense():
+    """The tentpole ratchet: the paged service's stream is bit-identical
+    to the dense layout through open/decode/park/evict/resume churn."""
+    dense = _svc(max_sessions=8)
+    paged = _paged_svc()
+    assert paged.paged and not dense.paged
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, 64, size=n).astype(np.int32)
+               for n in (5, 11, 3)]
+    outs = {}
+    for svc in (dense, paged):
+        sids = [svc.open_session(p) for p in prompts]
+        got = {s: [] for s in sids}
+        for _ in range(4):  # 3 sessions on 2 slots: every round churns
+            for sid in sids:
+                got[sid].extend(svc.decode({sid: 5})[sid])
+        outs[svc] = [got[s] for s in sids]
+    assert outs[dense] == outs[paged]
+    assert paged.stats()["evictions"] >= 1
+    paged.pool.check()
+
+
+def test_paged_admission_is_o1_and_parked_sessions_hold_no_blocks():
+    """Admission sets up a block table instead of scrubbing an O(seq_cap)
+    column, and a parked paged session owns ZERO device blocks — its
+    bytes live in the host blob only (the capacity lever)."""
+    svc = _paged_svc()
+    a = svc.open_session(np.array([1, 2, 3], np.int32))
+    svc.decode({a: 10})
+    held = len(svc._blocks[a])
+    assert held == -(-svc.sessions[a].steps // svc.block_len)
+    live0 = svc.pool.n_live
+    svc.park(a)
+    assert svc._blocks.get(a, []) == []  # blocks freed on park
+    assert svc.pool.n_live == live0 - held
+    assert PAGED_MARKER in svc.parking[a]  # blob carries pool geometry
+    # table row of the freed slot is all-NULL: masked writes of future
+    # tenants land in the reserved block 0, never in freed memory
+    assert (svc._table == 0).all(axis=1).any()
+    svc.decode({a: 3})  # resume reallocates and continues
+
+
+def test_paged_parked_bytes_gauge_tracks_blob_sizes():
+    """parked_bytes is a registry gauge kept incrementally in sync with
+    the parking lot (satellite: obs export)."""
+    svc = _paged_svc()
+    g = svc.metrics_registry.gauge("parked_bytes", service="lm")
+    assert g.value == 0
+    a = svc.open_session(np.array([1, 2, 3], np.int32))
+    svc.decode({a: 6})
+    svc.park(a)
+    want = parked_bytes(svc.parking[a])
+    assert svc.parked_blob_bytes == want and g.value == want
+    svc.decode({a: 1})  # resume takes the blob back
+    assert svc.parked_blob_bytes == 0 and g.value == 0
+    svc.park(a)
+    svc.close(a)
+    assert svc.parked_blob_bytes == 0 and g.value == 0
+
+
+def test_paged_spill_restore_roundtrip(tmp_path):
+    """Paged sessions spill block-granular blobs and resume bit-identically
+    in a fresh paged service (different physical block ids are fine — the
+    table indirection is invisible to the program)."""
+    ctl = _svc(max_sessions=8)
+    c = ctl.open_session(np.array([8, 3], np.int32))
+    want = ctl.decode({c: 14})[c]
+
+    svc = _paged_svc()
+    s = svc.open_session(np.array([8, 3], np.int32))
+    first = svc.decode({s: 5})[s]
+    path = str(tmp_path / "paged.npz")
+    svc.spill_parking(path, include_bound=True)
+
+    fresh = _paged_svc()
+    assert fresh.restore_parking(path) == [s]
+    assert fresh.outputs[s] == first
+    assert first + fresh.decode({s: 9})[s] == want
+
+
+def test_paged_restore_refuses_layout_and_geometry_mismatch(tmp_path):
+    """Satellite: a spill from a differently-paged grid is refused
+    atomically — paged<->dense and block_len/n_blocks mismatches alike."""
+    paged = _paged_svc()
+    s = paged.open_session(np.array([1, 2], np.int32))
+    paged.decode({s: 8})
+    ppath = str(tmp_path / "paged.npz")
+    paged.spill_parking(ppath, include_bound=True)
+
+    dense = _svc(max_sessions=8)
+    d = dense.open_session(np.array([1, 2], np.int32))
+    dense.decode({d: 8})
+    dpath = str(tmp_path / "dense.npz")
+    dense.spill_parking(dpath, include_bound=True)
+
+    for svc, path in ((_svc(max_sessions=8), ppath),          # dense <- paged
+                      (_paged_svc(), dpath),                  # paged <- dense
+                      (_paged_svc(block_len=8), ppath),       # block_len
+                      (_paged_svc(n_blocks=2), ppath)):       # pool too small
+        with pytest.raises(ValueError, match="incompatible|does not fit"):
+            svc.restore_parking(path)
+        assert not svc.sessions and svc.sched.live_sessions == 0
+        ok = svc.open_session(np.array([3], np.int32))  # service untouched
+        assert len(svc.decode({ok: 2})[ok]) == 2
+
+
+def test_paged_pool_exhaustion_is_admission_backpressure():
+    """A pool too small for a new session raises AdmissionError at open
+    (not a mid-decode crash), rolls the admission back, and the service
+    keeps working; closing a session frees its blocks for the next one."""
+    # 3 blocks: one 20-token session holds ceil(21/16)=2, a second 20-token
+    # prompt needs 2 more -> exhausted mid-prefill
+    svc = _paged_svc(n_blocks=3)
+    long = np.arange(1, 21, dtype=np.int32)
+    a = svc.open_session(long)
+    svc.decode({a: 12})
+    # a DISJOINT prompt (no prefix sharing rescue) needs 2 fresh blocks
+    # with only 1 free -> exhausted mid-prefill
+    with pytest.raises(AdmissionError):
+        svc.open_session(np.arange(40, 60, dtype=np.int32))
+    assert len(svc.sessions) == 1 and svc.sched.live_sessions == 1
+    svc.pool.check()
+    assert svc.decode({a: 2})[a]  # survivor unaffected
+    svc.close(a)
+    b = svc.open_session(long)  # freed blocks make room
+    assert len(svc.decode({b: 2})[b]) == 2
+
+
+def test_paged_prefix_sharing_cow():
+    """Two sessions with the same prompt share its full blocks (refcounted,
+    registry-pinned) and still emit identical streams; the divergent
+    suffix lives in private blocks via copy-on-write."""
+    svc = _paged_svc(seq_cap=96)
+    prompt = np.arange(1, 40, dtype=np.int32)  # 2 full 16-blocks + tail
+    a = svc.open_session(prompt)
+    out_a = svc.decode({a: 6})[a]
+    assert len(svc._prefix) == 2  # full prompt blocks registered
+    live0 = svc.pool.n_live
+    b = svc.open_session(prompt)
+    # the second session adopted the 2 shared blocks instead of refilling
+    assert svc.sessions[b].steps >= 2 * svc.block_len
+    assert svc.pool.n_shared >= 2
+    assert svc.pool.n_live <= live0 + 2  # tail + first decode block only
+    out_b = svc.decode({b: 6})[b]
+    assert out_a == out_b  # CoW: b's writes never touched a's blocks
+    hits = svc.metrics_registry.counter(
+        "prefix_block_hits_total", service="lm").value
+    assert hits >= 2
+    svc.close(a)
+    svc.close(b)
+    svc.pool.check()

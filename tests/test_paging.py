@@ -1,0 +1,186 @@
+"""Block-pool allocator: refcount/free-list invariants under random
+alloc/free/fork(CoW)/write interleavings (satellite of the paged slot
+memory PR), plus PrefixCache longest-match/LRU/registry-pin semantics.
+
+The hypothesis property drives the allocator like the LM service does —
+sessions allocate chains, fork shares blocks, writes go through the
+``writable`` CoW gate, frees drop whole suffixes — and after EVERY
+operation asserts the pool's own ``check()`` audit (free list and
+refcounts reconcile, nothing double-circulates, NULL stays out) plus an
+external model: refcounts must equal the number of model-side owners.
+"""
+
+import pytest
+
+from _hyp import given, settings, st
+from repro.sessions.paging import (
+    NULL_BLOCK,
+    BlockPool,
+    PoolExhausted,
+    PrefixCache,
+    prefix_keys,
+)
+
+settings.register_profile("paging", deadline=None, max_examples=60)
+settings.load_profile("paging")
+
+
+# ---------------------------------------------------------------------------
+# unit semantics
+# ---------------------------------------------------------------------------
+
+def test_alloc_free_roundtrip():
+    pool = BlockPool(3)
+    assert pool.extent == 4 and pool.n_free == 3
+    a = pool.alloc()
+    assert a != NULL_BLOCK and pool.refcount(a) == 1
+    assert pool.n_live == 1
+    pool.free(a)
+    assert pool.n_free == 3 and pool.refcount(a) == 0
+    pool.check()
+
+
+def test_exhaustion_raises_pool_exhausted():
+    from repro.sessions import AdmissionError
+    pool = BlockPool(2)
+    pool.alloc(), pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+    # capacity pressure surfaces through the admission back-pressure type
+    assert issubclass(PoolExhausted, AdmissionError)
+
+
+def test_double_free_and_null_free_refused():
+    pool = BlockPool(2)
+    a = pool.alloc()
+    pool.free(a)
+    with pytest.raises(ValueError):
+        pool.free(a)
+    with pytest.raises(ValueError):
+        pool.free(NULL_BLOCK)
+    with pytest.raises(ValueError):
+        pool.ref(NULL_BLOCK)
+    pool.check()
+
+
+def test_writable_cow_contract():
+    pool = BlockPool(4)
+    a = pool.alloc()
+    # exclusive: write in place
+    assert pool.writable(a) == (a, None)
+    # shared: the writer gets a fresh block, the other owner keeps a
+    pool.ref(a)
+    assert pool.n_shared == 1
+    new, src = pool.writable(a)
+    assert src == a and new != a and new != NULL_BLOCK
+    assert pool.refcount(a) == 1 and pool.refcount(new) == 1
+    assert pool.n_shared == 0
+    pool.check()
+
+
+# ---------------------------------------------------------------------------
+# the allocator property (satellite 3)
+# ---------------------------------------------------------------------------
+
+_OPS = st.lists(
+    st.tuples(st.sampled_from(["alloc", "free", "fork", "write"]),
+              st.integers(0, 10 ** 6)),
+    min_size=1, max_size=120)
+
+
+@given(ops=_OPS, n_blocks=st.integers(1, 12))
+def test_allocator_never_leaks_or_double_frees(ops, n_blocks):
+    """Random interleavings of session-shaped operations keep the pool
+    reconciled: model-side ownership == refcounts == free-list complement.
+
+    Model: ``owners[bid]`` counts how many model handles reference a
+    block.  alloc creates a handle; free drops a random handle; fork
+    duplicates one (prefix sharing); write pushes one through the CoW
+    gate (possibly migrating the handle to a fresh block)."""
+    pool = BlockPool(n_blocks)
+    handles: list[int] = []  # one entry per model-side owner
+    for op, r in ops:
+        if op == "alloc":
+            try:
+                handles.append(pool.alloc())
+            except PoolExhausted:
+                # exhaustion must be consistent with the model: every
+                # block is owned by someone
+                assert len(set(handles)) == n_blocks
+        elif op == "free" and handles:
+            pool.free(handles.pop(r % len(handles)))
+        elif op == "fork" and handles:
+            handles.append(pool.ref(handles[r % len(handles)]))
+        elif op == "write" and handles:
+            i = r % len(handles)
+            try:
+                new, src = pool.writable(handles[i])
+            except PoolExhausted:
+                assert len(set(handles)) == n_blocks
+                continue
+            if src is not None:  # CoW: this handle migrated
+                assert pool.refcount(src) >= 1
+            handles[i] = new
+            # after the gate the writer ALWAYS holds an exclusive block
+            assert pool.refcount(new) >= 1
+        # the pool's own audit after every single operation
+        pool.check()
+        # external reconciliation: refcounts == model ownership
+        for bid in range(1, pool.extent):
+            assert pool.refcount(bid) == handles.count(bid)
+        assert pool.n_live == len(set(handles))
+        assert pool.n_free == n_blocks - len(set(handles))
+    # drain: everything frees cleanly, nothing leaked
+    while handles:
+        pool.free(handles.pop())
+    pool.check()
+    assert pool.n_free == n_blocks
+
+
+# ---------------------------------------------------------------------------
+# the exact-prefix registry
+# ---------------------------------------------------------------------------
+
+def test_prefix_keys_are_exact_chains():
+    keys = prefix_keys([1, 2, 3, 4, 5], 2)
+    assert keys == [(1, 2), (1, 2, 3, 4)]  # full blocks only, chained
+    assert prefix_keys([1], 2) == []
+
+
+def test_prefix_cache_longest_match_and_pins():
+    pool = BlockPool(8)
+    cache = PrefixCache(pool)
+    chain = prefix_keys(list(range(6)), 2)  # 3 full blocks
+    bids = [pool.alloc() for _ in chain]
+    for key, bid in zip(chain, bids):
+        cache.insert(key, bid)  # registry takes its own reference
+    assert all(pool.refcount(b) == 2 for b in bids)
+    # donor parks/closes: drops its refs, registry pins keep blocks live
+    for b in bids:
+        pool.free(b)
+    assert pool.n_live == 3
+    # a new session adopting the chain gets fresh references
+    hits = cache.match(chain)
+    assert hits == bids and all(pool.refcount(b) == 2 for b in bids)
+    # divergent chain: longest-prefix stops at the first miss
+    other = prefix_keys([0, 1, 2, 3, 9, 9], 2)
+    hits2 = cache.match(other)
+    assert hits2 == bids[:2]
+    for b in hits + hits2:
+        pool.free(b)
+    pool.check()
+
+
+def test_prefix_cache_lru_release_frees_unshared():
+    pool = BlockPool(4)
+    cache = PrefixCache(pool)
+    a, b = pool.alloc(), pool.alloc()
+    cache.insert((1,), a)
+    cache.insert((2,), b)
+    pool.free(a), pool.free(b)  # only registry pins remain
+    assert pool.n_live == 2
+    assert cache.release_lru()  # evicts (1,) — the least recently matched
+    assert pool.refcount(a) == 0 and pool.refcount(b) == 1
+    cache.clear()
+    assert pool.n_free == 4 and not cache.release_lru()
+    pool.check()

@@ -343,3 +343,95 @@ def test_zero_from_column_canonicalizes_rejected_rows():
             assert np.array_equal(np.asarray(a), np.asarray(b))
     finally:
         svc.close(sid)
+
+
+# ---------------------------------------------------------------------------
+# paged slot memory: speculative rollback frees blocks instead of zeroing
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _paged_services(arch):
+    """(dense reference, paged speculative target) pair per arch."""
+    bundle, params = _setup(arch)
+    mk = lambda **kw: LMSessionService(bundle, params, n_slots=2, seq_cap=96,
+                                       t_chunk=8, max_sessions=8, **kw)
+    return mk(), mk(paged=True)
+
+
+# gqa verifies on the paged decode_scan itself; ssm (hybrid mamba+attn)
+# is the mixed case — pooled KV leaves + recurrent state — and runs the
+# paged alive-masked verify scan
+@pytest.mark.parametrize("arch", ["gqa", "ssm"])
+def test_paged_speculative_bit_identical_and_frees_rejected_blocks(arch):
+    """Paged speculative decode emits the dense plain-greedy stream for
+    every drafter, and rollback returns rejected-suffix blocks to the pool
+    (block count tracks ceil(steps/block_len) after every call)."""
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    want = _reference(arch, prompt, 30)
+    _, svc = _paged_services(arch)
+    assert svc.paged
+    for name, dr in _drafters(prompt, want).items():
+        sp = SpeculativeDecoder(svc, dr, k=4)
+        sid = svc.open_session(prompt)
+        try:
+            got = sp.decode({sid: 12})[sid]
+            sess = svc.sessions[sid]
+            assert len(svc._blocks[sid]) == \
+                -(-sess.steps // svc.block_len), (arch, name)
+            got += sp.decode({sid: 18})[sid]  # split mid-stream
+        finally:
+            svc.close(sid)
+        assert got == want, (arch, name)
+        svc.pool.check()
+    assert svc.pool.n_live == len(svc._prefix or ())
+
+
+def test_paged_parallel_verify_matches_dense_parallel():
+    """The paged parallel chunk verify computes the same lane graph on the
+    same gathered bytes, so its stream is identical to the DENSE parallel
+    mode's for the same drafter (and rejected blocks are trimmed)."""
+    prompt = np.array([2, 7, 1], np.int32)
+    dense, paged = _paged_services("gqa")
+    outs = []
+    for svc in (dense, paged):
+        sp = SpeculativeDecoder(svc, ngram_drafter(), k=4, verify="parallel")
+        sid = svc.open_session(prompt)
+        other = svc.open_session(np.array([9], np.int32))
+        try:
+            got = sp.decode({sid: 7})[sid]
+            svc.park(sid)              # mid-draft eviction
+            svc.decode({other: 3})     # neighbor stomps the grid
+            got += sp.decode({sid: 19})[sid]
+        finally:
+            svc.close(sid)
+            svc.close(other)
+        outs.append(got)
+        assert len(got) == 26
+    assert outs[0] == outs[1]
+    paged.pool.check()
+
+
+def test_paged_spec_spill_restore_mid_draft(tmp_path):
+    """A paged session interrupted mid-speculation spills block-granular
+    blobs and resumes the exact dense stream in a fresh paged service."""
+    prompt = np.array([5, 6], np.int32)
+    want = _reference("gqa", prompt, 24)
+    bundle, params = _setup("gqa")
+    mk = lambda: LMSessionService(bundle, params, n_slots=2, seq_cap=96,
+                                  t_chunk=8, max_sessions=8, paged=True)
+    svc = mk()
+    sp = SpeculativeDecoder(svc, ngram_drafter(), k=3)
+    sid = svc.open_session(prompt)
+    got = sp.decode({sid: 9})[sid]
+    path = str(tmp_path / "paged_spec.npz")
+    svc.spill_parking(path, include_bound=True)
+
+    fresh = mk()
+    assert fresh.restore_parking(path) == [sid]
+    sp2 = SpeculativeDecoder(fresh, ngram_drafter(), k=5)
+    try:
+        got += sp2.decode({sid: 15})[sid]
+    finally:
+        fresh.close(sid)
+    assert got == want
+    fresh.pool.check()
