@@ -30,6 +30,13 @@ Gates (CI fails the job instead of merely uploading the artifact):
     bit-identity assertion recorded True, and must not fall below 1/3 of
     the committed baseline's speedup (degradation guard, sized to sit
     outside shared-runner timing noise);
+  * serving plane (--serve BENCH_serve_load.json) — the async
+    continuous-batching load replay must be present (section-missing is
+    a hard fail), bit-identical to its synchronous control, lose no
+    sessions to churn, keep its TTFR tail bounded and its goodput above
+    an absolute floor; p99 TTFR and goodput are additionally held
+    within ratio of the committed baseline like-for-like (same smoke
+    flag);
   * dispatch-latency telemetry — each section's ``dispatch_latency``
     summary (the repro.obs per-dispatch histograms, post-warmup) must be
     schema-valid (count > 0, p50 <= p99, every by_shape entry carrying
@@ -67,6 +74,16 @@ BYTES_RATIO_MAX = 2.0
 NOISE_FLOOR = 4.0  # don't fail normalized-cost ratios in the noise band
 TAIL_RATIO_MAX = 5.0   # dispatch latency p99 <= 5x p50 ...
 TAIL_SLACK_US = 2000.0  # ... OR within p50 + 2ms (shared-runner hiccups)
+# serving-plane load bench (--serve BENCH_serve_load.json).  TTFR under
+# as-fast-as-possible replay is queueing-dominated, so its tail gate is
+# wider than the per-dispatch one; the relative gates vs baseline apply
+# like-for-like only (same smoke flag), since a 3k-session smoke replay's
+# queueing regime is not comparable to the 100k full run's.
+TTFR_TAIL_RATIO = 6.0      # TTFR p99 <= 6x p50 ...
+TTFR_SLACK_US = 5_000_000.0  # ... OR within p50 + 5s
+TTFR_P99_RATIO_MAX = 3.0   # vs baseline, like-for-like
+GOODPUT_RATIO_MIN = 3.0    # >= baseline/3, like-for-like
+GOODPUT_FLOOR_TOK_S = 30.0  # absolute catastrophic-regression floor
 
 
 def _load(path):
@@ -274,12 +291,75 @@ def check_kernels(fresh: dict, base: dict | None) -> list[str]:
     return errors
 
 
+def check_serve(fresh: dict, base: dict | None) -> list[str]:
+    """Gate the async serving plane load bench (BENCH_serve_load.json).
+
+    Matching the PR 7 convention, a missing section is a hard fail — it
+    means the load replay silently didn't run or the artifact is stale.
+    Absolute gates (bit-identity, completion, TTFR schema + tail,
+    goodput floor) always apply; the p99-TTFR and goodput gates vs the
+    committed baseline apply like-for-like (same smoke flag) only."""
+    errors = []
+    sec = fresh.get("serve_load")
+    if sec is None:
+        return ["serve: fresh results have no 'serve_load' section "
+                "(load replay did not run?)"]
+    if not sec.get("bit_identical"):
+        errors.append("serve: plane token streams not bit-identical to the "
+                      "synchronous control replay")
+    n, done = sec.get("sessions", 0), sec.get("completed", -1)
+    if done != n:
+        errors.append(f"serve: {done}/{n} sessions completed (churn must "
+                      f"lose no sessions — retries, not drops)")
+    ttfr = sec.get("ttfr")
+    if not ttfr or not all(k in ttfr for k in ("count", "p50_us", "p99_us")):
+        errors.append(f"serve: ttfr summary malformed: {ttfr!r}")
+        return errors
+    count, p50, p99 = ttfr["count"], ttfr["p50_us"], ttfr["p99_us"]
+    if not (count > 0 and 0 < p50 <= p99):
+        errors.append(f"serve: ttfr quantiles inconsistent "
+                      f"(n={count}, p50={p50}, p99={p99})")
+        return errors
+    limit = max(TTFR_TAIL_RATIO * p50, p50 + TTFR_SLACK_US)
+    if p99 > limit:
+        errors.append(f"serve: TTFR tail p99={p99:.0f}us > "
+                      f"max({TTFR_TAIL_RATIO}x p50, p50 + "
+                      f"{TTFR_SLACK_US:.0f}us) = {limit:.0f}us "
+                      f"(p50={p50:.0f}us)")
+    goodput = sec.get("goodput_tok_s", 0.0)
+    if goodput < GOODPUT_FLOOR_TOK_S:
+        errors.append(f"serve: goodput {goodput:.1f} tok/s < absolute "
+                      f"floor {GOODPUT_FLOOR_TOK_S} tok/s")
+    bsec = (base or {}).get("serve_load")
+    comparable = bsec is not None and bsec.get("smoke") == sec.get("smoke")
+    if not comparable:
+        print("[gate] SKIP serve relative gates: no comparable baseline "
+              "(smoke flags differ or baseline missing)")
+    else:
+        bp99 = bsec.get("ttfr", {}).get("p99_us")
+        if bp99 and p99 > TTFR_P99_RATIO_MAX * bp99:
+            errors.append(f"serve: TTFR p99 {p99:.0f}us > "
+                          f"{TTFR_P99_RATIO_MAX}x baseline {bp99:.0f}us")
+        bgood = bsec.get("goodput_tok_s")
+        if bgood and goodput < bgood / GOODPUT_RATIO_MIN:
+            errors.append(f"serve: goodput {goodput:.1f} tok/s < baseline "
+                          f"{bgood:.1f} / {GOODPUT_RATIO_MIN} (regression)")
+    print(f"[gate] serve: {done}/{n} sessions, goodput={goodput} tok/s, "
+          f"TTFR p50={p50:.0f}us p99={p99:.0f}us limit={limit:.0f}us, "
+          f"retries={sec.get('open_retries')}, "
+          f"bit_identical={sec.get('bit_identical')}")
+    return errors
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default="BENCH_session_throughput.json")
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--kernels", default=None, help="BENCH_kernels.json to gate")
     ap.add_argument("--kernels-baseline", default=None)
+    ap.add_argument("--serve", default=None,
+                    help="BENCH_serve_load.json to gate")
+    ap.add_argument("--serve-baseline", default=None)
     args = ap.parse_args()
     fresh, base = _load(args.fresh), _load(args.baseline)
     errors = check(fresh, base)
@@ -291,6 +371,14 @@ def main():
             with open(args.kernels_baseline) as f:
                 kbase = json.load(f)
         errors += check_kernels(kfresh, kbase)
+    if args.serve:
+        with open(args.serve) as f:
+            sfresh = json.load(f)
+        sbase = None
+        if args.serve_baseline:
+            with open(args.serve_baseline) as f:
+                sbase = json.load(f)
+        errors += check_serve(sfresh, sbase)
     for name in ("tcn", "lm"):
         f = fresh.get(name, {})
         speedup = f.get("speedup_160_vs_1") or f.get("speedup_16_vs_1")

@@ -1,0 +1,261 @@
+"""Trace-driven load bench for the async serving plane (serving/plane.py).
+
+Generates a deterministic request trace — Poisson arrivals, heavy-tailed
+(Pareto) session lengths, diurnal tenant skew (tenant popularity rotates
+sinusoidally over the virtual day, so load concentrates on different
+tenants in different phases of the trace) — and replays it as fast as
+possible through a ``ServingPlane`` over bounded paged LM slot grids:
+100k+ sessions (``--smoke``: 3k) churning through ``workers x n_slots``
+compiled lanes with ``max_sessions`` bounding the live set, so admission
+back-pressure (``Rejected``, retried with backoff) is part of steady
+state, not an error path.
+
+Reported through the ``repro.obs`` registry and gated by
+``check_regression.py --serve``:
+
+  * **TTFR** — time-to-first-result per session, from the client's first
+    open attempt (admission retries included: back-pressure IS latency)
+    to its first batched push result; p50/p99 from a registry histogram;
+  * **goodput-under-churn** — completed tokens/s of wall time over the
+    whole replay, retry stalls and all;
+  * **bit-identity** — a deterministic sample of sessions is re-decoded
+    alone on a synchronous one-slot control service; the plane's token
+    streams must match exactly (continuous batching only changes when
+    work is grouped, never what a lane computes).
+
+Emits ``BENCH_serve_load.json`` + ``BENCH_serve_metrics.json`` (registry
+snapshot); ``--trace out.json`` additionally exports a Perfetto span
+trace of the replay.
+
+    PYTHONPATH=src python -m benchmarks.serve_load [--smoke] \\
+        [--sessions N] [--workers W] [--trace out.json]
+"""
+
+import argparse
+import asyncio
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import RuntimeConfig, get_config
+from repro.models import build_bundle
+from repro.obs import Tracer
+from repro.obs.metrics import default_registry
+from repro.serving import Rejected, ServingPlane
+from repro.sessions import LMSessionService
+
+OUT_PATH = "BENCH_serve_load.json"
+METRICS_PATH = "BENCH_serve_metrics.json"
+
+N_SESSIONS = 100_000
+N_TENANTS = 64
+SEQ_CAP = 64
+T_CHUNK = 4        # decode chunk per dispatch AND per-push token budget
+MAX_LEN = 40       # session length cap (< seq_cap - 1 with 1-token prompts)
+WINDOW = 256       # concurrent client coroutines (the arrival window)
+BIT_SAMPLE = 32    # sessions re-decoded on the synchronous control
+DAY = 1000.0       # virtual-seconds per diurnal period
+
+
+def gen_trace(n_sessions: int, seed: int = 0) -> list[dict]:
+    """The deterministic request trace.  Arrival times are a Poisson
+    process in virtual time; lengths are 1 + Pareto (mostly a few tokens,
+    a long tail up to MAX_LEN); each arrival picks its tenant from a
+    diurnal popularity profile (each tenant's weight peaks at its own
+    phase of the virtual day)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(scale=DAY / max(n_sessions / 4, 1),
+                           size=n_sessions)
+    at = np.cumsum(gaps)
+    lengths = 1 + np.minimum(rng.pareto(1.5, n_sessions) * 3,
+                             MAX_LEN - 1).astype(np.int64)
+    phase = 2 * np.pi * (at[:, None] / DAY
+                         + np.arange(N_TENANTS)[None, :] / N_TENANTS)
+    w = 1.0 + 0.9 * np.sin(phase)  # (n_sessions, N_TENANTS) diurnal skew
+    w /= w.sum(axis=1, keepdims=True)
+    u = rng.random(n_sessions)
+    tenants = (w.cumsum(axis=1) < u[:, None]).sum(axis=1)
+    prompts = rng.integers(1, 32, size=n_sessions)
+    return [{"t": float(at[i]), "tenant": int(tenants[i]),
+             "len": int(lengths[i]), "prompt": int(prompts[i])}
+            for i in range(n_sessions)]
+
+
+def _make_worker(bundle, params, n_slots: int, runtime: RuntimeConfig,
+                 registry):
+    return LMSessionService(
+        bundle, params, n_slots=n_slots, seq_cap=SEQ_CAP, t_chunk=T_CHUNK,
+        max_sessions=8 * n_slots,  # the bounded live set: churn source
+        runtime=runtime, metrics=registry)
+
+
+async def _replay(plane: ServingPlane, trace: list[dict], registry,
+                  sample_every: int) -> dict:
+    """Replay the trace through the plane with a bounded arrival window.
+    Returns per-session token streams for the bit-identity sample plus
+    churn counters."""
+    h_ttfr = registry.histogram("serve_ttfr_us")
+    sem = asyncio.Semaphore(WINDOW)
+    sampled: dict[int, list[int]] = {}
+    counters = {"retries": 0, "completed": 0, "tokens": 0}
+
+    async def client(i: int, req: dict):
+        try:
+            t0 = time.perf_counter()
+            attempt = 0
+            while True:  # admission back-pressure: retry with backoff
+                try:
+                    psid = await plane.open_session(
+                        np.array([req["prompt"]], np.int32),
+                        tenant=req["tenant"])
+                    break
+                except Rejected as e:
+                    if not e.retryable:
+                        raise
+                    counters["retries"] += 1
+                    attempt += 1
+                    await asyncio.sleep(min(0.0002 * attempt, 0.01))
+            toks: list[int] = []
+            first = True
+            left = req["len"]
+            while left > 0:
+                toks += await plane.push(psid, min(left, T_CHUNK))
+                if first:
+                    h_ttfr.record((time.perf_counter() - t0) * 1e6)
+                    first = False
+                left -= min(left, T_CHUNK)
+            await plane.close(psid)
+            counters["completed"] += 1
+            counters["tokens"] += len(toks)
+            if i % sample_every == 0:
+                sampled[i] = toks
+        finally:
+            sem.release()
+
+    # acquire BEFORE spawning so only ~WINDOW coroutines exist at once
+    # (100k pre-built coroutine objects would dominate memory, not serving)
+    tasks = []
+    for i, req in enumerate(trace):
+        await sem.acquire()
+        tasks.append(asyncio.ensure_future(client(i, req)))
+    await asyncio.gather(*tasks)
+    return {"sampled": sampled, **counters}
+
+
+def _sync_control(bundle, params, trace, sampled, runtime) -> bool:
+    """Re-decode every sampled session ALONE on a one-slot synchronous
+    service: the strictest control — no plane, no batching, no churn."""
+    for i, got in sorted(sampled.items()):
+        req = trace[i]
+        svc = LMSessionService(bundle, params, n_slots=1, seq_cap=SEQ_CAP,
+                               t_chunk=T_CHUNK, max_sessions=1,
+                               runtime=runtime)
+        sid = svc.open_session(np.array([req["prompt"]], np.int32))
+        want = svc.decode({sid: req["len"]})[sid]
+        svc.close(sid)
+        if got != want:
+            print(f"# BIT-IDENTITY FAIL session {i}: plane={got} "
+                  f"sync={want}", flush=True)
+            return False
+    return True
+
+
+def run(n_sessions: int, n_workers: int, n_slots: int, smoke: bool,
+        trace_path: str | None, seed: int = 0) -> dict:
+    registry = default_registry()
+    runtime = RuntimeConfig(paged=True)  # paged admission is the O(1) path
+    cfg = get_config("olmo-1b").smoke().replace(
+        n_layers=1, d_model=16, d_ff=32, vocab_size=32, head_dim=8)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(seed))
+    trace = gen_trace(n_sessions, seed=seed)
+    sample_every = max(1, n_sessions // BIT_SAMPLE)
+
+    workers = [_make_worker(bundle, params, n_slots, runtime, registry)
+               for _ in range(n_workers)]
+    tracer = Tracer(enabled=bool(trace_path))
+    plane = ServingPlane(workers, max_queue=4 * WINDOW, runtime=runtime,
+                         metrics=registry, tracer=tracer)
+
+    # warm the compile caches so the replay measures serving, not XLA
+    warm = _make_worker(bundle, params, n_slots, runtime, registry)
+    wsid = warm.open_session(np.array([1], np.int32))
+    warm.decode({wsid: T_CHUNK})
+    registry.histogram("serve_ttfr_us").reset()
+
+    async def main():
+        async with plane:
+            return await _replay(plane, trace, registry, sample_every)
+
+    t0 = time.perf_counter()
+    res = asyncio.run(main())
+    wall = time.perf_counter() - t0
+    if trace_path:
+        tracer.export(trace_path)
+        print(f"# wrote {trace_path}", flush=True)
+
+    identical = _sync_control(bundle, params, trace, res["sampled"], runtime)
+    h = registry.histogram("serve_ttfr_us")
+    snap = registry.snapshot()
+    batches = sum(e["value"] for e in snap.get("plane_batches_total", []))
+    lanes = snap.get("plane_batch_lanes", [{}])[0]
+    rejected = {e["labels"]["reason"]: e["value"]
+                for e in snap.get("plane_rejected_total", [])}
+    out = {
+        "smoke": smoke, "config": cfg.name, "sessions": n_sessions,
+        "tenants": N_TENANTS, "workers": n_workers, "n_slots": n_slots,
+        "max_live_sessions": n_workers * 8 * n_slots,
+        "wall_s": round(wall, 3),
+        "completed": res["completed"],
+        "tokens_total": res["tokens"],
+        "goodput_tok_s": round(res["tokens"] / wall, 1),
+        "open_retries": res["retries"],
+        "rejected_total": rejected,
+        "batches_total": int(batches),
+        "mean_batch_lanes": round(lanes.get("sum", 0)
+                                  / max(lanes.get("count", 1), 1), 2),
+        "ttfr": {"count": h.count, "p50_us": round(h.percentile(50), 1),
+                 "p99_us": round(h.percentile(99), 1),
+                 "mean_us": round(h.mean, 1)},
+        "bit_identical": identical,
+        "bit_sample": len(res["sampled"]),
+    }
+    print(f"# serve_load: {res['completed']}/{n_sessions} sessions, "
+          f"{out['goodput_tok_s']} tok/s, TTFR p50={out['ttfr']['p50_us']}us "
+          f"p99={out['ttfr']['p99_us']}us, {res['retries']} admission "
+          f"retries, {out['batches_total']} batches "
+          f"(mean {out['mean_batch_lanes']} lanes), "
+          f"bit_identical={identical}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="3k sessions on a smaller grid (CI)")
+    ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--trace", default=None,
+                    help="export a Perfetto span trace of the replay")
+    args = ap.parse_args()
+    n_sessions = args.sessions if args.sessions is not None else \
+        (3_000 if args.smoke else N_SESSIONS)
+    n_slots = args.slots if args.slots is not None else \
+        (8 if args.smoke else 16)
+    out = run(n_sessions, args.workers, n_slots, args.smoke, args.trace)
+    with open(OUT_PATH, "w") as f:
+        json.dump({"serve_load": out}, f, indent=2)
+    print(f"# wrote {OUT_PATH}", flush=True)
+    with open(METRICS_PATH, "w") as f:
+        json.dump(default_registry().snapshot(), f, indent=2)
+    print(f"# wrote {METRICS_PATH}", flush=True)
+    if not out["bit_identical"]:
+        raise SystemExit("serve_load: plane output diverged from the "
+                         "synchronous control")
+
+
+if __name__ == "__main__":
+    main()

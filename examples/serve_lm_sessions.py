@@ -17,11 +17,19 @@ cache, a "time chunk" is a token chunk:
   * bit-identical resume: an evicted session continues in ANY free slot
     with exactly the token stream of an uninterrupted run;
   * spill/restore: the parking lot survives process restarts through
-    checkpoint/store.
+    checkpoint/store;
+  * async serving plane: concurrent clients push through ``ServingPlane``
+    (serving/plane.py) and the continuous batcher groups them into shared
+    dispatches, bit-identically to pushing alone.
+
+The service is driven through the unified ``SessionService`` protocol
+surface — ``push({sid: n_tokens})`` is the LM spelling of the protocol's
+hot path (README "Serving plane").
 
     PYTHONPATH=src python examples/serve_lm_sessions.py
 """
 
+import asyncio
 import tempfile
 
 import numpy as np
@@ -30,6 +38,7 @@ import jax
 
 from repro.configs import get_config
 from repro.models import build_bundle
+from repro.serving import ServingPlane
 from repro.sessions import (
     LMSessionService,
     SpeculativeDecoder,
@@ -56,7 +65,7 @@ def main():
           f"dispatches (pow2 chunks; was 33 scan steps)")
     b = svc.open_session(rng.integers(0, 64, size=3).astype(np.int32))
     d0 = svc.dispatches
-    out = svc.decode({a: 24, b: 24})
+    out = svc.push({a: 24, b: 24})  # protocol verb; decode() is the alias
     print(f"   2 sessions x 24 tokens in {svc.dispatches - d0} dispatches "
           f"(vs 24 per-token)")
     print(f"   a: {out[a][:8]}...  b: {out[b][:8]}...")
@@ -91,6 +100,32 @@ def main():
               f"session {restored[0]} continued with {tail}")
     print(f"   stats: {svc.stats()['evictions']} evictions, "
           f"{svc.stats()['dispatches']} dispatches total")
+
+    print("== async serving plane: concurrent clients, batched dispatches ==")
+
+    async def plane_demo():
+        worker = LMSessionService(bundle, params, n_slots=2, seq_cap=96,
+                                  t_chunk=16, max_sessions=6)
+
+        async def client(tenant, n):
+            psid = await plane.open_session(
+                rng.integers(0, 64, size=2).astype(np.int32), tenant=tenant)
+            toks = await plane.push(psid, n)   # grouped with other clients
+            await plane.close(psid)
+            return toks
+
+        async with ServingPlane(worker) as plane:
+            d0 = worker.dispatches
+            streams = await asyncio.gather(client("alice", 8),
+                                           client("bob", 8))
+            print(f"   2 concurrent clients x 8 tokens in "
+                  f"{worker.dispatches - d0} shared dispatches: "
+                  f"{[s[:4] for s in streams]}...")
+            lanes = plane.metrics()["plane_batch_lanes"][0]
+            print(f"   continuous batches of up to {int(lanes['max'])} "
+                  f"lanes, bit-identical to solo runs by contract")
+
+    asyncio.run(plane_demo())
     print("done.")
 
 

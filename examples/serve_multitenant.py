@@ -4,9 +4,11 @@ through the shared TCN embedder) while their audio streams are live; a
 burst of extra sessions then overflows the slot grid, forcing LRU eviction
 to the host parking lot and a bit-exact resume.
 
-Runs on the fused kernel fast path (``fused=True``: BN folded at
-construction, one fused block op per TCN block per tick — README "Kernel
-fast path"); set ``FUSED = False`` below for the per-sample scan body.
+Runs on the fused kernel fast path (``RuntimeConfig(fused=True)``: BN
+folded at construction, one fused block op per TCN block per tick —
+README "Kernel fast path"); pass ``fused=False`` below for the
+per-sample scan body.  The service is driven through the unified
+``SessionService`` protocol surface (``push`` — README "Serving plane").
 
     PYTHONPATH=src python examples/serve_multitenant.py
 """
@@ -15,19 +17,20 @@ import numpy as np
 
 import jax
 
-from repro.configs import get_config
+from repro.configs import RuntimeConfig, get_config
 from repro.data import KeywordAudio
 from repro.models import build_bundle
 from repro.models.tcn import tcn_empty_state
 from repro.sessions import StreamSessionService
 
-FUSED = True
+# one resolved view of the process switches (explicit > env > default)
+RUNTIME = RuntimeConfig.resolve(fused=True)
 
 
 def stream_clip(svc, sid, frames):
     """Push a whole (T, C_in) clip as ONE ragged chunk (ceil(T / t_chunk)
     jitted dispatches) and return the end-of-chunk view of the result."""
-    res = svc.push_audio({sid: frames})[sid]
+    res = svc.push({sid: frames})[sid]
     tl = res["tenant_logits"]
     return {"pred": res["pred"], "step": res["step"],
             "emb": res["emb"][-1], "logits": res["logits"][-1],
@@ -40,7 +43,7 @@ def main():
     params = bundle.init(jax.random.key(0))
     svc = StreamSessionService(bundle, params, tcn_empty_state(cfg),
                                n_slots=4, max_tenants=4, max_ways=4,
-                               max_sessions=12, fused=FUSED)
+                               max_sessions=12, runtime=RUNTIME)
     audio = KeywordAudio(n_classes=6, seed=0)
 
     print("== two tenants enroll different keyword sets, streams live ==")
@@ -67,10 +70,10 @@ def main():
 
     print("== slot pressure: 6 more sessions on a 4-slot grid ==")
     burst = [svc.open_session() for _ in range(6)]
-    svc.push_audio({sid: qa[:10] for sid in burst[:4]})  # one chunked tick
+    svc.push({sid: qa[:10] for sid in burst[:4]})  # one chunked tick
     print(f"   stats: {svc.stats()}")
     print(f"   alice is {svc.poll(alice)['state']} (evicted to the parking lot)")
-    ra2 = svc.push_audio({alice: qa[0]})[alice]  # resumes bit-exactly
+    ra2 = svc.push({alice: qa[0]})[alice]  # resumes bit-exactly
     print(f"   alice resumed at step {ra2['step']}, state "
           f"{svc.poll(alice)['state']}, pred way {ra2['pred']}")
     for sid in burst:

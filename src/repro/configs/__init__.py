@@ -1,7 +1,8 @@
 from repro.configs.registry import ASSIGNED, REGISTRY, get_config
+from repro.configs.runtime import RuntimeConfig
 from repro.configs.shapes import SHAPES, LONG_CONTEXT_ARCHS, ENCDEC_ENC_LEN, cells
 
 __all__ = [
-    "ASSIGNED", "REGISTRY", "get_config",
+    "ASSIGNED", "REGISTRY", "get_config", "RuntimeConfig",
     "SHAPES", "LONG_CONTEXT_ARCHS", "ENCDEC_ENC_LEN", "cells",
 ]

@@ -1,0 +1,103 @@
+"""Runtime configuration: ONE resolved view of the process-level switches.
+
+The subsystems historically each read their own environment variable at
+construction time — ``REPRO_PAGED`` (sessions/lm.py), ``REPRO_TCN_FUSED``
+(sessions/service.py), ``REPRO_KERNEL_BACKEND`` (kernels/dispatch.py),
+``REPRO_TRACE`` (obs/trace.py), ``REPRO_DEVICE_COUNTERS`` (obs/device.py).
+Five ad-hoc switches with five parsers is how a fleet config drifts, so
+they are consolidated here into one frozen dataclass with ONE documented
+precedence, applied field by field:
+
+    explicit kwarg  >  environment variable  >  default
+
+``RuntimeConfig.resolve(**overrides)`` implements the middle level: any
+field passed as a non-None override wins outright; the rest fall back to
+the environment and then to the dataclass default.  A directly
+constructed ``RuntimeConfig(...)`` is *fully explicit* — it never
+consults the environment — which is what a test or a multi-worker
+front-end wants when it must pin behavior regardless of the shell.
+
+Both session services and the async serving plane accept ``runtime=``;
+their historical per-field kwargs (``fused=``, ``paged=``, ...) keep
+working and sit at the top of the precedence (explicit kwarg beats the
+RuntimeConfig, which beats env, which beats the default).
+
+Truthiness matches the historical parsers exactly: the strings "1",
+"true", "yes" (case-insensitive, stripped) are True, everything else —
+including unset — is False.  ``tests/test_service_protocol.py`` holds the
+variable names here equal to the owning modules' ``ENV_VAR`` constants so
+the consolidation can never drift from the subsystems it describes.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, fields
+
+# canonical variable names; asserted == the owning modules' ENV_VAR
+# constants in tests/test_service_protocol.py (runtime.py stays importable
+# without jax, so the heavy modules are not imported here)
+ENV_PAGED = "REPRO_PAGED"                      # sessions/lm.py
+ENV_FUSED = "REPRO_TCN_FUSED"                  # sessions/service.py
+ENV_KERNEL_BACKEND = "REPRO_KERNEL_BACKEND"    # kernels/dispatch.py
+ENV_TRACE = "REPRO_TRACE"                      # obs/trace.py
+ENV_DEVICE_COUNTERS = "REPRO_DEVICE_COUNTERS"  # obs/device.py
+
+_TRUE = ("1", "true", "yes")
+
+
+def _env_bool(name: str) -> bool:
+    return os.environ.get(name, "").strip().lower() in _TRUE
+
+
+def _env_str(name: str) -> str | None:
+    v = os.environ.get(name, "").strip()
+    return v or None
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """Resolved process-level switches (see module docstring for the
+    precedence contract).
+
+    paged            LM KV caches use the paged block-pool layout
+    fused            TCN streaming runs the fused kernel fast path
+    kernel_backend   force a kernels/dispatch backend (None = auto)
+    trace_path       Perfetto trace output path (None = tracing off);
+                     informational unless the process-global tracer was
+                     env-activated — benches/the plane export explicitly
+    device_counters  compile the instrumented scan twins (in-jit stats)
+    """
+
+    paged: bool = False
+    fused: bool = False
+    kernel_backend: str | None = None
+    trace_path: str | None = None
+    device_counters: bool = False
+
+    @classmethod
+    def resolve(cls, **overrides) -> "RuntimeConfig":
+        """Build a config honouring ``explicit kwarg > env > default``.
+        Overrides passed as ``None`` mean "not specified" and fall
+        through to the environment level."""
+        unknown = set(overrides) - {f.name for f in fields(cls)}
+        if unknown:
+            raise TypeError(f"unknown RuntimeConfig fields: {sorted(unknown)}")
+        env = cls(
+            paged=_env_bool(ENV_PAGED),
+            fused=_env_bool(ENV_FUSED),
+            kernel_backend=_env_str(ENV_KERNEL_BACKEND),
+            trace_path=_env_str(ENV_TRACE),
+            device_counters=_env_bool(ENV_DEVICE_COUNTERS),
+        )
+        picked = {k: (getattr(env, k) if v is None else v)
+                  for k, v in overrides.items()}
+        return cls(**{f.name: picked.get(f.name, getattr(env, f.name))
+                      for f in fields(cls)})
+
+    def pick(self, field: str, explicit):
+        """One field through the full precedence: the caller's explicit
+        kwarg (non-None) beats this config's value.  The one-liner every
+        service constructor uses, so the rule cannot be re-implemented
+        five slightly different ways again."""
+        return getattr(self, field) if explicit is None else explicit

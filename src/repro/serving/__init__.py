@@ -1,3 +1,5 @@
 from repro.serving.engine import LMServer, ServeConfig, TCNStreamServer
+from repro.serving.plane import Rejected, ServingPlane
 
-__all__ = ["LMServer", "ServeConfig", "TCNStreamServer"]
+__all__ = ["LMServer", "ServeConfig", "TCNStreamServer",
+           "Rejected", "ServingPlane"]

@@ -24,10 +24,19 @@ with LRU eviction to the host parking lot.
 one session per stream, all advanced by the service's chunked ``grid_scan``
 (a whole time chunk per jitted dispatch).  Use the service directly for
 multi-tenant personalization, park/resume, and session churn.
+
+Both servers now expose the unified ``sessions.SessionService`` surface
+(open_session / push / park / resume / close / poll / metrics / stats) by
+delegation, so they can sit behind the async plane or be driven directly.
+The historical spellings — ``add_request``/``finish`` on LMServer, the
+array-payload ``push``/``push_chunk`` on TCNStreamServer — remain as
+deprecation shims that emit ``DeprecationWarning`` naming the protocol
+call to migrate to.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -35,6 +44,11 @@ import numpy as np
 from repro.sessions.lm import LMSessionService
 from repro.sessions.service import StreamSessionService
 from repro.sessions.spec import SpeculativeDecoder
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} (the SessionService "
+                  f"protocol surface)", DeprecationWarning, stacklevel=3)
 
 
 @dataclass
@@ -88,13 +102,46 @@ class LMServer:
         """Per-slot int32 positions (0 for free slots)."""
         return self.service.slot_pos
 
-    # lifecycle --------------------------------------------------------------
-    def add_request(self, prompt: np.ndarray) -> int:
+    # protocol surface (sessions.SessionService, by delegation) --------------
+    @property
+    def n_slots(self) -> int:
+        return self.service.n_slots
+
+    def open_session(self, prompt: np.ndarray) -> int:
         """Admit a request.  With the default ``max_sessions`` (== batch)
         a full grid raises AdmissionError (a RuntimeError) — back-pressure,
         the historical contract; with a larger cap the LRU idle request is
         parked to host memory instead and resumes bit-identically."""
         return self.service.open_session(prompt)
+
+    def push(self, work: dict[int, int]) -> dict[int, list[int]]:
+        """{sid: token budget} -> {sid: new tokens} (protocol hot path)."""
+        return self.service.push(work)
+
+    def park(self, sid: int) -> None:
+        self.service.park(sid)
+
+    def resume(self, sid: int) -> None:
+        self.service.resume(sid)
+
+    def close(self, sid: int) -> None:
+        self.service.close(sid)
+
+    def poll(self, sid: int) -> dict:
+        return self.service.poll(sid)
+
+    def stats(self) -> dict:
+        return self.service.stats()
+
+    # deprecation shims (historical spellings) -------------------------------
+    def add_request(self, prompt: np.ndarray) -> int:
+        _deprecated("LMServer.add_request(prompt)",
+                    "LMServer.open_session(prompt)")
+        return self.open_session(prompt)
+
+    def finish(self, rid: int):
+        _deprecated("LMServer.finish(rid)", "LMServer.close(rid)")
+        self.close(rid)
 
     def step(self, n: int = 1):
         """Advance every live request — bound AND parked — by ``n`` greedy
@@ -110,9 +157,6 @@ class LMServer:
             else self.service.decode
         for i in range(0, len(live), self.service.n_slots):
             decode({sid: n for sid in live[i:i + self.service.n_slots]})
-
-    def finish(self, rid: int):
-        self.service.close(rid)
 
     def metrics(self) -> dict:
         """Telemetry snapshot of the underlying service (obs registry)."""
@@ -136,20 +180,56 @@ class TCNStreamServer:
             max_ways=1, quantize=quantize, t_chunk=t_chunk)
         self.sids = [self.service.open_session() for _ in range(n_streams)]
 
-    def push(self, x_t: np.ndarray):
-        """x_t: (n_streams, C_in) one sample per stream -> (emb, logits)."""
-        res = self.service.push_audio(
+    # protocol surface (sessions.SessionService, by delegation) --------------
+    @property
+    def n_slots(self) -> int:
+        return self.service.n_slots
+
+    def open_session(self, *args, **kwargs) -> int:
+        return self.service.open_session(*args, **kwargs)
+
+    def push(self, work):
+        """Protocol hot path: ``{sid: (T, C_in) chunk} -> {sid: result}``.
+
+        The historical array spelling — ``push(x_t)`` with one
+        ``(n_streams, C_in)`` sample per lockstep stream, returning
+        stacked ``(emb, logits)`` — still works as a deprecation shim."""
+        if isinstance(work, dict):
+            return self.service.push(work)
+        _deprecated("TCNStreamServer.push(x_t array)",
+                    "TCNStreamServer.push({sid: chunk})")
+        x_t = np.asarray(work)
+        res = self.service.push(
             {sid: x_t[i] for i, sid in enumerate(self.sids)})
         emb = np.stack([res[sid]["emb"] for sid in self.sids])
         logits = np.stack([res[sid]["logits"] for sid in self.sids])
         return emb, logits
 
+    def park(self, sid: int) -> None:
+        self.service.park(sid)
+
+    def resume(self, sid: int) -> None:
+        self.service.resume(sid)
+
+    def close(self, sid: int) -> None:
+        self.service.close(sid)
+
+    def poll(self, sid: int) -> dict:
+        return self.service.poll(sid)
+
+    def stats(self) -> dict:
+        return self.service.stats()
+
+    # deprecation shims (historical spellings) -------------------------------
     def push_chunk(self, x: np.ndarray):
         """x: (n_streams, T, C_in) a time chunk per stream.  Returns
         per-sample (embs (n_streams, T, V), logits (n_streams, T, n)) —
         bit-exact vs T sequential push() calls, at a fraction of the
         dispatches (ceil(T / t_chunk) jitted calls total)."""
-        res = self.service.push_audio(
+        _deprecated("TCNStreamServer.push_chunk(x)",
+                    "TCNStreamServer.push({sid: chunk})")
+        x = np.asarray(x)
+        res = self.service.push(
             {sid: x[i] for i, sid in enumerate(self.sids)})
         embs = np.stack([res[sid]["emb"] for sid in self.sids])
         logits = np.stack([res[sid]["logits"] for sid in self.sids])

@@ -1,0 +1,348 @@
+"""Async continuous-batching request plane over SessionService workers.
+
+The device-side machinery (chunk-native scans, O(1) paged admission,
+cost-aware eviction) already tolerates sessions joining and leaving
+between chunk dispatches; what was missing is a front-end that exploits
+it.  ``ServingPlane`` is that front-end: an asyncio facade that accepts
+ragged per-session pushes, accumulates whatever arrived while the grid
+was busy into the next continuous batch, and drives one or more
+slot-grid workers (any ``sessions.SessionService``) with tenant-affinity
+routing.
+
+Bit-identity contract
+---------------------
+The plane NEVER changes what a session computes — only when its work is
+grouped with other sessions' work.  This rides directly on the services'
+chunk-invariance guarantee: absent lanes in a ``push`` dispatch stay
+bit-frozen and every lane's computation depends only on its own state
+and payload, so ``push({a: wa, b: wb})`` gives each of a and b exactly
+the bits of ``push({a: wa})`` / ``push({b: wb})`` run alone.  The load
+bench (benchmarks/serve_load.py) holds this end to end against a
+synchronous control replay.
+
+Concurrency model
+-----------------
+One asyncio worker task per service owns ALL mutation of that service —
+there are no locks because there is no cross-task sharing.  Compiled
+dispatches run synchronously inside the worker task (they hold the GIL
+anyway; an executor would add latency without adding parallelism).  Each
+cycle the worker takes the longest FIFO prefix of its queue that fits
+one grid dispatch: control ops (open/park/resume/close/poll) execute
+inline — admission happens BETWEEN chunk dispatches, never inside one —
+and pushes accumulate into a ragged batch, cut at the first op that
+cannot join (duplicate session in batch, or batch already n_slots wide).
+Strict-prefix cutting makes ordering per worker global-FIFO, which is
+stronger than the per-session FIFO clients rely on.
+
+Back-pressure
+-------------
+Two bounded resources surface as ``Rejected`` (retryable) instead of
+unbounded queueing: a full per-worker op queue (``reason="queue_full"``)
+and service admission failure — ``AdmissionError`` / ``PoolExhausted``
+(``reason="admission"``, original exception chained).  Clients retry
+with backoff; the load bench measures goodput under exactly this churn.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import zlib
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.configs.runtime import RuntimeConfig
+from repro.obs import default_registry, get_tracer
+from repro.sessions import AdmissionError, SessionService
+
+__all__ = ["Rejected", "ServingPlane"]
+
+
+class Rejected(RuntimeError):
+    """A request the plane refused under load.  ``retryable`` is True for
+    transient capacity conditions (full queue, admission back-pressure):
+    retry with backoff.  ``reason`` is a stable label ("queue_full" |
+    "admission" | "closed")."""
+
+    def __init__(self, msg: str, *, reason: str, retryable: bool = True):
+        super().__init__(msg)
+        self.reason = reason
+        self.retryable = retryable
+
+
+@dataclass
+class _Op:
+    kind: str                    # open | push | park | resume | close | poll
+    fut: asyncio.Future
+    sid: int | None = None       # worker-local sid (None for open)
+    work: Any = None             # push payload
+    args: tuple = ()             # open_session positional args
+    kwargs: dict = field(default_factory=dict)
+
+
+class _Worker:
+    """One service + its op queue + the task that owns both."""
+
+    def __init__(self, idx: int, service: SessionService, max_queue: int):
+        self.idx = idx
+        self.service = service
+        self.max_queue = max_queue
+        self.queue: deque[_Op] = deque()
+        self.wake = asyncio.Event()
+        self.task: asyncio.Task | None = None
+        self.live = 0  # plane-tracked open sessions (routing load signal)
+
+    @property
+    def load(self) -> int:
+        return len(self.queue) + self.live
+
+
+class ServingPlane:
+    """Asyncio front-end multiplexing sessions over SessionService workers.
+
+    ::
+
+        plane = ServingPlane([svc_a, svc_b])
+        async with plane:
+            psid = await plane.open_session(prompt, tenant="alice")
+            toks = await plane.push(psid, 4)      # payload per service kind
+            await plane.close(psid)
+
+    Session ids returned here (``psid``) are plane-level: the plane maps
+    them to (worker, local sid) internally, so two workers can hand out
+    colliding local ids safely.  ``tenant=`` pins a tenant's sessions to
+    one worker (stable crc32 hash) so per-tenant state — prototype banks,
+    CoW prefix blocks — stays where it is warm; tenantless sessions go to
+    the least-loaded worker.
+    """
+
+    def __init__(self, workers: list[SessionService] | SessionService, *,
+                 max_queue: int = 1024, runtime: RuntimeConfig | None = None,
+                 metrics=None, tracer=None):
+        if not isinstance(workers, (list, tuple)):
+            workers = [workers]
+        if not workers:
+            raise ValueError("ServingPlane needs at least one worker")
+        self.runtime = runtime if runtime is not None else RuntimeConfig.resolve()
+        self.workers = [_Worker(i, svc, max_queue)
+                        for i, svc in enumerate(workers)]
+        self.metrics_registry = metrics if metrics is not None \
+            else default_registry()
+        self.tracer = tracer if tracer is not None else get_tracer()
+        reg = self.metrics_registry
+        self._c_batches = reg.counter("plane_batches_total")
+        self._c_rejected = {r: reg.counter("plane_rejected_total", reason=r)
+                            for r in ("queue_full", "admission")}
+        self._h_lanes = reg.histogram("plane_batch_lanes")
+        self._g_depth = [reg.gauge("plane_queue_depth", worker=str(w.idx))
+                         for w in self.workers]
+        self._sessions: dict[int, tuple[_Worker, int]] = {}  # psid -> (w, sid)
+        self._next_psid = 0
+        self._running = False
+
+    # -- lifecycle -----------------------------------------------------------
+    async def __aenter__(self) -> "ServingPlane":
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()
+
+    def start(self) -> None:
+        if self._running:
+            return
+        self._running = True
+        for w in self.workers:
+            w.task = asyncio.ensure_future(self._run_worker(w))
+
+    async def aclose(self) -> None:
+        """Stop the workers.  Queued ops are failed with a non-retryable
+        ``Rejected`` rather than silently dropped."""
+        if not self._running:
+            return
+        self._running = False
+        for w in self.workers:
+            w.wake.set()
+        await asyncio.gather(*(w.task for w in self.workers if w.task),
+                             return_exceptions=True)
+        for w in self.workers:
+            while w.queue:
+                op = w.queue.popleft()
+                if not op.fut.done():
+                    op.fut.set_exception(Rejected(
+                        "plane closed", reason="closed", retryable=False))
+        if self.runtime.trace_path:
+            self.tracer.export(self.runtime.trace_path)
+
+    # -- public async surface ------------------------------------------------
+    async def open_session(self, *args, tenant=None, **kwargs) -> int:
+        """Admit a session; returns a plane-level session id.  Raises
+        ``Rejected(retryable=True)`` when the target worker's queue is full
+        or its service refuses admission (``AdmissionError`` — including
+        ``PoolExhausted`` under the paged layout)."""
+        w = self._route(tenant)
+        op = _Op("open", self._fut(), args=args, kwargs=kwargs)
+        self._enqueue(w, op)
+        sid = await op.fut
+        psid = self._next_psid
+        self._next_psid += 1
+        self._sessions[psid] = (w, sid)
+        w.live += 1
+        return psid
+
+    async def push(self, psid: int, work) -> Any:
+        """Advance one session by one service-specific work item (TCN: an
+        audio chunk; LM: a token budget).  The plane groups concurrent
+        pushes into one grid dispatch; the result is bit-identical to
+        pushing alone."""
+        w, sid = self._lookup(psid)
+        op = _Op("push", self._fut(), sid=sid, work=work)
+        self._enqueue(w, op)
+        return await op.fut
+
+    async def park(self, psid: int) -> None:
+        await self._control(psid, "park")
+
+    async def resume(self, psid: int) -> None:
+        await self._control(psid, "resume")
+
+    async def poll(self, psid: int) -> dict:
+        return await self._control(psid, "poll")
+
+    async def close(self, psid: int) -> None:
+        res = await self._control(psid, "close")
+        w, _ = self._sessions.pop(psid)
+        w.live -= 1
+        return res
+
+    # -- sync introspection --------------------------------------------------
+    def metrics(self) -> dict:
+        return self.metrics_registry.snapshot()
+
+    def stats(self) -> dict:
+        return {"n_workers": len(self.workers),
+                "live_sessions": len(self._sessions),
+                "queue_depths": [len(w.queue) for w in self.workers],
+                "workers": [w.service.stats() for w in self.workers]}
+
+    # -- internals -----------------------------------------------------------
+    def _fut(self) -> asyncio.Future:
+        return asyncio.get_running_loop().create_future()
+
+    def _lookup(self, psid: int) -> tuple[_Worker, int]:
+        try:
+            return self._sessions[psid]
+        except KeyError:
+            raise KeyError(f"unknown plane session {psid}") from None
+
+    def _route(self, tenant) -> _Worker:
+        if tenant is not None:
+            # stable across processes (hash() is salted; crc32 is not)
+            h = zlib.crc32(str(tenant).encode())
+            return self.workers[h % len(self.workers)]
+        return min(self.workers, key=lambda w: w.load)
+
+    def _enqueue(self, w: _Worker, op: _Op) -> None:
+        if not self._running:
+            raise Rejected("plane is not running", reason="closed",
+                           retryable=False)
+        if len(w.queue) >= w.max_queue:
+            self._c_rejected["queue_full"].inc()
+            raise Rejected(f"worker {w.idx} queue full "
+                           f"({w.max_queue} ops)", reason="queue_full")
+        w.queue.append(op)
+        self._g_depth[w.idx].set(len(w.queue))
+        w.wake.set()
+
+    async def _control(self, psid: int, kind: str):
+        w, sid = self._lookup(psid)
+        op = _Op(kind, self._fut(), sid=sid)
+        self._enqueue(w, op)
+        return await op.fut
+
+    async def _run_worker(self, w: _Worker) -> None:
+        while self._running:
+            if not w.queue:
+                w.wake.clear()
+                await w.wake.wait()
+                continue
+            # batching window: yield one loop tick so coroutines scheduled
+            # in the same tick can enqueue before the batch is cut
+            await asyncio.sleep(0)
+            self._cycle(w)
+            self._g_depth[w.idx].set(len(w.queue))
+            await asyncio.sleep(0)  # let clients consume results / enqueue
+
+    def _cycle(self, w: _Worker) -> None:
+        """One scheduling cycle: execute the longest FIFO prefix of the
+        queue that fits a single grid dispatch (see module docstring)."""
+        svc = w.service
+        batch: dict[int, Any] = {}
+        futs: dict[int, asyncio.Future] = {}
+        while w.queue:
+            op = w.queue[0]
+            if op.fut.done():        # client cancelled while queued
+                w.queue.popleft()
+                continue
+            if op.kind == "push":
+                if op.sid in batch or len(batch) >= svc.n_slots:
+                    break            # cut: would break FIFO or overflow grid
+                w.queue.popleft()
+                batch[op.sid] = op.work
+                futs[op.sid] = op.fut
+            else:
+                if op.sid is not None and op.sid in batch:
+                    break            # control on a batched sid: after dispatch
+                w.queue.popleft()
+                self._do_control(svc, op)
+        if batch:
+            self._dispatch(w, batch, futs)
+
+    def _do_control(self, svc: SessionService, op: _Op) -> None:
+        try:
+            if op.kind == "open":
+                res = svc.open_session(*op.args, **op.kwargs)
+            else:
+                res = getattr(svc, op.kind)(op.sid)
+        except AdmissionError as e:
+            self._c_rejected["admission"].inc()
+            rej = Rejected(f"admission refused: {e}", reason="admission")
+            rej.__cause__ = e
+            if not op.fut.done():
+                op.fut.set_exception(rej)
+            return
+        except Exception as e:
+            if not op.fut.done():
+                op.fut.set_exception(e)
+            return
+        if not op.fut.done():
+            op.fut.set_result(res)
+
+    def _dispatch(self, w: _Worker, batch: dict[int, Any],
+                  futs: dict[int, asyncio.Future]) -> None:
+        # drop lanes whose client cancelled between enqueue and dispatch:
+        # their session must NOT advance (the client saw no result)
+        live = {sid: wk for sid, wk in batch.items()
+                if not futs[sid].done()}
+        if not live:
+            return
+        self._c_batches.inc()
+        self._h_lanes.record(len(live))
+        try:
+            with self.tracer.span("plane_batch", cat="plane",
+                                  worker=w.idx, lanes=len(live)):
+                out = w.service.push(live)
+        except Exception:
+            # one lane's failure must not poison its batchmates: re-run
+            # each lane alone (bit-identical by chunk invariance) so only
+            # the offending session sees its exception
+            out = {}
+            for sid, wk in live.items():
+                try:
+                    out.update(w.service.push({sid: wk}))
+                except Exception as e:
+                    if not futs[sid].done():
+                        futs[sid].set_exception(e)
+        for sid, res in out.items():
+            if not futs[sid].done():
+                futs[sid].set_result(res)

@@ -16,7 +16,17 @@ state + many more sessions than compiled slots) for BOTH serving paths:
                    dispatches (exact forced-token scan / parallel chunk)
   * paging.py    — paged slot memory: block-pool allocator, CoW refcounts,
                    exact-prefix block registry (LMSessionService paged=True)
+
+Both concrete services conform to the structural ``SessionService``
+protocol defined here (open_session / push / park / resume / close /
+poll / metrics / stats); the async serving plane (serving/plane.py)
+programs against the protocol only.  ``stats()`` always contains the
+``STATS_SCHEMA`` keys and ``metrics()`` snapshots always contain the
+``METRICS_SCHEMA`` series — asserted for both services by
+tests/test_service_protocol.py.
 """
+
+from typing import Any, Protocol, runtime_checkable
 
 from repro.sessions.lm import (
     LMSessionService,
@@ -87,7 +97,63 @@ from repro.sessions.tenancy import (
     bank_update_class,
 )
 
+# -- the unified service surface -------------------------------------------
+# Keys every SessionService.stats() dict carries (extras allowed on top:
+# the TCN adds fused/tenant_row_bytes, the LM adds seq_cap/paged/...).
+# Frozen here so the two services can never drift apart again.
+STATS_SCHEMA = (
+    "service",            # "tcn" | "lm"
+    "n_slots",            # compiled grid width
+    "t_chunk",            # compiled chunk length
+    "bound",              # sessions currently on slots
+    "parked",             # sessions parked to host
+    "live_sessions",      # bound + parked
+    "evictions",          # lifetime eviction count
+    "dispatches",         # lifetime compiled-scan dispatches
+    "parked_blob_bytes",  # actual host bytes in the parking lot
+    "slot_state_bytes",   # structural bytes of ONE full slot column
+)
+
+# Metric series both services register at construction (label service=
+# "tcn"|"lm"), so a fresh service's metrics() snapshot always carries
+# them — dashboards and the serve_load bench rely on their presence.
+METRICS_SCHEMA = (
+    "dispatches_total",
+    "evictions_total",
+    "sessions_bound",
+    "sessions_parked",
+    "parked_bytes",
+)
+
+
+@runtime_checkable
+class SessionService(Protocol):
+    """Structural protocol for slot-grid session services.
+
+    ``StreamSessionService`` (payload: audio chunks) and
+    ``LMSessionService`` (payload: token budgets) both conform; the
+    async serving plane and any other front-end program against THIS
+    surface only.  ``push`` is the ragged hot path: a dict keyed by
+    session id whose values are service-specific work descriptions;
+    absent sessions stay bit-frozen, so how pushes are grouped into
+    calls never changes what any one session computes (the contract
+    continuous batching builds on).
+    """
+
+    n_slots: int
+
+    def open_session(self, *args: Any, **kwargs: Any) -> int: ...
+    def push(self, work: dict[int, Any]) -> dict[int, Any]: ...
+    def park(self, sid: int) -> None: ...
+    def resume(self, sid: int) -> None: ...
+    def close(self, sid: int) -> None: ...
+    def poll(self, sid: int) -> dict: ...
+    def metrics(self) -> dict: ...
+    def stats(self) -> dict: ...
+
+
 __all__ = [
+    "SessionService", "STATS_SCHEMA", "METRICS_SCHEMA",
     "AdmissionError", "CapacityError", "SlotScheduler",
     "NO_TENANT", "SessionRecord", "SlotGridService", "StreamSessionService",
     "LMSessionService", "make_decode_scan", "make_decode_scan_paged",

@@ -48,7 +48,6 @@ replicated, and placement survives decode dispatches
 
 from __future__ import annotations
 
-import os
 import time
 from dataclasses import dataclass, field
 
@@ -56,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.runtime import RuntimeConfig
 from repro.obs.device import occupancy_stats
 from repro.sessions.paging import BlockPool, PoolExhausted, PrefixCache, prefix_keys
 from repro.sessions.service import SessionRecord, SlotGridService
@@ -345,13 +345,14 @@ class LMSessionService(SlotGridService):
                  metrics=None, tracer=None,
                  device_counters: bool | None = None,
                  paged: bool | None = None, block_len: int = 16,
-                 n_blocks: int | None = None, prefix_cache: bool = True):
+                 n_blocks: int | None = None, prefix_cache: bool = True,
+                 runtime: RuntimeConfig | None = None):
         if cost_fn is None:
             cost_fn = self._park_cost  # O(pos) bytes: cost-aware by default
         super().__init__(n_slots, t_chunk=t_chunk, max_sessions=max_sessions,
                          cost_fn=cost_fn, stale_window=stale_window,
                          metrics=metrics, tracer=tracer,
-                         device_counters=device_counters)
+                         device_counters=device_counters, runtime=runtime)
         self.bundle = bundle
         self.seq_cap = int(seq_cap)
         self._params = params
@@ -379,9 +380,7 @@ class LMSessionService(SlotGridService):
         # read through per-lane int32 block tables (ROADMAP: the capacity
         # lever).  Bundles with no seq-axis leaf at all (pure recurrent —
         # RWKV) have nothing to page and silently stay dense.
-        if paged is None:
-            paged = os.environ.get(
-                "REPRO_PAGED", "0").strip().lower() in ("1", "true", "yes")
+        paged = self.runtime.pick("paged", paged)
         self.paged = bool(paged) and any(
             sax >= 0 for sax in jax.tree.leaves(self._seq_axes))
         self.block_len = int(block_len)
@@ -883,6 +882,10 @@ class LMSessionService(SlotGridService):
                 self._retire(sid)
         return out
 
+    # protocol verb (sessions.SessionService): the LM payload is a token
+    # budget per session
+    push = decode
+
     # -- persistence hooks ---------------------------------------------------
     def _session_spill_meta(self, sid: int) -> dict:
         s = self.sessions[sid]
@@ -1010,11 +1013,14 @@ class LMSessionService(SlotGridService):
                 "generated": len(self.outputs.get(sid, [])),
                 "last": sess.last}
 
+    def _slot_state_bytes(self) -> int:
+        # structural footprint of one full slot column (pos = seq_cap)
+        return self.kv_park_bytes(self.seq_cap)
+
     def _extra_stats(self) -> dict:
         out = {"seq_cap": self.seq_cap,
-               "slot_state_bytes": self.kv_park_bytes(self.seq_cap),
-               "parked_bytes": {sid: self._park_cost(sid)
-                                for sid in self.parking}}
+               "parked_cost_by_sid": {sid: self._park_cost(sid)
+                                      for sid in self.parking}}
         if self.paged:
             out["paged"] = {
                 "block_len": self.block_len,

@@ -52,7 +52,6 @@ to replicated and behaviour is unchanged.
 
 from __future__ import annotations
 
-import os
 import time
 from dataclasses import dataclass
 from typing import Any, Callable
@@ -62,10 +61,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.store import load_sessions, save_sessions
+from repro.configs.runtime import RuntimeConfig
 from repro.core.protonet import pn_logits_banked
 from repro.obs.device import (
     decode_occupancy,
-    env_device_counters,
     occupancy_stats,
     valid_stats,
 )
@@ -136,7 +135,8 @@ class SlotGridService:
                  cost_fn: Callable[[int], float] | None = None,
                  stale_window: int = 0,
                  metrics: MetricsRegistry | None = None,
-                 tracer=None, device_counters: bool | None = None):
+                 tracer=None, device_counters: bool | None = None,
+                 runtime: RuntimeConfig | None = None):
         if t_chunk < 1:
             raise ValueError(f"t_chunk must be >= 1, got {t_chunk}")
         self.n_slots = n_slots
@@ -146,6 +146,11 @@ class SlotGridService:
         self.parking: dict[int, dict] = {}        # sid -> host blob
         self.sessions: dict[int, Any] = {}        # sid -> session record
         self._next_sid = 0
+        # -- runtime switches (configs/runtime.RuntimeConfig): ONE resolved
+        # view of the historical env vars; per-field kwargs stay at the top
+        # of the precedence (explicit kwarg > runtime/env > default)
+        self.runtime = runtime if runtime is not None \
+            else RuntimeConfig.resolve()
         # -- telemetry plane (repro.obs): every counter the service keeps
         # lives in ONE registry; pass ``metrics=`` to share a registry
         # across services (a multi-worker front-end), default is private.
@@ -155,9 +160,8 @@ class SlotGridService:
         self.metrics_registry = metrics if metrics is not None \
             else MetricsRegistry()
         self.tracer = tracer if tracer is not None else get_tracer()
-        self.device_counters = (env_device_counters()
-                                if device_counters is None
-                                else bool(device_counters))
+        self.device_counters = bool(
+            self.runtime.pick("device_counters", device_counters))
         svc = self._service_name
         reg = self.metrics_registry
         self._c_dispatches = reg.counter("dispatches_total", service=svc)
@@ -326,6 +330,28 @@ class SlotGridService:
                 self._park_store(sid, self._pack(slot, sid))
             self._on_unbind(slot)
 
+    def resume(self, sid: int) -> None:
+        """Eagerly bind a parked session back onto a slot WITHOUT advancing
+        it — the inverse of ``park``.  ``push`` resumes lazily as part of
+        its pre-dispatch placement, so calling this first is never
+        required; a front-end uses it to prepay the unpack cost before a
+        latency-sensitive push.  Raises ``KeyError`` for a sid that was
+        never admitted; resuming a bound session just refreshes its LRU
+        clock."""
+        if sid not in self.sessions:
+            raise KeyError(f"unknown session {sid}")
+        self.sched.touch(sid)
+        if not self.sched.is_bound(sid):
+            self._bind(sid)
+
+    def push(self, work: dict[int, Any]) -> dict[int, Any]:
+        """Advance sessions by one ragged batch of work — the protocol hot
+        path (sessions.SessionService).  The payload type is the service's:
+        the TCN service takes ``{sid: (t, C_in) chunk}``, the LM service
+        ``{sid: n_tokens}``.  Concrete services alias their historical
+        verb (``push_audio`` / ``decode``) onto this name."""
+        raise NotImplementedError
+
     def close(self, sid: int) -> None:
         slot = self.sched.release(sid)
         if slot is not None:
@@ -427,8 +453,19 @@ class SlotGridService:
     def _extra_stats(self) -> dict:
         return {}
 
+    def _slot_state_bytes(self) -> int:
+        """STRUCTURAL parked footprint of one session (content-independent)
+        — part of the frozen stats schema, so every service must price it."""
+        raise NotImplementedError
+
     def stats(self) -> dict:
+        """Introspection snapshot.  The leading keys are the FROZEN shared
+        schema (sessions.STATS_SCHEMA) every service must emit identically
+        — the protocol conformance test asserts it, so the services can
+        never drift apart again; ``_extra_stats`` appends service-specific
+        extras under keys outside the schema."""
         return {
+            "service": self._service_name,
             "n_slots": self.n_slots,
             "t_chunk": self.t_chunk,
             "bound": len(self.sched.slot_of),
@@ -436,6 +473,8 @@ class SlotGridService:
             "live_sessions": self.sched.live_sessions,
             "evictions": self.evictions,
             "dispatches": self.dispatches,
+            "parked_blob_bytes": self.parked_blob_bytes,
+            "slot_state_bytes": self._slot_state_bytes(),
             **self._extra_stats(),
         }
 
@@ -464,11 +503,12 @@ class StreamSessionService(SlotGridService):
                  stale_window: int = 0, fused: bool | None = None,
                  kernel_backend: str | None = None,
                  metrics: MetricsRegistry | None = None, tracer=None,
-                 device_counters: bool | None = None):
+                 device_counters: bool | None = None,
+                 runtime: RuntimeConfig | None = None):
         super().__init__(n_slots, t_chunk=t_chunk, max_sessions=max_sessions,
                          cost_fn=cost_fn, stale_window=stale_window,
                          metrics=metrics, tracer=tracer,
-                         device_counters=device_counters)
+                         device_counters=device_counters, runtime=runtime)
         cfg = bundle.cfg
         self.cfg = cfg
         self.max_ways = max_ways
@@ -482,9 +522,10 @@ class StreamSessionService(SlotGridService):
         # params.  On the baked params the fused and scan executors ARE
         # bit-identical (tests/test_streaming_chunk.py), so park/resume
         # and cross-chunk-size exactness are preserved within a service.
-        if fused is None:
-            fused = os.environ.get("REPRO_TCN_FUSED", "").strip().lower() \
-                in ("1", "true", "yes")
+        # Switch resolution: explicit kwarg > runtime/REPRO_TCN_FUSED >
+        # off (configs/runtime.RuntimeConfig, the consolidated parser).
+        fused = bool(self.runtime.pick("fused", fused))
+        kernel_backend = self.runtime.pick("kernel_backend", kernel_backend)
         self.fused = fused
         bn_state = bn_state if bn_state is not None else tcn_empty_state(cfg)
         self._fused_params = None
@@ -767,6 +808,9 @@ class StreamSessionService(SlotGridService):
             out[sid] = res
         return out
 
+    # protocol verb (sessions.SessionService): the TCN payload is audio
+    push = push_audio
+
     # -- FSL / CL enrollment (live, mid-stream) -----------------------------
     def enroll_shots(self, sid: int, shots, *, embedded: bool = False,
                      way: int | None = None) -> int:
@@ -806,13 +850,14 @@ class StreamSessionService(SlotGridService):
             "last": sess.last,
         }
 
+    def _slot_state_bytes(self) -> int:
+        # structural, not content-dependent, so stable for CI tracking:
+        # what one session costs in the parking lot (nibble-packed when
+        # the service runs quantize=True)
+        return slot_park_bytes(self.cfg, quantize=self.quantize)
+
     def _extra_stats(self) -> dict:
-        # parked footprints — structural, not content-dependent, so both
-        # are stable for CI tracking: what one session costs in the
-        # parking lot (nibble-packed when the service runs quantize=True)
-        # and what one tenant's prototype row costs in a spill (the
-        # paper's 26 B/way personalization-cost story).
-        return {"slot_state_bytes": slot_park_bytes(self.cfg,
-                                                    quantize=self.quantize),
-                "tenant_row_bytes": bank_row_bytes(self.bank),
+        # what one tenant's prototype row costs in a spill (the paper's
+        # 26 B/way personalization-cost story)
+        return {"tenant_row_bytes": bank_row_bytes(self.bank),
                 "fused": self.fused}

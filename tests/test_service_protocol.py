@@ -1,0 +1,235 @@
+"""SessionService protocol conformance: both concrete services through the
+same lifecycle matrix, the frozen stats()/metrics() schemas, and the
+RuntimeConfig switch consolidation (precedence + env-name pinning)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RuntimeConfig, get_config
+from repro.configs import runtime as rt
+from repro.models import build_bundle
+from repro.models.tcn import tcn_empty_state
+from repro.sessions import (
+    METRICS_SCHEMA,
+    STATS_SCHEMA,
+    LMSessionService,
+    SessionService,
+    StreamSessionService,
+)
+
+
+@functools.lru_cache(maxsize=None)
+def _tcn_setup():
+    cfg = get_config("chameleon-tcn").replace(
+        tcn_channels=(8, 8), tcn_kernel=3, tcn_in_channels=2,
+        embed_dim=12, n_classes=4)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    bn = tcn_empty_state(cfg)
+    bn = jax.tree.map(
+        lambda a: a + 0.05 * jnp.abs(
+            jax.random.normal(jax.random.key(7), a.shape)), bn)
+    return bundle, params, bn
+
+
+@functools.lru_cache(maxsize=None)
+def _lm_setup():
+    cfg = get_config("olmo-1b").smoke().replace(
+        n_layers=2, d_model=32, d_ff=64, vocab_size=64, head_dim=16)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    return bundle, params
+
+
+def _make_tcn(**kw):
+    bundle, params, bn = _tcn_setup()
+    return StreamSessionService(bundle, params, bn, n_slots=2,
+                                max_tenants=2, max_ways=2, t_chunk=4,
+                                max_sessions=8, **kw)
+
+
+def _make_lm(**kw):
+    bundle, params = _lm_setup()
+    return LMSessionService(bundle, params, n_slots=2, seq_cap=32,
+                            t_chunk=4, max_sessions=8, **kw)
+
+
+def _tcn_case():
+    rng = np.random.default_rng(0)
+    return (_make_tcn, lambda svc: svc.open_session(),
+            lambda: rng.normal(size=(4, 2)).astype(np.float32))
+
+
+def _lm_case():
+    return (_make_lm,
+            lambda svc: svc.open_session(np.array([3, 1], np.int32)),
+            lambda: 2)
+
+
+CASES = {"tcn": _tcn_case, "lm": _lm_case}
+
+
+@pytest.fixture(params=sorted(CASES))
+def case(request):
+    return CASES[request.param]()
+
+
+# ---------------------------------------------------------------------------
+# structural conformance + lifecycle matrix
+# ---------------------------------------------------------------------------
+
+def test_conforms_to_protocol(case):
+    make, _, _ = case
+    svc = make()
+    assert isinstance(svc, SessionService)
+    for verb in ("open_session", "push", "park", "resume", "close",
+                 "poll", "metrics", "stats"):
+        assert callable(getattr(svc, verb)), verb
+
+
+def test_lifecycle_matrix(case):
+    """open -> push -> park -> resume -> push -> close through the protocol
+    verbs only, with stats() tracking every transition."""
+    make, open_sess, work = case
+    svc = make()
+    sid = open_sess(svc)
+    assert svc.stats()["live_sessions"] == 1 and svc.stats()["bound"] == 1
+
+    r1 = svc.push({sid: work()})
+    assert sid in r1
+
+    svc.park(sid)
+    st = svc.stats()
+    assert st["bound"] == 0 and st["parked"] == 1
+    assert st["parked_blob_bytes"] > 0
+
+    svc.resume(sid)  # eager re-bind, no work pushed
+    st = svc.stats()
+    assert st["bound"] == 1 and st["parked"] == 0
+
+    r2 = svc.push({sid: work()})
+    assert sid in r2
+
+    svc.close(sid)
+    st = svc.stats()
+    assert st["live_sessions"] == 0 and st["bound"] == 0 and st["parked"] == 0
+
+
+def test_resume_is_bit_identical_to_lazy_rebind(case):
+    """resume() then push == push on a parked session (which lazily
+    rebinds): eager rebinding never perturbs session state."""
+    make, open_sess, work = case
+    eager, lazy = make(), make()
+    a, b = open_sess(eager), open_sess(lazy)
+    w = work()
+    eager.push({a: w}), lazy.push({b: w})
+    eager.park(a), lazy.park(b)
+    eager.resume(a)
+    w2 = work()
+    ra, rb = eager.push({a: w2})[a], lazy.push({b: w2})[b]
+    ra_l, rb_l = jax.tree.leaves(ra), jax.tree.leaves(rb)
+    assert len(ra_l) == len(rb_l)
+    for x, y in zip(ra_l, rb_l):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resume_unknown_session_raises(case):
+    make, _, _ = case
+    with pytest.raises(KeyError):
+        make().resume(999)
+
+
+# ---------------------------------------------------------------------------
+# frozen schemas (the drift this PR fixes)
+# ---------------------------------------------------------------------------
+
+def test_stats_schema(case):
+    make, open_sess, work = case
+    svc = make()
+    for _ in range(2):  # fresh AND exercised
+        st = svc.stats()
+        missing = [k for k in STATS_SCHEMA if k not in st]
+        assert not missing, f"stats() missing schema keys: {missing}"
+        assert st["service"] in ("tcn", "lm")
+        assert st["slot_state_bytes"] > 0
+        sid = open_sess(svc)
+        svc.push({sid: work()})
+
+
+def test_metrics_schema(case):
+    make, _, _ = case
+    snap = make().metrics()
+    missing = [k for k in METRICS_SCHEMA if k not in snap]
+    assert not missing, f"metrics() missing schema series: {missing}"
+    for k in METRICS_SCHEMA:
+        assert any(e["labels"].get("service") in ("tcn", "lm")
+                   for e in snap[k]), k
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig: the five consolidated switches
+# ---------------------------------------------------------------------------
+
+def test_runtime_env_names_match_owning_modules():
+    """The consolidation can never drift from the subsystems it describes:
+    the canonical names in configs/runtime.py == the owning modules'
+    ENV_VAR constants."""
+    import importlib
+
+    from repro.kernels import dispatch as kd
+    from repro.obs import device as od
+
+    # "from repro.obs import trace" yields the Tracer instance the package
+    # re-exports, not the module — import the module explicitly
+    ot = importlib.import_module("repro.obs.trace")
+    assert rt.ENV_KERNEL_BACKEND == kd.ENV_VAR
+    assert rt.ENV_DEVICE_COUNTERS == od.ENV_VAR
+    assert rt.ENV_TRACE == ot.ENV_VAR
+
+
+def test_runtime_precedence(monkeypatch):
+    """explicit kwarg > env > default, field by field."""
+    monkeypatch.delenv(rt.ENV_PAGED, raising=False)
+    monkeypatch.delenv(rt.ENV_KERNEL_BACKEND, raising=False)
+    assert RuntimeConfig.resolve().paged is False          # default
+    monkeypatch.setenv(rt.ENV_PAGED, "yes")
+    assert RuntimeConfig.resolve().paged is True           # env
+    assert RuntimeConfig.resolve(paged=False).paged is False  # kwarg wins
+    monkeypatch.setenv(rt.ENV_KERNEL_BACKEND, "reference")
+    assert RuntimeConfig.resolve().kernel_backend == "reference"
+    assert RuntimeConfig.resolve(
+        kernel_backend="fused").kernel_backend == "fused"
+    # a directly-constructed config never consults the environment
+    assert RuntimeConfig().paged is False
+    assert RuntimeConfig().kernel_backend is None
+    with pytest.raises(TypeError):
+        RuntimeConfig.resolve(nonsense=1)
+
+
+def test_runtime_truthiness_matches_historical_parsers(monkeypatch):
+    for raw, want in [("1", True), ("true", True), ("YES ", True),
+                      ("0", False), ("", False), ("no", False),
+                      ("2", False)]:
+        monkeypatch.setenv(rt.ENV_FUSED, raw)
+        assert RuntimeConfig.resolve().fused is want, raw
+
+
+def test_services_honor_runtime_config(monkeypatch):
+    monkeypatch.delenv(rt.ENV_PAGED, raising=False)
+    monkeypatch.delenv(rt.ENV_FUSED, raising=False)
+    # RuntimeConfig beats env-default; explicit kwarg beats RuntimeConfig
+    lm = _make_lm(runtime=RuntimeConfig(paged=True))
+    assert lm.paged is True
+    lm = _make_lm(runtime=RuntimeConfig(paged=True), paged=False)
+    assert lm.paged is False
+    tcn = _make_tcn(runtime=RuntimeConfig(fused=True))
+    assert tcn.fused is True
+    tcn = _make_tcn(runtime=RuntimeConfig(fused=True), fused=False)
+    assert tcn.fused is False
+    # env still works through the default-resolved RuntimeConfig
+    monkeypatch.setenv(rt.ENV_PAGED, "1")
+    assert _make_lm().paged is True

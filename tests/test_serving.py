@@ -149,3 +149,67 @@ def test_tcn_stream_server():
     assert emb.shape == (3, cfg.embed_dim)
     assert logits.shape == (3, cfg.n_classes)
     assert np.isfinite(logits).all()
+
+
+# ---------------------------------------------------------------------------
+# protocol adapters + deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_lm_server_is_protocol_adapter():
+    """LMServer exposes the SessionService surface by delegation; the
+    protocol verbs drive the same service the shims do."""
+    import pytest
+
+    from repro.sessions import SessionService
+    cfg, bundle, params = _tiny_lm()
+    srv = LMServer(bundle, params, ServeConfig(max_batch=2, seq_cap=32))
+    assert isinstance(srv, SessionService)
+    sid = srv.open_session(np.array([1, 2], np.int32))
+    toks = srv.push({sid: 3})[sid]
+    assert len(toks) == 3 and srv.outputs[sid] == toks
+    assert srv.poll(sid)["generated"] == 3
+    assert srv.stats()["service"] == "lm" and srv.n_slots == 2
+    srv.close(sid)
+    assert srv.stats()["live_sessions"] == 0
+
+
+def test_lm_server_shims_warn_and_delegate():
+    import pytest
+    cfg, bundle, params = _tiny_lm()
+    srv = LMServer(bundle, params, ServeConfig(max_batch=2, seq_cap=32))
+    with pytest.warns(DeprecationWarning, match="open_session"):
+        rid = srv.add_request(np.array([1, 2], np.int32))
+    srv.step()
+    assert len(srv.outputs[rid]) == 1
+    with pytest.warns(DeprecationWarning, match="close"):
+        srv.finish(rid)
+    assert srv.service.stats()["live_sessions"] == 0
+
+
+def test_tcn_server_protocol_push_and_shims_agree():
+    """Dict-payload push (protocol) == array push / push_chunk (shims),
+    bit for bit, and the shims warn."""
+    import pytest
+
+    from repro.sessions import SessionService
+    cfg = get_config("chameleon-tcn-kws").smoke()
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    bn = tcn_empty_state(cfg)
+    a = TCNStreamServer(bundle, params, bn, n_streams=2)
+    b = TCNStreamServer(bundle, params, bn, n_streams=2)
+    assert isinstance(a, SessionService)
+    x = np.random.default_rng(5).normal(
+        size=(2, 8, cfg.tcn_in_channels)).astype(np.float32)
+    res = a.push({sid: x[i] for i, sid in enumerate(a.sids)})
+    with pytest.warns(DeprecationWarning, match="push"):
+        embs, logits = b.push_chunk(x)
+    for i, sid in enumerate(a.sids):
+        np.testing.assert_array_equal(res[sid]["emb"], embs[i])
+        np.testing.assert_array_equal(res[sid]["logits"], logits[i])
+    # the per-sample array shim warns too and matches the dict path
+    c = TCNStreamServer(bundle, params, bn, n_streams=2)
+    with pytest.warns(DeprecationWarning, match="push"):
+        emb1, log1 = c.push(x[:, 0])
+    np.testing.assert_array_equal(
+        emb1[0], np.asarray(res[a.sids[0]]["emb"][0]))

@@ -1,0 +1,247 @@
+"""Async serving plane: continuous batching bit-identity vs the synchronous
+facade, cancellation mid-batch, backpressure rejection + retry, and
+park-under-load churn.  All asyncio tests run via asyncio.run (no plugin
+dependency)."""
+
+import asyncio
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_bundle
+from repro.sessions import AdmissionError, LMSessionService
+from repro.serving import Rejected, ServingPlane
+
+
+@functools.lru_cache(maxsize=None)
+def _lm_setup():
+    cfg = get_config("olmo-1b").smoke().replace(
+        n_layers=1, d_model=16, d_ff=32, vocab_size=32, head_dim=8)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    return bundle, params
+
+
+def _svc(n_slots=4, max_sessions=None, **kw):
+    bundle, params = _lm_setup()
+    return LMSessionService(
+        bundle, params, n_slots=n_slots, seq_cap=32, t_chunk=4,
+        max_sessions=n_slots if max_sessions is None else max_sessions, **kw)
+
+
+def _prompt(i):
+    return np.array([(i % 7) + 1, ((3 * i) % 7) + 1], np.int32)
+
+
+def _sync_reference(n_sessions, want):
+    """Each session decoded ALONE on a fresh service — the strictest
+    synchronous control (no cross-lane batching at all)."""
+    out = {}
+    for i in range(n_sessions):
+        svc = _svc(n_slots=1, max_sessions=1)
+        sid = svc.open_session(_prompt(i))
+        out[i] = svc.decode({sid: want})[sid]
+        svc.close(sid)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# continuous batching bit-identity
+# ---------------------------------------------------------------------------
+
+def test_concurrent_pushes_bit_identical_to_sync_facade():
+    """12 interleaved clients over a 4-slot worker: whatever batches the
+    plane forms, every session's tokens == its solo synchronous run."""
+    N, WANT = 12, 6
+
+    async def main():
+        async with ServingPlane(_svc(n_slots=4, max_sessions=N)) as plane:
+            psids = [await plane.open_session(_prompt(i)) for i in range(N)]
+
+            async def client(i):
+                toks = []
+                for _ in range(3):  # ragged re-pushes keep re-batching
+                    toks += await plane.push(psids[i], WANT // 3)
+                return toks
+
+            outs = await asyncio.gather(*(client(i) for i in range(N)))
+            m = plane.metrics()
+            batches = m["plane_batches_total"][0]["value"]
+            lanes = m["plane_batch_lanes"][0]
+            return outs, batches, lanes
+
+    outs, batches, lanes = asyncio.run(main())
+    ref = _sync_reference(N, WANT)
+    for i in range(N):
+        assert outs[i] == ref[i], f"session {i} diverged from sync facade"
+    # continuous batching actually happened: fewer dispatch groups than
+    # client pushes, with multi-lane batches
+    assert batches < N * 3
+    assert lanes["max"] > 1
+
+
+def test_multi_worker_tenant_affinity():
+    """Tenant routing is stable (same tenant -> same worker) and results
+    stay bit-identical across workers."""
+
+    async def main():
+        workers = [_svc(n_slots=2, max_sessions=8) for _ in range(3)]
+        async with ServingPlane(workers, max_queue=64) as plane:
+            psids = {}
+            for i in range(6):
+                psids[i] = await plane.open_session(
+                    _prompt(i), tenant=f"tenant-{i % 3}")
+            outs = await asyncio.gather(
+                *(plane.push(psids[i], 4) for i in range(6)))
+            # every session of a tenant landed on the same worker
+            homes = {}
+            for i in range(6):
+                w, _ = plane._sessions[psids[i]]
+                homes.setdefault(i % 3, set()).add(w.idx)
+            return outs, homes
+
+    outs, homes = asyncio.run(main())
+    ref = _sync_reference(6, 4)
+    for i in range(6):
+        assert outs[i] == ref[i]
+    assert all(len(ws) == 1 for ws in homes.values()), homes
+
+
+# ---------------------------------------------------------------------------
+# cancellation mid-batch
+# ---------------------------------------------------------------------------
+
+def test_client_cancellation_leaves_batchmates_bit_identical():
+    """Cancel one client while its push is queued behind a busy grid: the
+    cancelled session must NOT advance, and its would-be batchmates must
+    still produce exactly their solo-run tokens."""
+
+    async def main():
+        async with ServingPlane(_svc(n_slots=4, max_sessions=4)) as plane:
+            psids = [await plane.open_session(_prompt(i)) for i in range(3)]
+            victim = asyncio.ensure_future(plane.push(psids[0], 4))
+            survivors = [asyncio.ensure_future(plane.push(psids[i], 4))
+                         for i in (1, 2)]
+            await asyncio.sleep(0)  # all three ops are now queued
+            victim.cancel()  # cancelled while queued, before the batch cut
+            res = await asyncio.gather(*survivors)
+            with pytest.raises(asyncio.CancelledError):
+                await victim
+            polls = [await plane.poll(p) for p in psids]
+            return res, polls
+
+    res, polls = asyncio.run(main())
+    ref = _sync_reference(3, 4)
+    assert res[0] == ref[1] and res[1] == ref[2]
+    assert polls[0]["generated"] == 0  # the cancelled session never ran
+    assert polls[1]["generated"] == 4 and polls[2]["generated"] == 4
+
+
+# ---------------------------------------------------------------------------
+# backpressure: rejection then successful retry
+# ---------------------------------------------------------------------------
+
+def test_admission_rejection_is_retryable():
+    """A full grid (max_sessions == n_slots) rejects with a retryable
+    Rejected chaining the service's AdmissionError; after a close, the
+    same open succeeds and decodes bit-identically."""
+
+    async def main():
+        async with ServingPlane(_svc(n_slots=2, max_sessions=2)) as plane:
+            a = await plane.open_session(_prompt(0))
+            b = await plane.open_session(_prompt(1))
+            with pytest.raises(Rejected) as ei:
+                await plane.open_session(_prompt(2))
+            assert ei.value.retryable and ei.value.reason == "admission"
+            assert isinstance(ei.value.__cause__, AdmissionError)
+            await plane.close(b)
+            c = await plane.open_session(_prompt(2))  # retry succeeds
+            toks = await plane.push(c, 4)
+            return toks
+
+    toks = asyncio.run(main())
+    assert toks == _sync_reference(3, 4)[2]
+
+
+def test_queue_full_rejection_then_retry():
+    async def main():
+        async with ServingPlane(_svc(n_slots=2, max_sessions=2),
+                                max_queue=2) as plane:
+            p = await plane.open_session(_prompt(0))
+            # saturate the op queue without yielding to the worker
+            f1 = asyncio.ensure_future(plane.push(p, 1))
+            f2 = asyncio.ensure_future(plane.push(p, 1))
+            await asyncio.sleep(0)  # let both enqueue (queue now at cap)
+            with pytest.raises(Rejected) as ei:
+                await plane.push(p, 1)
+            assert ei.value.retryable and ei.value.reason == "queue_full"
+            await asyncio.gather(f1, f2)  # drain
+            toks = await plane.push(p, 1)  # retry succeeds
+            rej = plane.metrics()["plane_rejected_total"]
+            reasons = {e["labels"]["reason"]: e["value"] for e in rej}
+            return toks, reasons
+
+    toks, reasons = asyncio.run(main())
+    assert len(toks) == 1
+    assert reasons.get("queue_full", 0) >= 1
+
+
+# ---------------------------------------------------------------------------
+# park under load
+# ---------------------------------------------------------------------------
+
+def test_park_under_load_bit_identical():
+    """Explicit park/resume churn interleaved with concurrent pushes on an
+    oversubscribed grid: every session still emits its solo-run tokens."""
+    N = 6
+
+    async def main():
+        async with ServingPlane(_svc(n_slots=2, max_sessions=N)) as plane:
+            psids = [await plane.open_session(_prompt(i)) for i in range(N)]
+
+            async def churner(i):
+                p = psids[i]
+                toks = await plane.push(p, 2)
+                await plane.park(p)       # to host, mid-lifecycle
+                await plane.resume(p)     # eager re-bind (may evict others)
+                toks += await plane.push(p, 2)
+                return toks
+
+            return await asyncio.gather(*(churner(i) for i in range(N)))
+
+    outs = asyncio.run(main())
+    ref = _sync_reference(N, 4)
+    for i in range(N):
+        assert outs[i] == ref[i], f"session {i} diverged under park churn"
+
+
+# ---------------------------------------------------------------------------
+# plane lifecycle
+# ---------------------------------------------------------------------------
+
+def test_close_fails_queued_ops_and_refuses_new_ones():
+    async def main():
+        plane = ServingPlane(_svc())
+        async with plane:
+            p = await plane.open_session(_prompt(0))
+        with pytest.raises(Rejected) as ei:
+            await plane.push(p, 1)
+        assert not ei.value.retryable and ei.value.reason == "closed"
+
+    asyncio.run(main())
+
+
+def test_plane_stats_shape():
+    async def main():
+        async with ServingPlane([_svc(), _svc()]) as plane:
+            await plane.open_session(_prompt(0))
+            st = plane.stats()
+            assert st["n_workers"] == 2 and st["live_sessions"] == 1
+            assert len(st["workers"]) == 2
+            for w in st["workers"]:
+                assert w["service"] == "lm"  # worker stats = service stats
+
+    asyncio.run(main())
