@@ -37,6 +37,16 @@ Gates (CI fails the job instead of merely uploading the artifact):
     an absolute floor; p99 TTFR and goodput are additionally held
     within ratio of the committed baseline like-for-like (same smoke
     flag);
+  * served CL curve (--cl BENCH_cl_serve.json) — the streaming-enrollment
+    continual-learning bench must be present (section-missing is a hard
+    fail), its paged tenant bank bit-identical to the dense enroll-once
+    control at every checkpoint, its final accuracy above an absolute
+    floor, its device bytes/way within the block-granular bound, its
+    enroll-latency tail bounded like the dispatch gate, its
+    bounded-rehearsal replay within an accuracy margin of the exact
+    bank, and (full runs) the curve must actually reach 250 ways; final
+    accuracy is additionally held within margin of the committed
+    baseline like-for-like (same smoke flag);
   * dispatch-latency telemetry — each section's ``dispatch_latency``
     summary (the repro.obs per-dispatch histograms, post-warmup) must be
     schema-valid (count > 0, p50 <= p99, every by_shape entry carrying
@@ -84,6 +94,21 @@ TTFR_SLACK_US = 5_000_000.0  # ... OR within p50 + 5s
 TTFR_P99_RATIO_MAX = 3.0   # vs baseline, like-for-like
 GOODPUT_RATIO_MIN = 3.0    # >= baseline/3, like-for-like
 GOODPUT_FLOOR_TOK_S = 30.0  # absolute catastrophic-regression floor
+# served CL curve (--cl BENCH_cl_serve.json).  The accuracy floors are
+# absolute catastrophic-regression guards calibrated to the deliberately
+# tiny CPU embedder (32-dim, 12x12 synthetic glyphs): the seed-
+# deterministic measured values are ~0.30 final at 20 smoke ways and
+# ~0.06 at the full 250 (vs 0.05 / 0.004 chance — the floor is >3x
+# chance in both regimes, so a broken bank or shuffled tables trips it
+# while embedder-quality noise does not).  The byte bound is structural
+# — block-granular rows of (V+1) fp32 — so any layout regression
+# (over-allocation, leaked blocks) trips it.
+CL_MIN_FINAL_ACC = 0.03    # absolute floor, full 250-way run
+CL_SMOKE_MIN_FINAL_ACC = 0.18  # absolute floor, 20-way smoke run
+CL_MAX_WAY_BYTES = 512.0   # device bytes per enrolled way (paged bank)
+CL_REHEARSAL_DROP_MAX = 0.15  # rehearsal replay vs exact bank, absolute
+CL_FULL_MIN_WAYS = 250     # the silicon demo's way count (full runs)
+CL_ACC_BASE_MARGIN = 0.05  # vs committed baseline, like-for-like
 
 
 def _load(path):
@@ -351,6 +376,77 @@ def check_serve(fresh: dict, base: dict | None) -> list[str]:
     return errors
 
 
+def check_cl(fresh: dict, base: dict | None) -> list[str]:
+    """Gate the served continual-learning curve (BENCH_cl_serve.json).
+
+    Section-missing is a hard fail (the streaming-enrollment bench
+    silently didn't run or the artifact is stale).  Absolute gates
+    (bit-identity, accuracy floor, bytes/way, enroll tail, rehearsal
+    margin, full-run way count) always apply; the accuracy gate vs the
+    committed baseline applies like-for-like (same smoke flag) only."""
+    errors = []
+    sec = fresh.get("cl_serve")
+    if sec is None:
+        return ["cl: fresh results have no 'cl_serve' section "
+                "(served CL curve did not run?)"]
+    served, reh = sec.get("served"), sec.get("rehearsal")
+    if not served or not reh:
+        return [f"cl: cl_serve malformed (served={bool(served)}, "
+                f"rehearsal={bool(reh)})"]
+    if not served.get("bit_identical"):
+        errors.append("cl: paged tenant bank not bit-identical to the "
+                      "dense enroll-once control at equal class counts")
+    smoke = bool(sec.get("smoke"))
+    floor = CL_SMOKE_MIN_FINAL_ACC if smoke else CL_MIN_FINAL_ACC
+    acc = served.get("final_acc", 0.0)
+    if acc < floor:
+        errors.append(f"cl: final accuracy {acc:.3f} < floor {floor} "
+                      f"({sec.get('n_classes')} ways, "
+                      f"{sec.get('shots')} shots)")
+    if not smoke and sec.get("n_classes", 0) < CL_FULL_MIN_WAYS:
+        errors.append(f"cl: full run reached only {sec.get('n_classes')} "
+                      f"ways < {CL_FULL_MIN_WAYS} (silicon-demo contract)")
+    bpw = served.get("bytes_per_way", float("inf"))
+    if bpw > CL_MAX_WAY_BYTES:
+        errors.append(f"cl: {bpw:.0f} device bytes/way > "
+                      f"{CL_MAX_WAY_BYTES:.0f} (paged bank over-allocating?)")
+    lat = served.get("enroll_latency")
+    if not lat or not all(k in lat for k in ("count", "p50_us", "p99_us")):
+        errors.append(f"cl: enroll_latency summary malformed: {lat!r}")
+        return errors
+    count, p50, p99 = lat["count"], lat["p50_us"], lat["p99_us"]
+    if not (count > 0 and 0 < p50 <= p99):
+        errors.append(f"cl: enroll latency quantiles inconsistent "
+                      f"(n={count}, p50={p50}, p99={p99})")
+        return errors
+    limit = max(TAIL_RATIO_MAX * p50, p50 + TAIL_SLACK_US)
+    if p99 > limit:
+        errors.append(f"cl: enroll latency tail p99={p99:.0f}us > "
+                      f"max({TAIL_RATIO_MAX}x p50, p50 + "
+                      f"{TAIL_SLACK_US:.0f}us) = {limit:.0f}us "
+                      f"(p50={p50:.0f}us, n={count})")
+    drop = reh.get("acc_drop")
+    if drop is None or drop > CL_REHEARSAL_DROP_MAX:
+        errors.append(f"cl: rehearsal replay accuracy drop {drop} > "
+                      f"{CL_REHEARSAL_DROP_MAX} (u4 log2 latent replay "
+                      f"degraded?)")
+    bsec = (base or {}).get("cl_serve")
+    comparable = bsec is not None and bool(bsec.get("smoke")) == smoke
+    if not comparable:
+        print("[gate] SKIP cl relative gates: no comparable baseline "
+              "(smoke flags differ or baseline missing)")
+    else:
+        bacc = bsec.get("served", {}).get("final_acc")
+        if bacc and acc < bacc - CL_ACC_BASE_MARGIN:
+            errors.append(f"cl: final accuracy {acc:.3f} < baseline "
+                          f"{bacc:.3f} - {CL_ACC_BASE_MARGIN} (regression)")
+    print(f"[gate] cl: {sec.get('n_classes')} ways final_acc={acc} "
+          f"enroll p50={p50:.0f}us p99={p99:.0f}us limit={limit:.0f}us "
+          f"bytes/way={bpw} rehearsal_drop={drop} "
+          f"bit_identical={served.get('bit_identical')}")
+    return errors
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", default="BENCH_session_throughput.json")
@@ -360,6 +456,9 @@ def main():
     ap.add_argument("--serve", default=None,
                     help="BENCH_serve_load.json to gate")
     ap.add_argument("--serve-baseline", default=None)
+    ap.add_argument("--cl", default=None,
+                    help="BENCH_cl_serve.json to gate")
+    ap.add_argument("--cl-baseline", default=None)
     args = ap.parse_args()
     fresh, base = _load(args.fresh), _load(args.baseline)
     errors = check(fresh, base)
@@ -379,6 +478,14 @@ def main():
             with open(args.serve_baseline) as f:
                 sbase = json.load(f)
         errors += check_serve(sfresh, sbase)
+    if args.cl:
+        with open(args.cl) as f:
+            clfresh = json.load(f)
+        clbase = None
+        if args.cl_baseline:
+            with open(args.cl_baseline) as f:
+                clbase = json.load(f)
+        errors += check_cl(clfresh, clbase)
     for name in ("tcn", "lm"):
         f = fresh.get(name, {})
         speedup = f.get("speedup_160_vs_1") or f.get("speedup_16_vs_1")

@@ -1,10 +1,36 @@
-"""Fig. 15 reproduction: continual learning — one class at a time via the
-prototype store, final & average accuracy vs number of ways for 1/2/5/10
-shots.  (The silicon demo reaches 250 ways; the CPU benchmark sweeps to the
-synthetic test split's size and reproduces the *curve shape* claims: shots
-help at high way-counts with diminishing returns beyond 5.)
+"""Fig. 15 reproduction + the served continual-learning curve.
+
+Two benches in one module:
+
+  * ``run()`` — the original enroll-once CL sweep (curve-shape claims of
+    Fig. 15: final/average accuracy vs ways for 1/2/5/10 shots).  Per-class
+    support and query embeddings are computed ONCE and cached — the
+    previous version re-embedded every enrolled class's query clips at
+    every step, an O(n^2) stack of TCN forward passes for what is an O(n)
+    measurement (the classifier itself is one tiny matmul per checkpoint).
+
+  * ``run_served()`` — the paper's 250-ways-per-tenant silicon demo as a
+    SERVED measurement: a paged-bank ``StreamSessionService`` behind the
+    async ``ServingPlane``, enrolling one class at a time through the
+    plane's ``enroll`` verb (label-keyed, tenant-affine).  Reports
+    accuracy checkpoints along the curve, enroll p50/p99 latency from the
+    ``repro.obs`` histogram (post-warmup), device bytes per way of the
+    block-granular bank, and a bounded-rehearsal replay leg (u4 log2
+    latent replay, ``rehearse_tenant``).  A dense enroll-once control
+    (``store_add_class`` into a pre-sized ``PrototypeStore``) is built
+    from the SAME shot embeddings and the paged bank must stay
+    bit-identical to it — FC rows and query logits — at every checkpoint.
+
+Emits ``BENCH_cl_serve.json``, gated by ``check_regression.py --cl``
+(accuracy floor, bytes/way bound, enroll-latency tail, bit-identity).
+
+    PYTHONPATH=src python -m benchmarks.cl_curve [--smoke] \\
+        [--classes N] [--shots K]
 """
 
+import argparse
+import asyncio
+import json
 import time
 
 import jax.numpy as jnp
@@ -13,11 +39,36 @@ import numpy as np
 from benchmarks.common import emit, get_meta_trained_tcn
 from repro.core import protonet as pn
 from repro.models.tcn import tcn_forward
+from repro.obs.metrics import default_registry, latency_summary
+from repro.serving import ServingPlane
+from repro.sessions import StreamSessionService, paged_bank_fc
+
+OUT_PATH = "BENCH_cl_serve.json"
+
+N_CLASSES = 250   # the silicon demo's way count (--smoke: 20)
+SHOTS = 10        # shots per class in the served curve (--smoke: 5)
+N_QUERY = 4       # held-out query clips per class
+N_CKPTS = 12      # accuracy checkpoints along the curve
+BLOCK_WAYS = 16   # paged-bank block granularity (--smoke: 4)
+REHEARSAL_CAP = 8  # rehearsal shots kept per way (--smoke: 4)
+
+
+def _embed_queries(cfg, params, state, ds, classes, n_query=N_QUERY):
+    """Embed each class's held-out query clips ONCE (the O(n^2) fix)."""
+    out = []
+    for j, c in enumerate(classes):
+        q = ds.sample(int(c), n_query, seed=900 + j)
+        embq, _, _ = tcn_forward(params, state, cfg, jnp.asarray(q),
+                                 train=False)
+        out.append(np.asarray(embq))
+    return out
 
 
 def run(max_ways: int = 16):
+    """Enroll-once CL sweep (Fig. 15 curve shape)."""
     cfg, bundle, params, state, ds, test_cls = get_meta_trained_tcn()
     n_total = min(max_ways, len(test_cls))
+    qry = _embed_queries(cfg, params, state, ds, test_cls[:n_total])
     for shots in (1, 2, 5, 10):
         t0 = time.perf_counter()
         store = pn.store_init(n_total, cfg.embed_dim)
@@ -27,18 +78,167 @@ def run(max_ways: int = 16):
             emb, _, _ = tcn_forward(params, state, cfg, jnp.asarray(sx),
                                     train=False)
             store = pn.store_add_class(store, emb)
-            correct = total = 0
-            for jj in range(j + 1):
-                q = ds.sample(int(test_cls[jj]), 4, seed=900 + jj)
-                embq, _, _ = tcn_forward(params, state, cfg, jnp.asarray(q),
-                                         train=False)
-                correct += int(jnp.sum(pn.store_classify(store, embq) == jj))
-                total += 4
-            accs.append(correct / total)
+            q = jnp.asarray(np.concatenate(qry[:j + 1]))
+            gold = np.repeat(np.arange(j + 1), N_QUERY)
+            pred = np.asarray(pn.store_classify(store, q))
+            accs.append(float(np.mean(pred == gold)))
         dt = (time.perf_counter() - t0) * 1e6 / n_total
         emit(f"cl_{n_total}way_{shots}shot", dt,
              f"final={accs[-1]:.3f};avg={np.mean(accs):.3f}")
 
 
+# -- the served curve --------------------------------------------------------
+
+def _paged_fc(svc, tenant):
+    """The tenant's live FC rows read through its block table — the same
+    ``paged_bank_fc`` the service dispatches with."""
+    tables, ways = svc.bankpool.slot_tables(np.array([tenant], np.int32))
+    w, b = paged_bank_fc(svc.bankpool.s_sums, svc.bankpool.counts,
+                         jnp.asarray(tables), jnp.asarray(ways))
+    return w[0], b[0]
+
+
+def _acc(w, b, queries, n_query):
+    q = jnp.asarray(np.concatenate(queries))
+    logits = np.asarray(pn.pn_logits(q, w, b))
+    gold = np.repeat(np.arange(len(queries)), n_query)
+    return float(np.mean(logits.argmax(-1) == gold)), logits
+
+
+def run_served(n_classes: int = N_CLASSES, shots: int = SHOTS,
+               block_ways: int = BLOCK_WAYS,
+               rehearsal_cap: int = REHEARSAL_CAP,
+               smoke: bool = False, seed: int = 0) -> dict:
+    registry = default_registry()
+    # a 0.5 train/test split feeds the meta-trainer and leaves n_classes
+    # unseen classes for the CL curve (the smoke sizing reuses run()'s
+    # cached embedder so CI meta-trains once)
+    cfg, bundle, params, state, ds, test_cls = get_meta_trained_tcn(
+        n_classes=2 * n_classes, seed=seed)
+    n = min(n_classes, len(test_cls))
+    svc = StreamSessionService(
+        bundle, params, bn_state=state, n_slots=2, max_tenants=2,
+        max_ways=n, t_chunk=16, paged_bank=True, bank_block_ways=block_ways,
+        rehearsal_cap=rehearsal_cap, metrics=registry)
+
+    # warm the enroll path (embed + block-alloc + refine compiles), then
+    # reset the latency histogram so tails measure steady state
+    warm = ds.sample(int(test_cls[0]), shots, seed=123)
+    wsid = svc.open_session(tenant=None)
+    svc.enroll_shots(wsid, warm)
+    svc.enroll_shots(wsid, warm, way=0)
+    svc.close(wsid)
+    registry.histogram("enroll_latency_us", service="tcn").reset()
+
+    qry = _embed_queries(cfg, params, state, ds, test_cls[:n])
+    ckpts = sorted(set(np.linspace(1, n, min(N_CKPTS, n), dtype=int)))
+    store = pn.store_init(n, cfg.embed_dim)  # dense enroll-once control
+    curve, identical = [], True
+    plane = ServingPlane(svc, metrics=registry)
+
+    async def drive():
+        nonlocal store, identical
+        async with plane:
+            # an explicit tenant id both routes (affinity hash) and claims
+            # the tenant's bank row on the tenant-aware TCN service
+            psid = await plane.open_session(tenant=0)
+            tenant = (await plane.poll(psid))["tenant"]
+            assert tenant == 0, tenant
+            for j in range(n):
+                sx = ds.sample(int(test_cls[j]), shots, seed=500 + j)
+                await plane.enroll(psid, sx, label=int(test_cls[j]))
+                # dense control folds the SAME embeddings (the service's
+                # own jitted embedder on the same clips) enroll-once style
+                store = pn.store_add_class(store, svc._embed(jnp.asarray(sx)))
+                if j + 1 in ckpts:
+                    wp, bp = _paged_fc(svc, tenant)
+                    acc, lp = _acc(wp[:n], bp[:n], qry[:j + 1], N_QUERY)
+                    wd, bd = pn.store_fc(store)
+                    _, ld = _acc(wd, bd, qry[:j + 1], N_QUERY)
+                    same = (np.array_equal(np.asarray(wp[:n]), np.asarray(wd))
+                            and np.array_equal(np.asarray(bp[:n]),
+                                               np.asarray(bd))
+                            and np.array_equal(lp, ld))
+                    identical = identical and same
+                    curve.append([j + 1, round(acc, 4)])
+                    print(f"# cl_serve: {j + 1}/{n} ways acc={acc:.3f} "
+                          f"bit_identical={same}", flush=True)
+            # one probe classification through the serving path proper
+            probe = ds.sample(int(test_cls[0]), 1, seed=777)[0]
+            res = await plane.push(psid, probe)
+            return tenant, int(res["pred"])
+
+    t0 = time.perf_counter()
+    tenant, probe_pred = asyncio.run(drive())
+    wall = time.perf_counter() - t0
+
+    accs = [a for _, a in curve]
+    row = next(r for r in svc.metrics()["enroll_latency_us"]
+               if r["labels"].get("service") == "tcn")
+    lat = latency_summary([row])
+    device_bytes = svc.bankpool.row_bytes(tenant)
+    pool = svc.bankpool.stats()
+    plane_enrolls = sum(e["value"] for e in
+                        svc.metrics().get("plane_enrolls_total", []))
+
+    # bounded-rehearsal leg: replace the exact running sums with the u4
+    # log2 latent-replay reconstruction and re-measure the final point
+    buffer_bytes = svc.rehearsal.nbytes(tenant)
+    svc.rehearse_tenant(tenant)
+    wr, br = _paged_fc(svc, tenant)
+    racc, _ = _acc(wr[:n], br[:n], qry, N_QUERY)
+
+    out = {
+        "smoke": smoke, "n_classes": n, "shots": shots, "n_query": N_QUERY,
+        "block_ways": block_ways, "wall_s": round(wall, 3),
+        "served": {
+            "final_acc": round(accs[-1], 4),
+            "avg_acc": round(float(np.mean(accs)), 4),
+            "curve": curve,
+            "enroll_latency": lat,
+            "bit_identical": bool(identical),
+            "device_bytes_tenant": int(device_bytes),
+            "bytes_per_way": round(device_bytes / n, 1),
+            "pool": pool,
+            "plane_enrolls": int(plane_enrolls),
+            "probe_pred": probe_pred,
+        },
+        "rehearsal": {
+            "cap_per_class": rehearsal_cap,
+            "buffer_bytes": int(buffer_bytes),
+            "bytes_per_way": round(buffer_bytes / n, 1),
+            "final_acc": round(racc, 4),
+            "acc_drop": round(accs[-1] - racc, 4),
+        },
+    }
+    print(f"# cl_serve: {n} ways final_acc={accs[-1]:.3f} "
+          f"avg_acc={out['served']['avg_acc']:.3f} "
+          f"enroll p50={lat['p50_us']:.0f}us p99={lat['p99_us']:.0f}us "
+          f"bytes/way={out['served']['bytes_per_way']} "
+          f"rehearsal_acc={racc:.3f} bit_identical={identical}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="20-way served curve on the shared CI embedder")
+    ap.add_argument("--classes", type=int, default=None)
+    ap.add_argument("--shots", type=int, default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        run(max_ways=8)
+        out = run_served(n_classes=args.classes or 20,
+                         shots=args.shots or 5,
+                         block_ways=4, rehearsal_cap=4, smoke=True)
+    else:
+        run()
+        out = run_served(n_classes=args.classes or N_CLASSES,
+                         shots=args.shots or SHOTS)
+    with open(OUT_PATH, "w") as f:
+        json.dump({"cl_serve": out}, f, indent=2)
+    print(f"# wrote {OUT_PATH}", flush=True)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -72,7 +72,7 @@ from benchmarks.common import emit
 from repro.configs import get_config
 from repro.models import build_bundle
 from repro.models.tcn import tcn_empty_state
-from repro.obs.metrics import Histogram, default_registry
+from repro.obs.metrics import default_registry, latency_summary
 from repro.sessions import (
     AdmissionError,
     LMSessionService,
@@ -108,29 +108,14 @@ def _service(bundle, params, bn, *, n_slots, **kw):
 
 def _latency_summary(svc) -> dict:
     """p50/p99 of the service's per-shape dispatch-latency histograms,
-    merged into one distribution (log2 buckets add exactly), plus the
-    per-shape breakdown.  Callers reset the registry after warmup so
-    compile-time outliers never pollute the steady-state tail."""
+    merged into one distribution (obs.metrics.latency_summary — log2
+    buckets add exactly), plus the per-shape breakdown.  Callers reset
+    the registry after warmup so compile-time outliers never pollute the
+    steady-state tail."""
     rows = svc.metrics().get("dispatch_latency_us", [])
     rows = [r for r in rows
-            if r["labels"].get("service") == svc._service_name and r["count"]]
-    m = Histogram()
-    for r in rows:
-        for i, n in r["buckets"].items():
-            m.buckets[int(i)] += n
-        m.count += r["count"]
-        m.sum += r["sum"]
-        m.min = min(m.min, r["min"])
-        m.max = max(m.max, r["max"])
-    return {
-        "count": m.count,
-        "p50_us": m.percentile(50),
-        "p99_us": m.percentile(99),
-        "mean_us": m.mean,
-        "by_shape": {r["labels"].get("shape", "?"):
-                     {"count": r["count"], "p50_us": r["p50"],
-                      "p99_us": r["p99"]} for r in rows},
-    }
+            if r["labels"].get("service") == svc._service_name]
+    return latency_summary(rows, by="shape")
 
 
 def _chunk_sweep(cfg, bundle, params, bn, *, n_slots, n_samples):

@@ -149,13 +149,28 @@ def store_init(max_ways: int, dim: int) -> PrototypeStore:
 
 
 def store_add_class(store: PrototypeStore, shot_embeddings: jax.Array) -> PrototypeStore:
-    """Learn one new class from its k shot embeddings (k, V)."""
-    idx = store.n_ways
+    """Learn one new class from its k shot embeddings (k, V).
+
+    Overflow contract: at ``n_ways == max_ways`` the update is a masked
+    no-op — the store is returned unchanged (n_ways does NOT increment,
+    no row is overwritten).  dynamic_update_index_in_dim would otherwise
+    clamp the write onto the last learned row, silently corrupting it
+    while n_ways kept counting.  Traced callers stay jit-safe; host
+    callers (the session service) raise before reaching the op."""
+    max_ways = store.s_sums.shape[0]
+    ok = store.n_ways < max_ways
+    idx = jnp.minimum(store.n_ways, max_ways - 1)
     s = shot_embeddings.astype(jnp.float32).sum(axis=0)
+    k = jnp.float32(shot_embeddings.shape[0])
+    # .set (not .add) on counts: a row re-learned after store reset/clear
+    # must not inherit residue from its previous occupant (tenancy.py's
+    # bank_add_class already followed this rule)
     return PrototypeStore(
-        s_sums=jax.lax.dynamic_update_index_in_dim(store.s_sums, s, idx, 0),
-        counts=store.counts.at[idx].add(shot_embeddings.shape[0]),
-        n_ways=store.n_ways + 1,
+        s_sums=jax.lax.dynamic_update_index_in_dim(
+            store.s_sums, jnp.where(ok, s, store.s_sums[idx]), idx, 0),
+        counts=store.counts.at[idx].set(
+            jnp.where(ok, k, store.counts[idx])),
+        n_ways=store.n_ways + ok.astype(jnp.int32),
     )
 
 

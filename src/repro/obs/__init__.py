@@ -27,11 +27,14 @@ from repro.obs.metrics import (
     Histogram,
     MetricsRegistry,
     default_registry,
+    latency_summary,
+    merge_histogram_rows,
 )
 from repro.obs.trace import Tracer, get_tracer, trace
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "default_registry",
+    "latency_summary", "merge_histogram_rows",
     "Tracer", "get_tracer", "trace",
     "acceptance_stats", "decode_occupancy", "env_device_counters",
     "occupancy_stats", "valid_stats",

@@ -154,6 +154,44 @@ class Histogram:
                             if n}}
 
 
+def merge_histogram_rows(rows: Iterable[dict]) -> Histogram:
+    """Merge ``snapshot()``-encoded histogram rows into one ``Histogram``.
+    Log2 buckets ADD exactly (same fixed bounds everywhere), and count/
+    sum/min/max recombine losslessly — only quantiles stay bucket-
+    approximate, exactly as in any single histogram."""
+    m = Histogram()
+    for r in rows:
+        if not r.get("count"):
+            continue
+        for i, n in r["buckets"].items():
+            m.buckets[int(i)] += n
+        m.count += r["count"]
+        m.sum += r["sum"]
+        m.min = min(m.min, r["min"])
+        m.max = max(m.max, r["max"])
+    return m
+
+
+def latency_summary(rows: Iterable[dict], *, by: str | None = None) -> dict:
+    """The bench-side latency schema: count/p50/p99/mean of the merged
+    rows, plus (with ``by="shape"`` etc.) a per-label breakdown under
+    ``by_<label>``.  Shared by session_throughput, serve_load, and the
+    served CL curve so ``check_regression`` gates one shape everywhere."""
+    rows = [r for r in rows if r.get("count")]
+    m = merge_histogram_rows(rows)
+    out = {
+        "count": m.count,
+        "p50_us": m.percentile(50),
+        "p99_us": m.percentile(99),
+        "mean_us": m.mean,
+    }
+    if by is not None:
+        out[f"by_{by}"] = {r["labels"].get(by, "?"):
+                           {"count": r["count"], "p50_us": r["p50"],
+                            "p99_us": r["p99"]} for r in rows}
+    return out
+
+
 _KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
 
 

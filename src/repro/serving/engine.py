@@ -130,6 +130,9 @@ class LMServer:
     def poll(self, sid: int) -> dict:
         return self.service.poll(sid)
 
+    def enroll(self, sid: int, shots, **kwargs) -> int:
+        return self.service.enroll(sid, shots, **kwargs)
+
     def stats(self) -> dict:
         return self.service.stats()
 
@@ -216,6 +219,9 @@ class TCNStreamServer:
 
     def poll(self, sid: int) -> dict:
         return self.service.poll(sid)
+
+    def enroll(self, sid: int, shots, **kwargs) -> int:
+        return self.service.enroll(sid, shots, **kwargs)
 
     def stats(self) -> dict:
         return self.service.stats()

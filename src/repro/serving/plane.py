@@ -27,8 +27,9 @@ there are no locks because there is no cross-task sharing.  Compiled
 dispatches run synchronously inside the worker task (they hold the GIL
 anyway; an executor would add latency without adding parallelism).  Each
 cycle the worker takes the longest FIFO prefix of its queue that fits
-one grid dispatch: control ops (open/park/resume/close/poll) execute
-inline — admission happens BETWEEN chunk dispatches, never inside one —
+one grid dispatch: control ops (open/enroll/park/resume/close/poll)
+execute inline — admission and bank updates happen BETWEEN chunk
+dispatches, never inside one —
 and pushes accumulate into a ragged batch, cut at the first op that
 cannot join (duplicate session in batch, or batch already n_slots wide).
 Strict-prefix cutting makes ordering per worker global-FIFO, which is
@@ -72,10 +73,10 @@ class Rejected(RuntimeError):
 
 @dataclass
 class _Op:
-    kind: str                    # open | push | park | resume | close | poll
+    kind: str          # open | push | enroll | park | resume | close | poll
     fut: asyncio.Future
     sid: int | None = None       # worker-local sid (None for open)
-    work: Any = None             # push payload
+    work: Any = None             # push payload / enroll shots
     args: tuple = ()             # open_session positional args
     kwargs: dict = field(default_factory=dict)
 
@@ -131,6 +132,7 @@ class ServingPlane:
         self.tracer = tracer if tracer is not None else get_tracer()
         reg = self.metrics_registry
         self._c_batches = reg.counter("plane_batches_total")
+        self._c_enrolls = reg.counter("plane_enrolls_total")
         self._c_rejected = {r: reg.counter("plane_rejected_total", reason=r)
                             for r in ("queue_full", "admission")}
         self._h_lanes = reg.histogram("plane_batch_lanes")
@@ -179,8 +181,18 @@ class ServingPlane:
         """Admit a session; returns a plane-level session id.  Raises
         ``Rejected(retryable=True)`` when the target worker's queue is full
         or its service refuses admission (``AdmissionError`` — including
-        ``PoolExhausted`` under the paged layout)."""
+        ``PoolExhausted`` under the paged layout).
+
+        ``tenant`` picks the worker (stable affinity hash), and for
+        tenant-aware services (``service.tenant_aware``, e.g. the TCN
+        slot grid's per-tenant prototype banks) it is ALSO forwarded to
+        ``open_session`` so the session binds to that tenant's bank —
+        every later ``enroll``/``push`` then lands on the worker holding
+        the tenant's rows.  For affinity-only services (LM) it routes
+        without being forwarded."""
         w = self._route(tenant)
+        if tenant is not None and getattr(w.service, "tenant_aware", False):
+            kwargs = {**kwargs, "tenant": tenant}
         op = _Op("open", self._fut(), args=args, kwargs=kwargs)
         self._enqueue(w, op)
         sid = await op.fut
@@ -198,6 +210,19 @@ class ServingPlane:
         w, sid = self._lookup(psid)
         op = _Op("push", self._fut(), sid=sid, work=work)
         self._enqueue(w, op)
+        return await op.fut
+
+    async def enroll(self, psid: int, shots, **kwargs) -> int:
+        """Streaming enrollment: fold shots into the session's tenant bank
+        (sessions.SessionService.enroll).  Tenant affinity is free — the
+        session already lives on its tenant's worker, so the bank update
+        lands where the rows are warm.  Ordered FIFO with the session's
+        pushes: a push enqueued after an enroll classifies against the
+        updated bank."""
+        w, sid = self._lookup(psid)
+        op = _Op("enroll", self._fut(), sid=sid, work=shots, kwargs=kwargs)
+        self._enqueue(w, op)
+        self._c_enrolls.inc()
         return await op.fut
 
     async def park(self, psid: int) -> None:
@@ -302,6 +327,8 @@ class ServingPlane:
         try:
             if op.kind == "open":
                 res = svc.open_session(*op.args, **op.kwargs)
+            elif op.kind == "enroll":
+                res = svc.enroll(op.sid, op.work, **op.kwargs)
             else:
                 res = getattr(svc, op.kind)(op.sid)
         except AdmissionError as e:

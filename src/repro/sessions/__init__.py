@@ -16,11 +16,16 @@ state + many more sessions than compiled slots) for BOTH serving paths:
                    dispatches (exact forced-token scan / parallel chunk)
   * paging.py    — paged slot memory: block-pool allocator, CoW refcounts,
                    exact-prefix block registry (LMSessionService paged=True)
+  * bankpool.py  — paged tenant banks: block-granular prototype rows over
+                   the same allocator (StreamSessionService paged_bank=True)
+  * rehearsal.py — bounded latent-replay buffer of u4 log2 embeddings
 
 Both concrete services conform to the structural ``SessionService``
-protocol defined here (open_session / push / park / resume / close /
-poll / metrics / stats); the async serving plane (serving/plane.py)
-programs against the protocol only.  ``stats()`` always contains the
+protocol defined here (open_session / push / enroll / park / resume /
+close / poll / metrics / stats); the async serving plane
+(serving/plane.py) programs against the protocol only.  ``enroll`` is
+the streaming-learning verb — services without a learnable head keep
+the surface but raise ``NotImplementedError``.  ``stats()`` always contains the
 ``STATS_SCHEMA`` keys and ``metrics()`` snapshots always contain the
 ``METRICS_SCHEMA`` series — asserted for both services by
 tests/test_service_protocol.py.
@@ -36,6 +41,7 @@ from repro.sessions.lm import (
     make_prefill_paged,
     pow2_chunks,
 )
+from repro.sessions.bankpool import PagedBankPool, paged_bank_fc
 from repro.sessions.paging import (
     NULL_BLOCK,
     BlockPool,
@@ -43,6 +49,7 @@ from repro.sessions.paging import (
     PrefixCache,
     prefix_keys,
 )
+from repro.sessions.rehearsal import RehearsalBuffer
 from repro.sessions.scheduler import AdmissionError, CapacityError, SlotScheduler
 from repro.sessions.spec import (
     SpeculativeDecoder,
@@ -144,6 +151,7 @@ class SessionService(Protocol):
 
     def open_session(self, *args: Any, **kwargs: Any) -> int: ...
     def push(self, work: dict[int, Any]) -> dict[int, Any]: ...
+    def enroll(self, sid: int, shots: Any, **kwargs: Any) -> int: ...
     def park(self, sid: int) -> None: ...
     def resume(self, sid: int) -> None: ...
     def close(self, sid: int) -> None: ...
@@ -159,6 +167,7 @@ __all__ = [
     "LMSessionService", "make_decode_scan", "make_decode_scan_paged",
     "make_prefill_column", "make_prefill_paged", "pow2_chunks",
     "NULL_BLOCK", "BlockPool", "PoolExhausted", "PrefixCache", "prefix_keys",
+    "PagedBankPool", "paged_bank_fc", "RehearsalBuffer",
     "SpeculativeDecoder", "make_verify_chunk", "make_verify_chunk_paged",
     "make_verify_scan", "make_verify_scan_paged", "ngram_drafter",
     "column_pspecs", "decode_parked", "gather_column", "grid_init",

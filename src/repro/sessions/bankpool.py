@@ -1,0 +1,274 @@
+"""Paged per-tenant prototype banks over the block-pool allocator.
+
+The dense ``TenantBank`` (tenancy.py) pre-allocates max_tenants x max_ways
+FC rows — fine for 8 keyword ways, wrong for the paper's CL headline
+(§III-A / Fig. 15: 250 classes learned one at a time).  This module pages
+the bank the same way sessions/paging.py pages KV slots: way rows live in
+a shared device pool of ``(n_blocks + 1, block_ways, V)`` and each tenant
+reads it through a host-side block table, so
+
+  * a tenant's bank GROWS one block at a time as it enrolls past each
+    ``block_ways`` boundary — capacity is pooled, not per-tenant;
+  * a PARKED tenant holds ZERO device rows: ``park`` copies its blocks to
+    host and frees the ids, ``unpark`` re-allocates and scatters the same
+    fp32 bytes back (bit-identical — prototype rows are content, not
+    layout);
+  * exhaustion is ``PoolExhausted`` (an ``AdmissionError``), the same
+    back-pressure contract as paged session admission.
+
+Block id 0 is the reserved NULL block (never written by a live tenant):
+slot tables are NULL-padded, and ``paged_bank_fc`` masks every row index
+>= the tenant's way count to bias -inf, so NULL garbage can never win an
+argmax.  The FC math is ``store_fc`` verbatim (W = s/k, b = -||W||^2/2),
+so at equal class counts the paged gather is bit-identical to the dense
+``bank_fc`` path — asserted by tests and the served CL bench.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sessions.paging import NULL_BLOCK, BlockPool
+
+
+class PagedBankPool:
+    """Block-granular tenant prototype storage + host block tables.
+
+    Device state: ``s_sums (extent, block_ways, V)`` and ``counts
+    (extent, block_ways)``, both fp32 (extent = n_blocks + 1, row 0 is
+    NULL).  Host state: per-tenant block-id tables, way counts, and the
+    parked-blob store.  All mutation is host-driven ``.at[]`` updates —
+    the enroll path is cold relative to the scan, so clarity wins.
+    """
+
+    def __init__(self, n_blocks: int, block_ways: int, dim: int,
+                 max_tenant_blocks: int):
+        if block_ways < 1:
+            raise ValueError(f"block_ways must be >= 1, got {block_ways}")
+        if max_tenant_blocks < 1:
+            raise ValueError(
+                f"max_tenant_blocks must be >= 1, got {max_tenant_blocks}")
+        self.block_ways = int(block_ways)
+        self.dim = int(dim)
+        self.max_tenant_blocks = int(max_tenant_blocks)
+        self.pool = BlockPool(n_blocks)
+        self.s_sums = jnp.zeros((self.pool.extent, block_ways, dim),
+                                jnp.float32)
+        self.counts = jnp.zeros((self.pool.extent, block_ways), jnp.float32)
+        self.tables: dict[int, list[int]] = {}   # tenant -> block ids
+        self.n_ways: dict[int, int] = {}         # tenant -> enrolled ways
+        self._parked: dict[int, dict] = {}       # tenant -> host blob
+
+    # -- capacity -----------------------------------------------------------
+    @property
+    def max_ways(self) -> int:
+        """Per-tenant way cap (table width x block granularity)."""
+        return self.max_tenant_blocks * self.block_ways
+
+    def row_bytes(self, tenant: int) -> int:
+        """Device bytes currently held by ``tenant`` (block-granular; a
+        parked tenant holds zero)."""
+        per_block = self.block_ways * (self.dim + 1) * 4  # fp32 sums+counts
+        return len(self.tables.get(tenant, ())) * per_block
+
+    # -- tenant lifecycle ---------------------------------------------------
+    def create(self, tenant: int) -> None:
+        if tenant in self.n_ways:
+            raise ValueError(f"tenant {tenant} already exists in bank pool")
+        self.tables[tenant] = []
+        self.n_ways[tenant] = 0
+
+    def drop(self, tenant: int) -> None:
+        """Free every block the tenant holds (resident or parked)."""
+        for bid in self.tables.pop(tenant, ()):
+            self.pool.free(bid)
+        self.n_ways.pop(tenant, None)
+        self._parked.pop(tenant, None)
+
+    def is_resident(self, tenant: int) -> bool:
+        return tenant in self.n_ways and tenant not in self._parked
+
+    # -- enrollment ---------------------------------------------------------
+    def _grow(self, tenant: int) -> None:
+        """Append one zeroed block to the tenant's table.  Zeroing on alloc
+        (not free) keeps the residue contract local: a block recycled from
+        another tenant never leaks its old sums into fresh ways."""
+        table = self.tables[tenant]
+        if len(table) >= self.max_tenant_blocks:
+            raise RuntimeError(
+                f"tenant {tenant} at max_ways={self.max_ways}")
+        bid = self.pool.alloc()  # may raise PoolExhausted (back-pressure)
+        self.s_sums = self.s_sums.at[bid].set(0.0)
+        self.counts = self.counts.at[bid].set(0.0)
+        table.append(bid)
+
+    def add_class(self, tenant: int, shot_embeddings) -> int:
+        """Enroll the tenant's next way from (k, V) shot embeddings.
+        Returns the new global way index.  Raises at the way cap (host
+        guard — the op-level masked no-op of ``store_add_class`` has no
+        traced counterpart here because tables are host state)."""
+        if tenant in self._parked:
+            raise RuntimeError(f"tenant {tenant} is parked; unpark first")
+        way = self.n_ways[tenant]
+        if way >= self.max_ways:
+            raise RuntimeError(
+                f"tenant {tenant} at max_ways={self.max_ways}")
+        if way % self.block_ways == 0:
+            self._grow(tenant)
+        bid = self.tables[tenant][way // self.block_ways]
+        r = way % self.block_ways
+        s = jnp.asarray(shot_embeddings, jnp.float32).sum(axis=0)
+        k = jnp.float32(np.asarray(shot_embeddings).shape[0])
+        # .set on both leaves (the bank_add_class residue rule)
+        self.s_sums = self.s_sums.at[bid, r].set(s)
+        self.counts = self.counts.at[bid, r].set(k)
+        self.n_ways[tenant] = way + 1
+        return way
+
+    def update_class(self, tenant: int, way: int, shot_embeddings) -> None:
+        """Refine an enrolled way with more shots (running mean, Eq. 3/6)."""
+        if tenant in self._parked:
+            raise RuntimeError(f"tenant {tenant} is parked; unpark first")
+        if not 0 <= way < self.n_ways[tenant]:
+            raise ValueError(f"way {way} not enrolled for tenant {tenant} "
+                             f"({self.n_ways[tenant]} ways)")
+        bid = self.tables[tenant][way // self.block_ways]
+        r = way % self.block_ways
+        s = jnp.asarray(shot_embeddings, jnp.float32).sum(axis=0)
+        k = jnp.float32(np.asarray(shot_embeddings).shape[0])
+        self.s_sums = self.s_sums.at[bid, r].add(s)
+        self.counts = self.counts.at[bid, r].add(k)
+
+    def set_way(self, tenant: int, way: int, s_sum, count) -> None:
+        """Overwrite one way's running sums (the rehearsal-rebuild path)."""
+        if tenant in self._parked:
+            raise RuntimeError(f"tenant {tenant} is parked; unpark first")
+        if not 0 <= way < self.n_ways[tenant]:
+            raise ValueError(f"way {way} not enrolled for tenant {tenant}")
+        bid = self.tables[tenant][way // self.block_ways]
+        r = way % self.block_ways
+        self.s_sums = self.s_sums.at[bid, r].set(
+            jnp.asarray(s_sum, jnp.float32))
+        self.counts = self.counts.at[bid, r].set(jnp.float32(count))
+
+    # -- park / unpark ------------------------------------------------------
+    def park(self, tenant: int) -> None:
+        """Copy the tenant's blocks to host and free the device rows.
+        Idempotent; a zero-way tenant parks to an empty blob."""
+        if tenant not in self.n_ways:
+            raise KeyError(f"unknown tenant {tenant}")
+        if tenant in self._parked:
+            return
+        bids = self.tables[tenant]
+        self._parked[tenant] = {
+            "s_sums": np.asarray(self.s_sums[np.asarray(bids, np.int32)])
+            if bids else np.zeros((0, self.block_ways, self.dim), np.float32),
+            "counts": np.asarray(self.counts[np.asarray(bids, np.int32)])
+            if bids else np.zeros((0, self.block_ways), np.float32),
+        }
+        for bid in bids:
+            self.pool.free(bid)
+        self.tables[tenant] = []
+
+    def unpark(self, tenant: int) -> None:
+        """Re-allocate blocks and scatter the parked fp32 bytes back — the
+        row contents are bit-identical to what ``park`` copied out."""
+        blob = self._parked.pop(tenant, None)
+        if blob is None:
+            return
+        n = blob["s_sums"].shape[0]
+        try:
+            bids = [self.pool.alloc() for _ in range(n)]
+        except Exception:
+            self._parked[tenant] = blob  # failed unpark leaves it parked
+            raise
+        if bids:
+            idx = jnp.asarray(np.asarray(bids, np.int32))
+            self.s_sums = self.s_sums.at[idx].set(
+                jnp.asarray(blob["s_sums"]))
+            self.counts = self.counts.at[idx].set(
+                jnp.asarray(blob["counts"]))
+        self.tables[tenant] = bids
+
+    # -- persistence --------------------------------------------------------
+    def pack(self, tenant: int) -> dict:
+        """JSON-able host copy of the tenant's bank (resident or parked):
+        rows flattened to (blocks * block_ways, V) — layout-free, so a
+        spill restores into any pool geometry with the same block_ways."""
+        if tenant in self._parked:
+            blob = self._parked[tenant]
+            s, c = blob["s_sums"], blob["counts"]
+        else:
+            bids = self.tables[tenant]
+            s = (np.asarray(self.s_sums[np.asarray(bids, np.int32)])
+                 if bids else np.zeros((0, self.block_ways, self.dim),
+                                       np.float32))
+            c = (np.asarray(self.counts[np.asarray(bids, np.int32)])
+                 if bids else np.zeros((0, self.block_ways), np.float32))
+        return {"s_sums": s.reshape(-1, self.dim).tolist(),
+                "counts": c.reshape(-1).tolist(),
+                "n_ways": int(self.n_ways[tenant])}
+
+    def adopt(self, tenant: int, packed: dict) -> None:
+        """Create ``tenant`` from a ``pack`` blob, PARKED (zero device
+        rows) — residency is re-established lazily on first use."""
+        self.create(tenant)
+        n_ways = int(packed["n_ways"])
+        s = np.asarray(packed["s_sums"], np.float32).reshape(-1, self.dim)
+        c = np.asarray(packed["counts"], np.float32).reshape(-1)
+        n_blocks = (n_ways + self.block_ways - 1) // self.block_ways
+        need = n_blocks * self.block_ways
+        if s.shape[0] < need:
+            pad = need - s.shape[0]
+            s = np.concatenate([s, np.zeros((pad, self.dim), np.float32)])
+            c = np.concatenate([c, np.zeros((pad,), np.float32)])
+        self.n_ways[tenant] = n_ways
+        self._parked[tenant] = {
+            "s_sums": s[:need].reshape(n_blocks, self.block_ways, self.dim),
+            "counts": c[:need].reshape(n_blocks, self.block_ways),
+        }
+
+    # -- the scan-side view --------------------------------------------------
+    def slot_tables(self, tenant_of_slot) -> tuple[np.ndarray, np.ndarray]:
+        """Per-slot gather view for ``paged_bank_fc``: a NULL-padded
+        (S, max_tenant_blocks) int32 block table plus the (S,) way counts.
+        Slots whose tenant is absent or parked read all-NULL rows with a
+        way count of 0 (every row masked to -inf)."""
+        S = len(tenant_of_slot)
+        tables = np.full((S, self.max_tenant_blocks), NULL_BLOCK, np.int32)
+        ways = np.zeros(S, np.int32)
+        for s, t in enumerate(tenant_of_slot):
+            t = int(t)
+            if t < 0 or t in self._parked or t not in self.n_ways:
+                continue
+            bids = self.tables[t]
+            tables[s, :len(bids)] = bids
+            ways[s] = self.n_ways[t]
+        return tables, ways
+
+    # -- introspection ------------------------------------------------------
+    def stats(self) -> dict:
+        return {"blocks_live": self.pool.n_live,
+                "blocks_free": self.pool.n_free,
+                "block_ways": self.block_ways,
+                "resident_tenants": sum(1 for t in self.n_ways
+                                        if t not in self._parked),
+                "parked_tenants": len(self._parked)}
+
+
+def paged_bank_fc(s_sums_pool, counts_pool, tables, n_ways):
+    """FC weights/bias per SLOT from the paged pool — ``store_fc`` over a
+    block-table gather.  tables: (S, MB) int32 block ids (NULL-padded);
+    n_ways: (S,) int32.  Returns W (S, MB*BW, V), b (S, MB*BW) with every
+    row >= n_ways[s] masked to bias -inf (NULL/garbage rows never win)."""
+    s = s_sums_pool[tables]                   # (S, MB, BW, V)
+    c = counts_pool[tables]                   # (S, MB, BW)
+    S, MB, BW, V = s.shape
+    s = s.reshape(S, MB * BW, V)
+    c = c.reshape(S, MB * BW)
+    w = s / jnp.maximum(c, 1.0)[..., None]
+    b = -jnp.sum(jnp.square(w), axis=-1) / 2.0
+    live = jnp.arange(MB * BW)[None, :] < n_ways[:, None]
+    b = jnp.where(live, b, -jnp.inf)
+    return w, b

@@ -1,0 +1,106 @@
+"""Bounded rehearsal memory of u4 log2-quantized shot embeddings.
+
+Running-mean prototypes (Eq. 6) are exact but *irreversible*: once shots
+are folded into ``s_sums`` they cannot be re-weighted, re-clustered, or
+replayed after a backbone update.  Latent-replay CL (Ravaglia et al.,
+PAPERS.md) keeps a small buffer of frozen-layer activations instead and
+rebuilds the classifier from it — trading a bounded, quantized memory for
+the ability to recompute.  This module is that buffer for the prototype
+head: per (tenant, way) reservoirs of shot embeddings stored as 4-bit
+signed log2 codes (quant/log2.py, the paper's weight codebook) packed two
+to a byte with one fp32 scale per shot — ~V/2 + 4 bytes per shot vs 4V
+for fp32.
+
+``rebuild`` dequantizes a reservoir and re-sums it into (s_sum, count)
+rows; the served CL bench measures the accuracy cost of classifying from
+rebuilt-quantized prototypes against the exact running sums as the class
+count grows, and ``check_regression --cl`` holds the gap.
+
+Reservoir sampling keeps each class's buffer a uniform sample of ALL its
+shots ever offered, so long-lived classes do not bias toward recency.
+Deterministic: the reservoir RNG is seeded per buffer.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.quant.log2 import (
+    compute_scale,
+    dequantize_log2,
+    pack_nibbles,
+    quantize_log2,
+    unpack_nibbles,
+)
+
+
+class RehearsalBuffer:
+    """Per-(tenant, way) bounded reservoirs of quantized embeddings."""
+
+    def __init__(self, cap_per_class: int = 8, seed: int = 0):
+        if cap_per_class < 1:
+            raise ValueError(
+                f"cap_per_class must be >= 1, got {cap_per_class}")
+        self.cap = int(cap_per_class)
+        self._rng = np.random.default_rng(seed)
+        # (tenant, way) -> list of (packed u4 codes (ceil(V/2),), fp32 scale)
+        self._mem: dict[tuple[int, int], list] = {}
+        self._seen: dict[tuple[int, int], int] = {}  # shots ever offered
+
+    @staticmethod
+    def _encode(row: np.ndarray):
+        v = row.astype(np.float32)
+        if v.shape[0] % 2:  # pack_nibbles needs an even last axis
+            v = np.concatenate([v, np.zeros(1, np.float32)])
+        scale = float(np.asarray(compute_scale(v)))
+        codes = np.asarray(quantize_log2(v, scale))
+        return np.asarray(pack_nibbles(codes)), scale
+
+    @staticmethod
+    def _decode(packed: np.ndarray, scale: float, dim: int) -> np.ndarray:
+        codes = np.asarray(unpack_nibbles(packed))
+        return np.asarray(dequantize_log2(codes, scale))[:dim]
+
+    def add(self, tenant: int, way: int, embeddings) -> None:
+        """Offer (k, V) shot embeddings to the (tenant, way) reservoir."""
+        emb = np.asarray(embeddings, np.float32)
+        key = (tenant, way)
+        mem = self._mem.setdefault(key, [])
+        for row in emb:
+            seen = self._seen.get(key, 0)
+            item = self._encode(row)
+            if len(mem) < self.cap:
+                mem.append(item)
+            else:  # reservoir: keep a uniform sample of all shots offered
+                j = int(self._rng.integers(0, seen + 1))
+                if j < self.cap:
+                    mem[j] = item
+            self._seen[key] = seen + 1
+
+    def n_shots(self, tenant: int, way: int) -> int:
+        return len(self._mem.get((tenant, way), ()))
+
+    def rebuild(self, tenant: int, way: int, dim: int):
+        """Dequantize the reservoir into prototype rows: (s_sum (V,) fp32,
+        count).  Raises KeyError when the class has no buffered shots."""
+        mem = self._mem.get((tenant, way))
+        if not mem:
+            raise KeyError(f"no rehearsal shots for tenant {tenant} "
+                           f"way {way}")
+        rows = np.stack([self._decode(p, s, dim) for p, s in mem])
+        return rows.astype(np.float32).sum(axis=0), len(mem)
+
+    def drop(self, tenant: int) -> None:
+        for key in [k for k in self._mem if k[0] == tenant]:
+            del self._mem[key]
+            self._seen.pop(key, None)
+
+    def nbytes(self, tenant: int | None = None) -> int:
+        """Host bytes of the buffer (packed codes + one fp32 scale per
+        shot) — the bounded-memory claim the bench reports."""
+        total = 0
+        for (t, _), mem in self._mem.items():
+            if tenant is not None and t != tenant:
+                continue
+            total += sum(p.nbytes + 4 for p, _ in mem)
+        return total

@@ -83,7 +83,10 @@ from repro.sessions.state import (
     slot_park_bytes,
     unpack_slot,
 )
+from repro.sessions.bankpool import PagedBankPool, paged_bank_fc
+from repro.sessions.rehearsal import RehearsalBuffer
 from repro.sessions.tenancy import (
+    TenantBank,
     bank_add_class,
     bank_clear_tenant,
     bank_fc,
@@ -129,6 +132,9 @@ class SlotGridService:
 
     _session_cls = SessionRecord
     _service_name = "grid"  # metrics/trace label; subclasses override
+    # services with real per-tenant state (prototype banks) set this so the
+    # serving plane forwards its routing tenant into open_session too
+    tenant_aware = False
 
     def __init__(self, n_slots: int, *, t_chunk: int = 1,
                  max_sessions: int | None = None,
@@ -271,6 +277,12 @@ class SlotGridService:
     def _on_unbind(self, slot: int) -> None:
         pass
 
+    def _on_evict(self, sid: int, slot: int) -> None:
+        """Lifecycle hook for the eviction path: ``sid`` was just packed
+        off ``slot`` to make room for another session.  Distinct from
+        ``_on_unbind`` (park/close), which fires when a slot goes truly
+        idle — an evicted slot is re-occupied immediately."""
+
     def _on_close(self, sid: int, sess) -> None:
         pass
 
@@ -297,6 +309,7 @@ class SlotGridService:
                     blob = self._pack(slot, evicted)
                 self._park_store(evicted, blob)
                 self._c_evictions.inc()
+                self._on_evict(evicted, slot)
                 if self.tracer.enabled:
                     cost = self.sched.cost_fn(evicted) \
                         if self.sched.cost_fn is not None else None
@@ -359,6 +372,14 @@ class SlotGridService:
         self._park_take(sid)
         sess = self.sessions.pop(sid)
         self._on_close(sid, sess)
+
+    def enroll(self, sid: int, shots, **kwargs) -> int:
+        """Protocol verb (sessions.SessionService): streaming on-device
+        learning.  Services with a learnable head override this (the TCN
+        façade aliases ``enroll_shots``); everyone else keeps the protocol
+        surface but refuses the verb."""
+        raise NotImplementedError(
+            f"{self._service_name} service does not support enrollment")
 
     def _touch_and_bind(self, sids) -> None:
         """Pre-dispatch placement: pin this tick's sessions, then bind any
@@ -494,6 +515,7 @@ class StreamSessionService(SlotGridService):
 
     _session_cls = _Session
     _service_name = "tcn"
+    tenant_aware = True  # plane routing tenants bind real bank rows here
 
     def __init__(self, bundle, params, bn_state=None, *, n_slots: int = 8,
                  max_tenants: int = 8, max_ways: int = 8,
@@ -502,6 +524,8 @@ class StreamSessionService(SlotGridService):
                  cost_fn: Callable[[int], float] | None = None,
                  stale_window: int = 0, fused: bool | None = None,
                  kernel_backend: str | None = None,
+                 paged_bank: bool = False, bank_block_ways: int = 4,
+                 bank_blocks: int | None = None, rehearsal_cap: int = 0,
                  metrics: MetricsRegistry | None = None, tracer=None,
                  device_counters: bool | None = None,
                  runtime: RuntimeConfig | None = None):
@@ -534,18 +558,54 @@ class StreamSessionService(SlotGridService):
                 params, bn_state, cfg, quantize=quantize)
 
         self.states = grid_init(cfg, n_slots)
-        self.bank = bank_init(max_tenants, max_ways, cfg.embed_dim)
+        # Bank layout: dense (T, max_ways, V) enroll-once table, or the
+        # paged pool (sessions/bankpool.py) where way rows are allocated
+        # block-at-a-time as tenants enroll past each block_ways boundary
+        # and parked tenants hold zero device rows.  max_ways becomes the
+        # per-tenant GROWTH CAP in paged mode (rounded up to whole blocks)
+        # rather than a pre-paid allocation.
+        self.paged_bank = bool(paged_bank)
+        if self.paged_bank:
+            mtb = -(-max_ways // bank_block_ways)  # ceil
+            if bank_blocks is None:
+                bank_blocks = max_tenants * mtb
+            self.bankpool = PagedBankPool(bank_blocks, bank_block_ways,
+                                          cfg.embed_dim, mtb)
+            self.bank = None
+        else:
+            self.bankpool = None
+            self.bank = bank_init(max_tenants, max_ways, cfg.embed_dim)
         if mesh is not None:  # shard slots over data, banks over model
             from jax.sharding import NamedSharding
             nd = lambda p: NamedSharding(mesh, p)
             self.states = jax.device_put(
                 self.states, jax.tree.map(nd, grid_pspecs(cfg, mesh, n_slots)))
-            self.bank = jax.device_put(
-                self.bank, jax.tree.map(nd, bank_pspecs(self.bank, mesh)))
+            if self.bank is not None:
+                self.bank = jax.device_put(
+                    self.bank, jax.tree.map(nd, bank_pspecs(self.bank, mesh)))
         self.mesh = mesh
         self.tenant_of_slot = np.full(n_slots, NO_TENANT, np.int32)
         self._free_tenants = list(range(max_tenants))
         self._tenant_ways = np.zeros(max_tenants, np.int32)  # host mirror
+        # label-keyed streaming enrollment: per-tenant class registry so
+        # repeated enroll(label=...) calls fold into ONE way's running mean
+        self._tenant_labels: dict[int, dict] = {}
+        # bounded latent-replay memory (sessions/rehearsal.py)
+        self.rehearsal = RehearsalBuffer(rehearsal_cap) \
+            if rehearsal_cap > 0 else None
+        reg = self.metrics_registry
+        self._c_enrolls = reg.counter("enrolls_total", service="tcn")
+        self._c_enroll_shots = reg.counter("enroll_shots_total", service="tcn")
+        self._h_enroll = reg.histogram("enroll_latency_us", service="tcn")
+        if self.paged_bank:
+            self._g_pool_live = reg.gauge("bank_pool_blocks_live",
+                                          service="tcn")
+            self._g_pool_free = reg.gauge("bank_pool_blocks_free",
+                                          service="tcn")
+            self._update_pool_gauges()
+        if self.rehearsal is not None:
+            self._g_rehearsal_bytes = reg.gauge("rehearsal_bytes",
+                                                service="tcn")
 
         # params/bn enter the jitted scan as ARGUMENTS, not closure
         # constants: XLA constant-folds closure BN chains differently per
@@ -555,12 +615,25 @@ class StreamSessionService(SlotGridService):
         self._params = params
         self._bn = bn_state
 
-        def _banked(emb, bank, tenant_ids):
-            w, b = bank_fc(bank)
-            s, t = emb.shape[0], emb.shape[1]
-            tl = pn_logits_banked(emb.reshape(s * t, emb.shape[-1]), w, b,
-                                  jnp.repeat(tenant_ids, t))
-            return tl.reshape(s, t, -1)
+        if self.paged_bank:
+            # per-slot FC tables gathered through the block tables; the
+            # row math is store_fc verbatim and the contraction is the
+            # SAME pn_logits_banked einsum as the dense path (indexed by
+            # slot instead of tenant), so at equal way counts the logits
+            # are bit-identical to the dense bank path (tested)
+            def _banked(emb, pool_s, pool_c, tables, ways):
+                w, b = paged_bank_fc(pool_s, pool_c, tables, ways)
+                s, t = emb.shape[0], emb.shape[1]
+                tl = pn_logits_banked(emb.reshape(s * t, emb.shape[-1]), w, b,
+                                      jnp.repeat(jnp.arange(s), t))
+                return tl.reshape(s, t, -1)
+        else:
+            def _banked(emb, bank, tenant_ids):
+                w, b = bank_fc(bank)
+                s, t = emb.shape[0], emb.shape[1]
+                tl = pn_logits_banked(emb.reshape(s * t, emb.shape[-1]), w, b,
+                                      jnp.repeat(tenant_ids, t))
+                return tl.reshape(s, t, -1)
 
         # device counters ride the SAME dispatch as extra outputs (one
         # in-jit reduce of the validity mask) — the state math is the
@@ -568,10 +641,10 @@ class StreamSessionService(SlotGridService):
         # bit-identical on session state (tests/test_obs.py asserts it)
         dev = self.device_counters
 
-        def _scan(p, bn, states, x, valid, bank, tenant_ids):
+        def _scan(p, bn, states, x, valid, *bank_args):
             new_states, emb, logits = grid_scan(
                 p, bn, cfg, states, x, valid, quantize=quantize)
-            out = (new_states, emb, logits, _banked(emb, bank, tenant_ids))
+            out = (new_states, emb, logits, _banked(emb, *bank_args))
             return out + (valid_stats(valid),) if dev else out
 
         self._scan = jax.jit(_scan)
@@ -579,10 +652,10 @@ class StreamSessionService(SlotGridService):
             fused_chunk = make_grid_fused(cfg, quantize=quantize,
                                           backend=kernel_backend)
 
-            def _scan_fused(fp, states, x, lengths, bank, tenant_ids):
+            def _scan_fused(fp, states, x, lengths, *bank_args):
                 new_states, emb, logits = fused_chunk(fp, states, x, lengths)
                 out = (new_states, emb, logits,
-                       _banked(emb, bank, tenant_ids))
+                       _banked(emb, *bank_args))
                 return out + (occupancy_stats(lengths, x.shape[1]),) \
                     if dev else out
 
@@ -607,18 +680,61 @@ class StreamSessionService(SlotGridService):
         self.tenant_of_slot[slot] = self.sessions[sid].tenant
 
     def _on_unbind(self, slot: int) -> None:
+        tenant = int(self.tenant_of_slot[slot])
         self.tenant_of_slot[slot] = NO_TENANT
+        self._maybe_park_tenant(tenant)
+
+    def _on_evict(self, sid: int, slot: int) -> None:
+        # the eviction path bypasses _on_unbind (the slot is re-occupied
+        # immediately), but the paged bank still needs to know when a
+        # tenant's LAST bound session left the grid
+        self._maybe_park_tenant(int(self.tenant_of_slot[slot]))
 
     # -- tenants ------------------------------------------------------------
+    def _tenant_idle(self, tenant: int) -> bool:
+        """True when no BOUND session belongs to ``tenant`` (parked
+        sessions don't hold bank residency)."""
+        return all(self.sessions[sid].tenant != tenant
+                   for sid in self.sched.slot_of)
+
+    def _maybe_park_tenant(self, tenant: int) -> None:
+        """Paged mode: spill an idle tenant's bank rows to host so parked
+        tenants hold zero device rows (the pool invariant)."""
+        if (self.paged_bank and tenant != NO_TENANT
+                and tenant in self.bankpool.n_ways
+                and self.bankpool.is_resident(tenant)
+                and self._tenant_idle(tenant)):
+            self.bankpool.park(tenant)
+            self._update_pool_gauges()
+
+    def _ensure_bank_resident(self, tenant: int) -> None:
+        if self.paged_bank and not self.bankpool.is_resident(tenant):
+            self.bankpool.unpark(tenant)  # may raise PoolExhausted
+            self._update_pool_gauges()
+
+    def _update_pool_gauges(self) -> None:
+        self._g_pool_live.set(self.bankpool.pool.n_live)
+        self._g_pool_free.set(self.bankpool.pool.n_free)
+
     def create_tenant(self) -> int:
         if not self._free_tenants:
             raise RuntimeError("tenant bank full")
-        return self._free_tenants.pop(0)
+        tenant = self._free_tenants.pop(0)
+        if self.paged_bank:
+            self.bankpool.create(tenant)
+        return tenant
 
     def close_tenant(self, tenant: int) -> None:
         if any(s.tenant == tenant for s in self.sessions.values()):
             raise RuntimeError(f"tenant {tenant} still has open sessions")
-        self.bank = bank_clear_tenant(self.bank, tenant)
+        if self.paged_bank:
+            self.bankpool.drop(tenant)
+            self._update_pool_gauges()
+        else:
+            self.bank = bank_clear_tenant(self.bank, tenant)
+        self._tenant_labels.pop(tenant, None)
+        if self.rehearsal is not None:
+            self.rehearsal.drop(tenant)
         self._tenant_ways[tenant] = 0
         self._free_tenants.append(tenant)
 
@@ -637,12 +753,16 @@ class StreamSessionService(SlotGridService):
                     f"tenant {tenant} out of range [0, {len(self._tenant_ways)})")
             if tenant in self._free_tenants:  # claim an uncreated row
                 self._free_tenants.remove(tenant)
+                if self.paged_bank:
+                    self.bankpool.create(tenant)
                 claimed = True
         sid = self._alloc_sid()
         try:
             self.sched.admit(sid)  # may raise AdmissionError (back-pressure)
         except Exception:
             if claimed:  # don't leak the tenant row on refused admission
+                if self.paged_bank:
+                    self.bankpool.drop(tenant)
                 self._free_tenants.insert(0, tenant)
             raise
         self.sessions[sid] = _Session(tenant=tenant, dedicated=dedicated)
@@ -670,7 +790,11 @@ class StreamSessionService(SlotGridService):
         tenant_meta = {}
         for sid in self.parking:
             t = self.sessions[sid].tenant
-            if t != NO_TENANT:
+            if t == NO_TENANT or str(t) in tenant_meta:
+                continue
+            if self.paged_bank:
+                tenant_meta[str(t)] = self.bankpool.pack(t)
+            else:
                 row = bank_pack_tenant(self.bank, t)
                 tenant_meta[str(t)] = {
                     "s_sums": row["s_sums"].tolist(),
@@ -693,10 +817,15 @@ class StreamSessionService(SlotGridService):
         for t_str, row in meta.get("tenants", {}).items():
             t = int(t_str)
             self._free_tenants.remove(t)
-            self.bank = bank_unpack_tenant(self.bank, t, {
-                "s_sums": np.asarray(row["s_sums"], np.float32),
-                "counts": np.asarray(row["counts"], np.float32),
-                "n_ways": np.asarray(row["n_ways"], np.int32)})
+            if self.paged_bank:
+                # adopted PARKED (zero device rows); the first push or
+                # enroll re-establishes residency
+                self.bankpool.adopt(t, row)
+            else:
+                self.bank = bank_unpack_tenant(self.bank, t, {
+                    "s_sums": np.asarray(row["s_sums"], np.float32),
+                    "counts": np.asarray(row["counts"], np.float32),
+                    "n_ways": np.asarray(row["n_ways"], np.int32)})
             self._tenant_ways[t] = int(row["n_ways"])
 
     def _restore_session(self, info: dict):
@@ -739,6 +868,13 @@ class StreamSessionService(SlotGridService):
                 raise ValueError(f"session {sid}: empty chunk")
             arrs[sid] = a
         self._touch_and_bind(chunks)
+        if self.paged_bank:
+            # every pushed session's tenant must hold its bank rows on
+            # device before the dispatch reads them through the tables
+            for sid in arrs:
+                t = self.sessions[sid].tenant
+                if t != NO_TENANT:
+                    self._ensure_bank_resident(t)
 
         slot_of = {sid: self.sched.slot_of[sid] for sid in arrs}
         lens = {sid: a.shape[0] for sid, a in arrs.items()}
@@ -756,6 +892,12 @@ class StreamSessionService(SlotGridService):
                     tick_lens[slot_of[sid]] = seg.shape[0]
             shape = f"T{t_pad}"
             dev_stats = None
+            if self.paged_bank:
+                tables, ways = self.bankpool.slot_tables(self.tenant_of_slot)
+                bank_args = (self.bankpool.s_sums, self.bankpool.counts,
+                             jnp.asarray(tables), jnp.asarray(ways))
+            else:
+                bank_args = (self.bank, jnp.asarray(self.tenant_of_slot))
             t0 = time.perf_counter()
             with self.tracer.span("dispatch", cat="tcn", shape=shape,
                                   lanes=len(arrs),
@@ -764,16 +906,18 @@ class StreamSessionService(SlotGridService):
                     self.states, emb, logits, tlogits, *dev = \
                         self._scan_fused(
                             self._fused_params, self.states, jnp.asarray(x),
-                            jnp.asarray(tick_lens), self.bank,
-                            jnp.asarray(self.tenant_of_slot))
+                            jnp.asarray(tick_lens), *bank_args)
                 else:
                     valid = np.arange(t_pad)[None, :] < tick_lens[:, None]
                     self.states, emb, logits, tlogits, *dev = self._scan(
                         self._params, self._bn, self.states, jnp.asarray(x),
-                        jnp.asarray(valid), self.bank,
-                        jnp.asarray(self.tenant_of_slot))
+                        jnp.asarray(valid), *bank_args)
                 emb, logits, tlogits = (np.asarray(emb), np.asarray(logits),
                                         np.asarray(tlogits))
+                if self.paged_bank:
+                    # table width is block-granular (>= max_ways); keep
+                    # the result surface mode-independent
+                    tlogits = tlogits[..., :self.max_ways]
                 if dev:
                     dev_stats = np.asarray(dev[0])
             self._record_dispatch(time.perf_counter() - t0, shape)
@@ -813,29 +957,104 @@ class StreamSessionService(SlotGridService):
 
     # -- FSL / CL enrollment (live, mid-stream) -----------------------------
     def enroll_shots(self, sid: int, shots, *, embedded: bool = False,
-                     way: int | None = None) -> int:
-        """Enroll k shots as a new way (or refine ``way``) for the session's
-        tenant.  shots: (k, T, C_in) raw clips (embedded via the shared
-        backbone) or (k, V) embeddings when ``embedded=True``.  The tenant's
-        very next ``push_audio`` classifies against the updated bank."""
+                     way: int | None = None, label=None) -> int:
+        """Streaming enrollment: fold k shots into the session's tenant
+        bank and return the way index.  shots: (k, T, C_in) raw clips
+        (embedded via the shared backbone) or (k, V) embeddings when
+        ``embedded=True``.  The tenant's very next ``push_audio``
+        classifies against the updated bank.
+
+        Three addressing modes, all incremental per-class running means
+        (Eq. 6 over the s_sums/counts layout):
+
+          * ``way=None, label=None`` — append a NEW way (one-shot CL);
+          * ``way=j``                — refine an enrolled way;
+          * ``label=x``              — streaming: the first enroll of a
+            label appends a way, later enrolls of the same label refine
+            it — the caller never tracks way indices.
+
+        In paged-bank mode the tenant's rows grow a block at a time from
+        the shared pool (PoolExhausted = back-pressure) and a parked
+        tenant is made resident for the update (and re-parked if it has
+        no bound sessions, preserving the zero-device-rows invariant)."""
+        t0 = time.perf_counter()
         tenant = self.sessions[sid].tenant
         if tenant == NO_TENANT:
             raise ValueError("session has no tenant; open with tenant=None "
                              "or an explicit tenant id to personalize")
-        emb = jnp.asarray(shots) if embedded else self._embed(jnp.asarray(shots))
-        if way is None:
-            if self._tenant_ways[tenant] >= self.max_ways:
-                raise RuntimeError(f"tenant {tenant} at max_ways={self.max_ways}")
-            self.bank = bank_add_class(self.bank, tenant, emb)
-            way = int(self._tenant_ways[tenant])
-            self._tenant_ways[tenant] += 1
-        else:
-            if not 0 <= way < self._tenant_ways[tenant]:
-                raise ValueError(
-                    f"way {way} not enrolled for tenant {tenant} "
-                    f"({self._tenant_ways[tenant]} ways); omit way= to enroll")
-            self.bank = bank_update_class(self.bank, tenant, way, emb)
+        with self.tracer.span("enroll", cat="tcn", sid=sid, tenant=tenant):
+            emb = jnp.asarray(shots) if embedded \
+                else self._embed(jnp.asarray(shots))
+            if label is not None:
+                if way is not None:
+                    raise ValueError("pass way= or label=, not both")
+                way = self._tenant_labels.setdefault(tenant, {}).get(label)
+            if way is None:
+                if self._tenant_ways[tenant] >= self.max_ways:
+                    raise RuntimeError(
+                        f"tenant {tenant} at max_ways={self.max_ways}")
+                if self.paged_bank:
+                    self._ensure_bank_resident(tenant)
+                    way = self.bankpool.add_class(tenant, emb)
+                    self._update_pool_gauges()
+                else:
+                    self.bank = bank_add_class(self.bank, tenant, emb)
+                    way = int(self._tenant_ways[tenant])
+                self._tenant_ways[tenant] += 1
+                if label is not None:
+                    self._tenant_labels[tenant][label] = way
+            else:
+                if not 0 <= way < self._tenant_ways[tenant]:
+                    raise ValueError(
+                        f"way {way} not enrolled for tenant {tenant} "
+                        f"({self._tenant_ways[tenant]} ways); omit way= to "
+                        "enroll")
+                if self.paged_bank:
+                    self._ensure_bank_resident(tenant)
+                    self.bankpool.update_class(tenant, way, emb)
+                else:
+                    self.bank = bank_update_class(self.bank, tenant, way, emb)
+            if self.rehearsal is not None:
+                self.rehearsal.add(tenant, way, np.asarray(emb))
+                self._g_rehearsal_bytes.set(self.rehearsal.nbytes())
+            # honest latency: the bank update must have landed on device
+            jax.block_until_ready(
+                self.bankpool.s_sums if self.paged_bank else self.bank.s_sums)
+            self._maybe_park_tenant(tenant)
+        self._c_enrolls.inc()
+        self._c_enroll_shots.inc(int(np.asarray(shots).shape[0]))
+        self._h_enroll.record((time.perf_counter() - t0) * 1e6)
         return way
+
+    # protocol verb (sessions.SessionService): learning is first-class
+    enroll = enroll_shots
+
+    def rehearse_tenant(self, tenant: int) -> int:
+        """Rebuild every enrolled way of ``tenant`` from the bounded
+        rehearsal buffer (latent replay: dequantized u4 log2 embeddings
+        re-summed into prototype rows), REPLACING the exact running sums.
+        Returns the number of ways rebuilt.  The served CL bench measures
+        the accuracy cost of exactly this substitution."""
+        if self.rehearsal is None:
+            raise RuntimeError(
+                "service built with rehearsal_cap=0; no buffer to replay")
+        n = int(self._tenant_ways[tenant])
+        if self.paged_bank:
+            self._ensure_bank_resident(tenant)
+        for way in range(n):
+            s, k = self.rehearsal.rebuild(tenant, way, self.cfg.embed_dim)
+            if self.paged_bank:
+                self.bankpool.set_way(tenant, way, s, k)
+            else:
+                self.bank = TenantBank(
+                    s_sums=self.bank.s_sums.at[tenant, way].set(
+                        jnp.asarray(s)),
+                    counts=self.bank.counts.at[tenant, way].set(
+                        jnp.float32(k)),
+                    n_ways=self.bank.n_ways)
+        if self.paged_bank:
+            self._maybe_park_tenant(tenant)
+        return n
 
     # -- introspection ------------------------------------------------------
     def poll(self, sid: int) -> dict:
@@ -858,6 +1077,17 @@ class StreamSessionService(SlotGridService):
 
     def _extra_stats(self) -> dict:
         # what one tenant's prototype row costs in a spill (the paper's
-        # 26 B/way personalization-cost story)
-        return {"tenant_row_bytes": bank_row_bytes(self.bank),
-                "fused": self.fused}
+        # 26 B/way personalization-cost story); paged mode prices one
+        # BLOCK (the allocation granule) and reports pool occupancy
+        if self.paged_bank:
+            bp = self.bankpool
+            extra = {"tenant_row_bytes":
+                     bp.block_ways * (self.cfg.embed_dim + 1) * 4}
+            extra.update({f"bank_pool_{k}": v for k, v in bp.stats().items()})
+        else:
+            extra = {"tenant_row_bytes": bank_row_bytes(self.bank)}
+        extra["fused"] = self.fused
+        extra["paged_bank"] = self.paged_bank
+        if self.rehearsal is not None:
+            extra["rehearsal_bytes"] = self.rehearsal.nbytes()
+        return extra

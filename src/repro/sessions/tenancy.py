@@ -73,15 +73,25 @@ def bank_set_store(bank: TenantBank, tenant: int,
 
 def bank_add_class(bank: TenantBank, tenant: int,
                    shot_embeddings: jax.Array) -> TenantBank:
-    """Enroll one new way for ``tenant`` from its (k, V) shot embeddings."""
-    way = bank.n_ways[tenant]
+    """Enroll one new way for ``tenant`` from its (k, V) shot embeddings.
+
+    Overflow contract matches ``store_add_class``: at max_ways the update
+    is a masked no-op (``.at[tenant, way]`` would clamp onto the last
+    learned row otherwise).  The service's host mirror raises before this
+    point; direct callers get an unchanged bank instead of corruption."""
+    max_ways = bank.s_sums.shape[1]
+    ok = bank.n_ways[tenant] < max_ways
+    way = jnp.minimum(bank.n_ways[tenant], max_ways - 1)
     s = shot_embeddings.astype(jnp.float32).sum(axis=0)
+    k = jnp.float32(shot_embeddings.shape[0])
     return TenantBank(
         # .set (not .add) on BOTH leaves: a new way must not inherit residue
         # from a previously cleared or misused row
-        s_sums=bank.s_sums.at[tenant, way].set(s),
-        counts=bank.counts.at[tenant, way].set(shot_embeddings.shape[0]),
-        n_ways=bank.n_ways.at[tenant].add(1),
+        s_sums=bank.s_sums.at[tenant, way].set(
+            jnp.where(ok, s, bank.s_sums[tenant, way])),
+        counts=bank.counts.at[tenant, way].set(
+            jnp.where(ok, k, bank.counts[tenant, way])),
+        n_ways=bank.n_ways.at[tenant].add(ok.astype(jnp.int32)),
     )
 
 

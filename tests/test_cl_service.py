@@ -1,0 +1,430 @@
+"""Streaming continual learning as a service: paged tenant banks over the
+block pool, bounded rehearsal replay, the plane enroll verb, and the
+overflow contracts of the prototype-store ops."""
+
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_bundle
+from repro.models.tcn import tcn_empty_state
+from repro.serving import ServingPlane
+from repro.sessions import (
+    PagedBankPool,
+    RehearsalBuffer,
+    StreamSessionService,
+    bank_add_class,
+    bank_init,
+    paged_bank_fc,
+)
+from repro.sessions.paging import NULL_BLOCK, PoolExhausted
+
+
+def _setup(seed=0):
+    cfg = get_config("chameleon-tcn").replace(
+        tcn_channels=(8, 8), tcn_kernel=3, tcn_in_channels=2,
+        embed_dim=12, n_classes=4)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(seed))
+    bn = tcn_empty_state(cfg)
+    bn = jax.tree.map(
+        lambda a: a + 0.05 * jnp.abs(
+            jax.random.normal(jax.random.key(7), a.shape)), bn)
+    return cfg, bundle, params, bn
+
+
+def _svc(paged, **kw):
+    cfg, bundle, params, bn = _setup()
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_tenants", 2)
+    kw.setdefault("max_ways", 5)
+    return StreamSessionService(bundle, params, bn, paged_bank=paged,
+                                bank_block_ways=2, **kw)
+
+
+def _fc_rows(pool, tenant):
+    tables, ways = pool.slot_tables(np.array([tenant], np.int32))
+    w, b = paged_bank_fc(pool.s_sums, pool.counts,
+                         jnp.asarray(tables), jnp.asarray(ways))
+    return np.asarray(w[0]), np.asarray(b[0])
+
+
+# ---------------------------------------------------------------------------
+# bankpool.py: the paged tenant bank
+# ---------------------------------------------------------------------------
+
+def test_bankpool_grows_block_at_a_time_to_cap():
+    pool = PagedBankPool(8, block_ways=3, dim=4, max_tenant_blocks=2)
+    pool.create(0)
+    assert pool.row_bytes(0) == 0
+    rng = np.random.default_rng(0)
+    for j in range(6):
+        assert pool.add_class(0, rng.normal(size=(2, 4))) == j
+        assert len(pool.tables[0]) == j // 3 + 1
+    assert pool.pool.n_live == 2
+    assert pool.row_bytes(0) == 2 * 3 * 5 * 4  # blocks * BW * (V+1) * fp32
+    with pytest.raises(RuntimeError, match="max_ways"):
+        pool.add_class(0, rng.normal(size=(2, 4)))
+
+
+def test_bankpool_park_unpark_bit_identical_and_zero_rows():
+    pool = PagedBankPool(8, block_ways=2, dim=4, max_tenant_blocks=3)
+    pool.create(0)
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        pool.add_class(0, rng.normal(size=(2, 4)))
+    w0, b0 = _fc_rows(pool, 0)
+    pool.park(0)
+    assert pool.pool.n_live == 0 and pool.row_bytes(0) == 0
+    assert not pool.is_resident(0)
+    tables, ways = pool.slot_tables(np.array([0], np.int32))
+    assert (tables == NULL_BLOCK).all() and ways[0] == 0  # parked = masked
+    pool.park(0)  # idempotent
+    pool.unpark(0)
+    w1, b1 = _fc_rows(pool, 0)
+    np.testing.assert_array_equal(w0, w1)
+    np.testing.assert_array_equal(b0, b1)
+
+
+def test_bankpool_exhaustion_and_failed_unpark_stays_parked():
+    pool = PagedBankPool(1, block_ways=2, dim=4, max_tenant_blocks=2)
+    pool.create(0)
+    pool.create(1)
+    x = np.ones((1, 4), np.float32)
+    pool.add_class(0, x)
+    with pytest.raises(PoolExhausted):
+        pool.add_class(1, x)  # the single block is taken
+    pool.park(0)
+    pool.add_class(1, 2 * x)  # freed block recycled
+    with pytest.raises(PoolExhausted):
+        pool.unpark(0)
+    assert not pool.is_resident(0)  # blob intact, still parked
+    pool.drop(1)
+    pool.unpark(0)
+    w, _ = _fc_rows(pool, 0)
+    np.testing.assert_array_equal(w[0], x[0])
+
+
+def test_bankpool_recycled_block_carries_no_residue():
+    pool = PagedBankPool(1, block_ways=2, dim=4, max_tenant_blocks=1)
+    pool.create(0)
+    pool.add_class(0, np.full((2, 4), 3.0, np.float32))
+    pool.add_class(0, np.full((1, 4), 5.0, np.float32))
+    pool.drop(0)
+    pool.create(1)
+    pool.add_class(1, np.ones((1, 4), np.float32))
+    bid = pool.tables[1][0]
+    # way 1 of the recycled block must be zeroed, not tenant 0's old sums
+    assert float(np.asarray(pool.counts[bid, 1])) == 0.0
+    np.testing.assert_array_equal(np.asarray(pool.s_sums[bid, 1]),
+                                  np.zeros(4, np.float32))
+
+
+def test_bankpool_pack_adopt_roundtrip_parked():
+    pool = PagedBankPool(4, block_ways=2, dim=4, max_tenant_blocks=2)
+    pool.create(0)
+    rng = np.random.default_rng(2)
+    for _ in range(3):
+        pool.add_class(0, rng.normal(size=(2, 4)))
+    w0, b0 = _fc_rows(pool, 0)
+    blob = pool.pack(0)
+    other = PagedBankPool(4, block_ways=2, dim=4, max_tenant_blocks=2)
+    other.adopt(7, blob)
+    assert not other.is_resident(7)  # adopted parked: zero device rows
+    assert other.pool.n_live == 0
+    other.unpark(7)
+    w1, b1 = _fc_rows(other, 7)
+    np.testing.assert_array_equal(w0, w1)
+    np.testing.assert_array_equal(b0, b1)
+
+
+# ---------------------------------------------------------------------------
+# tenancy.py: bank_add_class overflow contract (satellite of the
+# store_add_class fix — same silent-clamp audit)
+# ---------------------------------------------------------------------------
+
+def test_bank_add_class_overflow_masked_noop():
+    bank = bank_init(2, 2, 4)
+    rng = np.random.default_rng(3)
+    a, b = rng.normal(size=(2, 4)), rng.normal(size=(3, 4))
+    bank = bank_add_class(bank, 0, jnp.asarray(a))
+    bank = bank_add_class(bank, 0, jnp.asarray(b))
+    before = jax.tree.map(np.asarray, bank)
+    bank = bank_add_class(bank, 0, jnp.asarray(10 * a))  # tenant 0 is full
+    assert int(bank.n_ways[0]) == 2  # did NOT clamp-overwrite way 1
+    np.testing.assert_array_equal(np.asarray(bank.s_sums), before.s_sums)
+    np.testing.assert_array_equal(np.asarray(bank.counts), before.counts)
+    bank = bank_add_class(bank, 1, jnp.asarray(b))  # neighbor still open
+    assert int(bank.n_ways[1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# rehearsal.py: bounded latent replay
+# ---------------------------------------------------------------------------
+
+def test_rehearsal_reservoir_bounded_bytes_and_rebuild():
+    buf = RehearsalBuffer(cap_per_class=4, seed=0)
+    rng = np.random.default_rng(4)
+    buf.add(0, 0, rng.normal(size=(10, 6)))
+    assert buf.n_shots(0, 0) == 4
+    s, k = buf.rebuild(0, 0, 6)
+    assert k == 4 and s.shape == (6,) and s.dtype == np.float32
+    assert buf.nbytes(0) == 4 * (3 + 4)  # 6 nibbles packed + fp32 scale
+    assert buf.nbytes() == buf.nbytes(0)
+    buf.add(1, 0, rng.normal(size=(2, 6)))
+    assert buf.nbytes() > buf.nbytes(0)
+    buf.drop(0)
+    with pytest.raises(KeyError):
+        buf.rebuild(0, 0, 6)
+
+
+def test_rehearsal_under_cap_keeps_every_shot():
+    buf = RehearsalBuffer(cap_per_class=8, seed=0)
+    emb = np.random.default_rng(5).normal(size=(3, 5)).astype(np.float32)
+    buf.add(0, 2, emb)
+    s, k = buf.rebuild(0, 2, 5)
+    assert k == 3
+    # u4 log2 codes keep sign and coarse magnitude: the rebuilt sum must
+    # point the same way as the exact sum
+    exact = emb.sum(axis=0)
+    cos = float(np.dot(s, exact) /
+                (np.linalg.norm(s) * np.linalg.norm(exact)))
+    assert cos > 0.8
+
+
+# ---------------------------------------------------------------------------
+# service: paged vs dense, growth, parking, label-keyed enrollment
+# ---------------------------------------------------------------------------
+
+def test_paged_service_bit_identical_to_dense():
+    """Same enrolls, same pushes: the paged bank path must produce
+    bit-identical tenant logits to the dense enroll-once bank."""
+    rng = np.random.default_rng(6)
+    shots = [rng.normal(size=(2, 10, 2)).astype(np.float32)
+             for _ in range(5)]
+    x = rng.normal(size=(12, 2)).astype(np.float32)
+
+    def run(paged):
+        svc = _svc(paged)
+        sid = svc.open_session(tenant=None)
+        outs = []
+        for s in shots:  # grows past the 2-way block boundary twice
+            svc.enroll_shots(sid, s)
+            outs.append(svc.push_audio({sid: x})[sid])
+        return svc, outs
+
+    dsvc, dense = run(False)
+    psvc, paged = run(True)
+    assert psvc.bankpool.pool.n_live == 3  # ceil(5 ways / 2 per block)
+    for rd, rp in zip(dense, paged):
+        assert rd["tenant_logits"].shape == rp["tenant_logits"].shape
+        np.testing.assert_array_equal(rd["tenant_logits"],
+                                      rp["tenant_logits"])
+        np.testing.assert_array_equal(rd["emb"], rp["emb"])
+        assert rd["pred"] == rp["pred"]
+
+
+def test_paged_tenant_parks_on_park_and_push_restores_bit_identical():
+    rng = np.random.default_rng(7)
+    shots = rng.normal(size=(2, 10, 2)).astype(np.float32)
+    x1 = rng.normal(size=(8, 2)).astype(np.float32)
+    x2 = rng.normal(size=(8, 2)).astype(np.float32)
+
+    def run(with_park):
+        svc = _svc(True)
+        sid = svc.open_session(tenant=None)
+        tenant = svc.sessions[sid].tenant
+        svc.enroll_shots(sid, shots)
+        svc.push_audio({sid: x1})
+        if with_park:
+            svc.park(sid)  # last bound session leaves -> bank parks
+            assert svc.bankpool.stats()["blocks_live"] == 0
+            assert not svc.bankpool.is_resident(tenant)
+            assert svc.stats()["bank_pool_blocks_live"] == 0
+        return svc.push_audio({sid: x2})[sid]  # lazy rebind + unpark
+
+    plain, parked = run(False), run(True)
+    np.testing.assert_array_equal(plain["tenant_logits"],
+                                  parked["tenant_logits"])
+    assert plain["pred"] == parked["pred"]
+
+
+def test_paged_tenant_parks_on_eviction():
+    """The eviction path bypasses _on_unbind; the _on_evict hook must
+    still release the outgoing tenant's bank rows."""
+    rng = np.random.default_rng(8)
+    svc = _svc(True, n_slots=1)
+    s1 = svc.open_session(tenant=None)
+    t1 = svc.sessions[s1].tenant
+    svc.enroll_shots(s1, rng.normal(size=(2, 10, 2)).astype(np.float32))
+    assert svc.bankpool.is_resident(t1)
+    s2 = svc.open_session(tenant=None)  # binding evicts s1 from the grid
+    assert not svc.bankpool.is_resident(t1)  # evicted tenant parked
+    svc.enroll_shots(s2, rng.normal(size=(1, 10, 2)).astype(np.float32))
+    r = svc.push_audio({s1: rng.normal(size=(4, 2)).astype(np.float32)})
+    assert svc.bankpool.is_resident(t1)  # pushing restored residency
+    assert np.isfinite(r[s1]["tenant_logits"][-1][0])
+
+
+def test_enroll_label_keyed_streaming_append_then_refine():
+    for paged in (False, True):
+        svc = _svc(paged)
+        sid = svc.open_session(tenant=None)
+        # integer-valued embeddings make the running-mean fold exact, so
+        # label-refinement must EQUAL enrolling all shots at once
+        a1 = np.array([[2., 0., 4.] + [0.] * 9], np.float32)
+        a2 = np.array([[4., 2., 0.] + [0.] * 9], np.float32)
+        b = np.array([[0., 8., 2.] + [0.] * 9], np.float32)
+        assert svc.enroll_shots(sid, a1, embedded=True, label="cat") == 0
+        assert svc.enroll_shots(sid, b, embedded=True, label="dog") == 1
+        assert svc.enroll_shots(sid, a2, embedded=True, label="cat") == 0
+        assert svc.poll(sid)["n_ways"] == 2
+        ref = _svc(paged)
+        rid = ref.open_session(tenant=None)
+        ref.enroll_shots(rid, np.concatenate([a1, a2]), embedded=True)
+        ref.enroll_shots(rid, b, embedded=True)
+        if paged:
+            w0, b0 = _fc_rows(svc.bankpool, svc.sessions[sid].tenant)
+            w1, b1 = _fc_rows(ref.bankpool, ref.sessions[rid].tenant)
+        else:
+            w0, b0 = (np.asarray(svc.bank.s_sums[0]),
+                      np.asarray(svc.bank.counts[0]))
+            w1, b1 = (np.asarray(ref.bank.s_sums[0]),
+                      np.asarray(ref.bank.counts[0]))
+        np.testing.assert_array_equal(w0, w1)
+        np.testing.assert_array_equal(b0, b1)
+        with pytest.raises(ValueError, match="not both"):
+            svc.enroll_shots(sid, a1, embedded=True, label="cat", way=0)
+
+
+def test_enroll_past_max_ways_raises_not_clamps():
+    for paged in (False, True):
+        svc = _svc(paged, max_ways=2)
+        sid = svc.open_session(tenant=None)
+        one = np.ones((1, 12), np.float32)
+        svc.enroll_shots(sid, one, embedded=True)
+        svc.enroll_shots(sid, 2 * one, embedded=True)
+        with pytest.raises(RuntimeError, match="max_ways"):
+            svc.enroll_shots(sid, 3 * one, embedded=True)
+        assert svc.poll(sid)["n_ways"] == 2
+
+
+def test_paged_enroll_pool_exhaustion_is_admission_error():
+    # 1 shared block for 2 tenants: the second tenant's first enroll must
+    # surface the paging back-pressure type, not corrupt the first
+    svc = _svc(True, bank_blocks=1)
+    s1 = svc.open_session(tenant=0)
+    s2 = svc.open_session(tenant=1)
+    one = np.ones((1, 12), np.float32)
+    svc.enroll_shots(s1, one, embedded=True)
+    with pytest.raises(PoolExhausted):
+        svc.enroll_shots(s2, one, embedded=True)
+    assert svc.poll(s1)["n_ways"] == 1 and svc.poll(s2)["n_ways"] == 0
+
+
+def test_rehearse_tenant_rebuilds_from_buffer():
+    svc = _svc(True, rehearsal_cap=8)
+    sid = svc.open_session(tenant=None)
+    tenant = svc.sessions[sid].tenant
+    # well-separated axis-aligned prototypes survive u4 log2 replay
+    emb = np.zeros((3, 2, 12), np.float32)
+    for c in range(3):
+        emb[c, :, 4 * c] = (8.0, 4.0)
+    for c in range(3):
+        svc.enroll_shots(sid, emb[c], embedded=True)
+    w0, _ = _fc_rows(svc.bankpool, tenant)
+    assert svc.rehearse_tenant(tenant) == 3
+    w1, b1 = _fc_rows(svc.bankpool, tenant)
+    for c in range(3):  # direction preserved: each way still argmaxes
+        q = jnp.asarray(w0[c][None])
+        logits = np.asarray(jnp.einsum("bv,nv->bn", q, jnp.asarray(w1))
+                            + jnp.asarray(b1)[None])
+        assert logits[0, :3].argmax() == c
+    svc2 = _svc(True)  # rehearsal disabled
+    sid2 = svc2.open_session(tenant=None)
+    with pytest.raises(RuntimeError, match="rehearsal"):
+        svc2.rehearse_tenant(svc2.sessions[sid2].tenant)
+
+
+def test_paged_spill_restore_roundtrip(tmp_path):
+    """Persistence: a paged tenant's bank rides the spill as the same
+    JSON blob schema, restores PARKED, and classifies identically."""
+    rng = np.random.default_rng(9)
+    shots = rng.normal(size=(2, 10, 2)).astype(np.float32)
+    x1 = rng.normal(size=(8, 2)).astype(np.float32)
+    x2 = rng.normal(size=(8, 2)).astype(np.float32)
+    svc = _svc(True)
+    sid = svc.open_session(tenant=None)
+    svc.enroll_shots(sid, shots)
+    svc.push_audio({sid: x1})
+    svc.park(sid)
+    path = tmp_path / "spill.json"
+    svc.spill_parking(str(path))
+    fresh = _svc(True)
+    assert fresh.restore_parking(str(path)) == [sid]
+    assert fresh.bankpool.pool.n_live == 0  # restored parked
+    # both resume the SAME parked stream state; the restored replica must
+    # continue it bit-identically, bank rows included
+    want = svc.push_audio({sid: x2})[sid]
+    got = fresh.push_audio({sid: x2})[sid]
+    np.testing.assert_array_equal(want["tenant_logits"],
+                                  got["tenant_logits"])
+
+
+# ---------------------------------------------------------------------------
+# serving plane: the enroll verb
+# ---------------------------------------------------------------------------
+
+def test_plane_enroll_verb_routes_and_orders_fifo():
+    rng = np.random.default_rng(10)
+    shots1 = rng.normal(size=(2, 10, 2)).astype(np.float32)
+    shots2 = rng.normal(size=(1, 10, 2)).astype(np.float32)
+    x = rng.normal(size=(6, 2)).astype(np.float32)
+    svc = _svc(True)
+    plane = ServingPlane(svc, metrics=svc.metrics_registry)
+
+    async def main():
+        async with plane:
+            # tenant is forwarded to the tenant-aware TCN service, not
+            # just used for routing
+            psid = await plane.open_session(tenant=1)
+            assert (await plane.poll(psid))["tenant"] == 1
+            assert await plane.enroll(psid, shots1) == 0
+            # enroll queued BEFORE a push must update the bank the push
+            # classifies with (FIFO within the session)
+            fe = asyncio.ensure_future(plane.enroll(psid, shots2))
+            fp = asyncio.ensure_future(plane.push(psid, x))
+            way, res = await asyncio.gather(fe, fp)
+            assert way == 1
+            assert np.isfinite(res["tenant_logits"][-1][1])  # sees way 1
+            return res
+
+    res = asyncio.run(main())
+    assert svc.metrics()["plane_enrolls_total"][0]["value"] == 2
+    enrolls = [e["value"] for e in svc.metrics()["enrolls_total"]
+               if e["labels"].get("service") == "tcn"]
+    assert enrolls == [2]
+    assert res["pred"] == int(res["tenant_logits"][-1].argmax())
+
+
+def test_enroll_metrics_and_stats_surface():
+    svc = _svc(True, rehearsal_cap=2)
+    sid = svc.open_session(tenant=None)
+    svc.enroll_shots(sid, np.ones((3, 12), np.float32), embedded=True)
+    snap = svc.metrics()
+    get = lambda name: [e for e in snap[name]
+                        if e["labels"].get("service") == "tcn"][0]
+    assert get("enrolls_total")["value"] == 1
+    assert get("enroll_shots_total")["value"] == 3
+    assert get("enroll_latency_us")["count"] == 1
+    assert get("bank_pool_blocks_live")["value"] == 1
+    assert get("rehearsal_bytes")["value"] > 0
+    st = svc.stats()
+    assert st["paged_bank"] is True
+    assert st["tenant_row_bytes"] == 2 * 13 * 4  # block_ways * (V+1) * fp32
+    assert st["bank_pool_blocks_live"] == 1
+    assert st["rehearsal_bytes"] > 0

@@ -109,3 +109,32 @@ def test_adapt_through_embedder():
                     {"x": x}, labels, n_ways=5, k=2)
     assert w.shape == (5, cfg.embed_dim) and b.shape == (5,)
     assert jnp.all(jnp.isfinite(w)) and jnp.all(jnp.isfinite(b))
+
+
+def test_store_add_class_overflow_is_masked_noop():
+    """At capacity, store_add_class must return the store unchanged: the
+    pre-fix dynamic_update_index_in_dim clamp silently overwrote the last
+    learned row while n_ways kept counting."""
+    store = pn.store_init(2, 4)
+    store = pn.store_add_class(store, jnp.ones((2, 4)))
+    store = pn.store_add_class(store, 2 * jnp.ones((3, 4)))
+    full = jax.tree.map(np.asarray, store)
+    store = pn.store_add_class(store, 99 * jnp.ones((1, 4)))  # overflow
+    assert int(store.n_ways) == 2  # did not keep counting
+    np.testing.assert_array_equal(np.asarray(store.s_sums), full.s_sums)
+    np.testing.assert_array_equal(np.asarray(store.counts), full.counts)
+    # and the op stays jit-safe (the service-level host raise is separate)
+    jitted = jax.jit(pn.store_add_class)(store, jnp.ones((1, 4)))
+    assert int(jitted.n_ways) == 2
+
+
+def test_store_add_class_no_count_residue_after_reset():
+    """Re-learning a row after an external n_ways reset must .set counts,
+    not .add onto the previous occupant's k."""
+    store = pn.store_init(2, 4)
+    store = pn.store_add_class(store, jnp.ones((3, 4)))
+    store = store._replace(n_ways=jnp.zeros((), jnp.int32))  # host reset
+    store = pn.store_add_class(store, jnp.ones((2, 4)))
+    assert float(store.counts[0]) == 2.0  # .add would leave 5.0
+    np.testing.assert_array_equal(np.asarray(store.s_sums[0]),
+                                  np.full(4, 2.0, np.float32))

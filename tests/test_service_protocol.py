@@ -87,7 +87,7 @@ def test_conforms_to_protocol(case):
     svc = make()
     assert isinstance(svc, SessionService)
     for verb in ("open_session", "push", "park", "resume", "close",
-                 "poll", "metrics", "stats"):
+                 "poll", "metrics", "stats", "enroll"):
         assert callable(getattr(svc, verb)), verb
 
 

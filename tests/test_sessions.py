@@ -386,6 +386,34 @@ def test_dedicated_tenant_freed_after_sharer_closes():
     assert tid in svc._free_tenants  # freed by the last sharer
 
 
+def test_dedicated_ownership_transfers_through_sharer_chain():
+    """With three sessions on one dedicated row, closing the owner hands
+    ownership to exactly ONE survivor each time; the row is freed only by
+    the final close."""
+    cfg, bundle, params, bn = _setup()
+    svc = StreamSessionService(bundle, params, bn, n_slots=4, max_tenants=2)
+    s1 = svc.open_session(tenant=None)
+    tid = svc.sessions[s1].tenant
+    s2 = svc.open_session(tenant=tid)
+    s3 = svc.open_session(tenant=tid)
+    assert [svc.sessions[s].dedicated for s in (s1, s2, s3)] == \
+        [True, False, False]
+    svc.close(s1)  # owner leaves first
+    owners = [s for s in (s2, s3) if svc.sessions[s].dedicated]
+    assert len(owners) == 1  # exactly one survivor inherits the row
+    assert tid not in svc._free_tenants
+    svc.close(owners[0])  # inherited ownership transfers again
+    last = s3 if owners[0] == s2 else s2
+    assert svc.sessions[last].dedicated
+    assert tid not in svc._free_tenants
+    svc.close(last)
+    assert tid in svc._free_tenants  # freed by the final sharer only
+    # the freed row is recyclable: both dedicated rows open again
+    s4 = svc.open_session(tenant=None)
+    s5 = svc.open_session(tenant=None)
+    assert {svc.sessions[s4].tenant, svc.sessions[s5].tenant} == {0, 1}
+
+
 def test_enroll_refine_rejects_unenrolled_way():
     cfg, bundle, params, bn = _setup()
     svc = StreamSessionService(bundle, params, bn, n_slots=2, max_tenants=1,
