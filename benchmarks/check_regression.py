@@ -37,6 +37,14 @@ Gates (CI fails the job instead of merely uploading the artifact):
     an absolute floor; p99 TTFR and goodput are additionally held
     within ratio of the committed baseline like-for-like (same smoke
     flag);
+  * chaos replay (--chaos BENCH_serve_load.json) — the fault-injected
+    replay's "chaos" section must be present (section-missing is a hard
+    fail: the fault path must run every merge), with zero lost sessions,
+    every crash recovered, every client completed, survivor streams
+    bit-identical to the fault-free control, MTTR p99 bounded, and
+    goodput-under-faults above a catastrophic floor — all absolute
+    properties of the fresh run (the seeded plan makes them
+    deterministic), no baseline needed;
   * served CL curve (--cl BENCH_cl_serve.json) — the streaming-enrollment
     continual-learning bench must be present (section-missing is a hard
     fail), its paged tenant bank bit-identical to the dense enroll-once
@@ -109,6 +117,13 @@ CL_MAX_WAY_BYTES = 512.0   # device bytes per enrolled way (paged bank)
 CL_REHEARSAL_DROP_MAX = 0.15  # rehearsal replay vs exact bank, absolute
 CL_FULL_MIN_WAYS = 250     # the silicon demo's way count (full runs)
 CL_ACC_BASE_MARGIN = 0.05  # vs committed baseline, like-for-like
+# chaos replay (--chaos, the "chaos" section of BENCH_serve_load.json).
+# Zero-lost / bit-identity / recoveries==crashes are exact invariants of
+# the per-op spill journal; MTTR and goodput are absolute guards.  MTTR
+# is adopt-from-journal work (host dict moves, no recompilation), so even
+# a shared-runner hiccup sits far under the 2s bound.
+CHAOS_MTTR_P99_MAX_US = 2_000_000.0
+CHAOS_GOODPUT_FLOOR_TOK_S = 10.0  # faults throttle; catastrophic floor only
 
 
 def _load(path):
@@ -376,6 +391,69 @@ def check_serve(fresh: dict, base: dict | None) -> list[str]:
     return errors
 
 
+def check_chaos(fresh: dict) -> list[str]:
+    """Gate the fault-injected serving replay (--chaos, the "chaos"
+    section of BENCH_serve_load.json).
+
+    Section-missing is a hard fail — it means serve_load ran without
+    ``--chaos`` (or the artifact is stale), and a robustness PR's whole
+    point is that the fault path is exercised every merge.  All gates are
+    absolute properties of the fresh run (determinism makes them
+    reproducible from the recorded plan spec alone, no baseline needed):
+
+      * crashes >= 1 — the seeded plan actually fired (a horizon/rate
+        drift that schedules zero crashes silently guts the gate);
+      * recoveries == crashes — every crash was repaired;
+      * lost_sessions == 0 — the per-op spill journal missed nothing;
+      * completed == sessions — clients retried through to completion;
+      * bit_identical — survivor token streams match the fault-free
+        synchronous control exactly;
+      * MTTR p99 bounded — recovery stays adopt-from-journal cheap, not
+        rebuild-the-world expensive.
+    """
+    errors = []
+    sec = fresh.get("chaos")
+    if sec is None:
+        return ["chaos: fresh results have no 'chaos' section "
+                "(serve_load ran without --chaos, or stale artifact)"]
+    crashes = sec.get("crashes", 0)
+    recoveries = sec.get("recoveries", 0)
+    if crashes < 1:
+        errors.append(f"chaos: plan injected {crashes} crashes (< 1): the "
+                      f"fault schedule never fired")
+    if recoveries != crashes:
+        errors.append(f"chaos: {recoveries} recoveries != {crashes} crashes "
+                      f"(a crashed worker was never rebuilt)")
+    lost = sec.get("lost_sessions", -1)
+    if lost != 0:
+        errors.append(f"chaos: {lost} sessions lost (spill journal must "
+                      f"cover every acknowledged op)")
+    n, done = sec.get("sessions", 0), sec.get("completed", -1)
+    if done != n:
+        errors.append(f"chaos: {done}/{n} sessions completed under faults "
+                      f"(retries must carry every client to completion)")
+    if not sec.get("bit_identical"):
+        errors.append("chaos: survivor token streams diverged from the "
+                      "fault-free synchronous control")
+    mttr = sec.get("mttr", {})
+    p99 = mttr.get("p99_us")
+    if not p99 or p99 <= 0:
+        errors.append(f"chaos: mttr summary malformed: {mttr!r}")
+    elif p99 > CHAOS_MTTR_P99_MAX_US:
+        errors.append(f"chaos: MTTR p99={p99:.0f}us > "
+                      f"{CHAOS_MTTR_P99_MAX_US:.0f}us (recovery no longer "
+                      f"adopt-from-journal cheap)")
+    goodput = sec.get("goodput_tok_s", 0.0)
+    if goodput < CHAOS_GOODPUT_FLOOR_TOK_S:
+        errors.append(f"chaos: goodput under faults {goodput:.1f} tok/s < "
+                      f"floor {CHAOS_GOODPUT_FLOOR_TOK_S} tok/s")
+    print(f"[gate] chaos: {done}/{n} sessions, {crashes} crashes / "
+          f"{recoveries} recoveries, lost={lost}, "
+          f"MTTR p99={p99}us, goodput={goodput} tok/s, "
+          f"bit_identical={sec.get('bit_identical')}")
+    return errors
+
+
 def check_cl(fresh: dict, base: dict | None) -> list[str]:
     """Gate the served continual-learning curve (BENCH_cl_serve.json).
 
@@ -456,6 +534,9 @@ def main():
     ap.add_argument("--serve", default=None,
                     help="BENCH_serve_load.json to gate")
     ap.add_argument("--serve-baseline", default=None)
+    ap.add_argument("--chaos", default=None,
+                    help="BENCH_serve_load.json whose 'chaos' section to "
+                         "gate (fault-injected replay; absolute gates)")
     ap.add_argument("--cl", default=None,
                     help="BENCH_cl_serve.json to gate")
     ap.add_argument("--cl-baseline", default=None)
@@ -478,6 +559,9 @@ def main():
             with open(args.serve_baseline) as f:
                 sbase = json.load(f)
         errors += check_serve(sfresh, sbase)
+    if args.chaos:
+        with open(args.chaos) as f:
+            errors += check_chaos(json.load(f))
     if args.cl:
         with open(args.cl) as f:
             clfresh = json.load(f)

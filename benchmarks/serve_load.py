@@ -23,11 +23,21 @@ Reported through the ``repro.obs`` registry and gated by
     streams must match exactly (continuous batching only changes when
     work is grouped, never what a lane computes).
 
+``--chaos`` appends a second, smaller replay under a seeded fault plan
+(serving/faults.py): every worker is wrapped in a ``FaultInjector``
+drawing crashes, admission storms, and transient flakes from
+``FaultPlan.seeded``, the plane journals every touched session
+(``checkpoint_every=1``), and clients retry every rejected verb through
+``RetryPolicy``.  The report's ``"chaos"`` section carries MTTR
+percentiles, goodput-under-faults, ``lost_sessions`` (must be 0), and a
+bit-identity verdict against the same synchronous control — gated by
+``check_regression.py --chaos``.
+
 Emits ``BENCH_serve_load.json`` + ``BENCH_serve_metrics.json`` (registry
 snapshot); ``--trace out.json`` additionally exports a Perfetto span
 trace of the replay.
 
-    PYTHONPATH=src python -m benchmarks.serve_load [--smoke] \\
+    PYTHONPATH=src python -m benchmarks.serve_load [--smoke] [--chaos] \\
         [--sessions N] [--workers W] [--trace out.json]
 """
 
@@ -42,8 +52,9 @@ import numpy as np
 from repro.configs import RuntimeConfig, get_config
 from repro.models import build_bundle
 from repro.obs import Tracer
-from repro.obs.metrics import default_registry
-from repro.serving import Rejected, ServingPlane
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.serving import (FaultInjector, FaultPlan, Rejected, RetryPolicy,
+                           ServingPlane)
 from repro.sessions import LMSessionService
 
 OUT_PATH = "BENCH_serve_load.json"
@@ -91,11 +102,32 @@ def _make_worker(bundle, params, n_slots: int, runtime: RuntimeConfig,
         runtime=runtime, metrics=registry)
 
 
+async def _retrying(op, policy: RetryPolicy, counters: dict):
+    """Run ``op()`` (an awaitable factory) to completion through the shared
+    retry discipline: retryable ``Rejected`` sleeps per ``RetryPolicy`` —
+    honoring the plane's ``retry_after`` congestion hint as the floor —
+    and retries; anything else propagates."""
+    attempt = 0
+    while True:
+        try:
+            return await op()
+        except Rejected as e:
+            if not e.retryable:
+                raise
+            counters["retries"] += 1
+            await policy.sleep(attempt, e.retry_after)
+            attempt += 1
+
+
 async def _replay(plane: ServingPlane, trace: list[dict], registry,
-                  sample_every: int) -> dict:
+                  sample_every: int, policy: RetryPolicy,
+                  retry_all: bool = False) -> dict:
     """Replay the trace through the plane with a bounded arrival window.
     Returns per-session token streams for the bit-identity sample plus
-    churn counters."""
+    churn counters.  ``retry_all`` extends the retry discipline from
+    opens (admission back-pressure, part of fault-free steady state) to
+    every verb — required under chaos, where pushes and closes also fail
+    retryably (crash / transient / storm)."""
     h_ttfr = registry.histogram("serve_ttfr_us")
     sem = asyncio.Semaphore(WINDOW)
     sampled: dict[int, list[int]] = {}
@@ -104,29 +136,29 @@ async def _replay(plane: ServingPlane, trace: list[dict], registry,
     async def client(i: int, req: dict):
         try:
             t0 = time.perf_counter()
-            attempt = 0
-            while True:  # admission back-pressure: retry with backoff
-                try:
-                    psid = await plane.open_session(
-                        np.array([req["prompt"]], np.int32),
-                        tenant=req["tenant"])
-                    break
-                except Rejected as e:
-                    if not e.retryable:
-                        raise
-                    counters["retries"] += 1
-                    attempt += 1
-                    await asyncio.sleep(min(0.0002 * attempt, 0.01))
+            psid = await _retrying(
+                lambda: plane.open_session(np.array([req["prompt"]],
+                                                    np.int32),
+                                           tenant=req["tenant"]),
+                policy, counters)
             toks: list[int] = []
             first = True
             left = req["len"]
             while left > 0:
-                toks += await plane.push(psid, min(left, T_CHUNK))
+                n = min(left, T_CHUNK)
+                if retry_all:
+                    toks += await _retrying(lambda: plane.push(psid, n),
+                                            policy, counters)
+                else:
+                    toks += await plane.push(psid, n)
                 if first:
                     h_ttfr.record((time.perf_counter() - t0) * 1e6)
                     first = False
-                left -= min(left, T_CHUNK)
-            await plane.close(psid)
+                left -= n
+            if retry_all:
+                await _retrying(lambda: plane.close(psid), policy, counters)
+            else:
+                await plane.close(psid)
             counters["completed"] += 1
             counters["tokens"] += len(toks)
             if i % sample_every == 0:
@@ -187,7 +219,8 @@ def run(n_sessions: int, n_workers: int, n_slots: int, smoke: bool,
 
     async def main():
         async with plane:
-            return await _replay(plane, trace, registry, sample_every)
+            return await _replay(plane, trace, registry, sample_every,
+                                 RetryPolicy(seed=seed))
 
     t0 = time.perf_counter()
     res = asyncio.run(main())
@@ -231,10 +264,94 @@ def run(n_sessions: int, n_workers: int, n_slots: int, smoke: bool,
     return out
 
 
+CHAOS_SESSIONS = 400   # smoke chaos trace (full: 4x)
+
+
+def run_chaos(n_workers: int, n_slots: int, smoke: bool,
+              seed: int = 0) -> dict:
+    """The chaos replay: the same trace machinery under a seeded fault
+    plan.  Every worker is a ``FaultInjector`` over a fresh paged LM grid,
+    the plane journals every touched session (``checkpoint_every=1`` —
+    exact recovery), and clients retry EVERY verb through ``RetryPolicy``.
+    The ratchet: zero lost sessions, and every surviving stream
+    bit-identical to the fault-free synchronous control."""
+    registry = MetricsRegistry()   # isolated from the fault-free run
+    runtime = RuntimeConfig(paged=True)
+    cfg = get_config("olmo-1b").smoke().replace(
+        n_layers=1, d_model=16, d_ff=32, vocab_size=32, head_dim=8)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(seed))
+    n_sessions = CHAOS_SESSIONS if smoke else 4 * CHAOS_SESSIONS
+    trace = gen_trace(n_sessions, seed=seed + 1)
+    sample_every = max(1, n_sessions // BIT_SAMPLE)
+
+    # plan horizon ~ per-worker verb count (open + pushes + close); each
+    # worker gets its own seeded plan so crashes do not synchronize
+    pushes = sum(-(-r["len"] // T_CHUNK) for r in trace)
+    horizon = int((2 * n_sessions + pushes) / n_workers)
+    plans = [FaultPlan.seeded(seed + 17 * (i + 1), horizon,
+                              crash_every=max(40, horizon // 4),
+                              storm_every=max(50, horizon // 5),
+                              flake_every=max(30, horizon // 6))
+             for i in range(n_workers)]
+
+    def factory():
+        return _make_worker(bundle, params, n_slots, runtime, registry)
+
+    injectors = [FaultInjector(factory(), plans[i], factory=factory)
+                 for i in range(n_workers)]
+    plane = ServingPlane(injectors, max_queue=4 * WINDOW, runtime=runtime,
+                         metrics=registry, checkpoint_every=1)
+
+    async def main():
+        async with plane:
+            res = await _replay(plane, trace, registry, sample_every,
+                                RetryPolicy(seed=seed), retry_all=True)
+            return res, plane.stats()
+
+    t0 = time.perf_counter()
+    (res, stats) = asyncio.run(main())
+    wall = time.perf_counter() - t0
+    identical = _sync_control(bundle, params, trace, res["sampled"], runtime)
+
+    snap = registry.snapshot()
+
+    def _total(name):
+        return int(sum(e["value"] for e in snap.get(name, [])))
+
+    h = registry.histogram("plane_mttr_us")
+    out = {
+        "smoke": smoke, "sessions": n_sessions, "workers": n_workers,
+        "n_slots": n_slots,
+        "plan": [p.spec() for p in plans],
+        "wall_s": round(wall, 3),
+        "completed": res["completed"],
+        "tokens_total": res["tokens"],
+        "goodput_tok_s": round(res["tokens"] / wall, 1),
+        "retries": res["retries"],
+        "crashes": _total("plane_crashes_total"),
+        "recoveries": _total("plane_recoveries_total"),
+        "handoffs": _total("plane_handoffs_total"),
+        "lost_sessions": stats["lost_sessions"],
+        "mttr": {"count": h.count, "p50_us": round(h.percentile(50), 1),
+                 "p99_us": round(h.percentile(99), 1)},
+        "bit_identical": identical,
+        "bit_sample": len(res["sampled"]),
+    }
+    print(f"# chaos: {res['completed']}/{n_sessions} sessions through "
+          f"{out['crashes']} crashes ({out['recoveries']} recoveries, "
+          f"{out['lost_sessions']} lost), {out['goodput_tok_s']} tok/s, "
+          f"MTTR p99={out['mttr']['p99_us']}us, {res['retries']} retries, "
+          f"bit_identical={identical}", flush=True)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="3k sessions on a smaller grid (CI)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="append a fault-injected replay (chaos section)")
     ap.add_argument("--sessions", type=int, default=None)
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--slots", type=int, default=None)
@@ -246,8 +363,11 @@ def main():
     n_slots = args.slots if args.slots is not None else \
         (8 if args.smoke else 16)
     out = run(n_sessions, args.workers, n_slots, args.smoke, args.trace)
+    report = {"serve_load": out}
+    if args.chaos:
+        report["chaos"] = run_chaos(args.workers, n_slots, args.smoke)
     with open(OUT_PATH, "w") as f:
-        json.dump({"serve_load": out}, f, indent=2)
+        json.dump(report, f, indent=2)
     print(f"# wrote {OUT_PATH}", flush=True)
     with open(METRICS_PATH, "w") as f:
         json.dump(default_registry().snapshot(), f, indent=2)
@@ -255,6 +375,10 @@ def main():
     if not out["bit_identical"]:
         raise SystemExit("serve_load: plane output diverged from the "
                          "synchronous control")
+    if args.chaos and (report["chaos"]["lost_sessions"]
+                       or not report["chaos"]["bit_identical"]):
+        raise SystemExit("serve_load --chaos: sessions lost or diverged "
+                         "under faults")
 
 
 if __name__ == "__main__":

@@ -42,6 +42,7 @@ ENV_FUSED = "REPRO_TCN_FUSED"                  # sessions/service.py
 ENV_KERNEL_BACKEND = "REPRO_KERNEL_BACKEND"    # kernels/dispatch.py
 ENV_TRACE = "REPRO_TRACE"                      # obs/trace.py
 ENV_DEVICE_COUNTERS = "REPRO_DEVICE_COUNTERS"  # obs/device.py
+ENV_CHAOS = "REPRO_CHAOS"                      # serving/faults.py
 
 _TRUE = ("1", "true", "yes")
 
@@ -67,6 +68,9 @@ class RuntimeConfig:
                      informational unless the process-global tracer was
                      env-activated — benches/the plane export explicitly
     device_counters  compile the instrumented scan twins (in-jit stats)
+    chaos            fault-injection plan spec (serving/faults.FaultPlan
+                     format, e.g. "crash@40,flake@25"); None = faults off
+                     and the production paths are byte-for-byte untouched
     """
 
     paged: bool = False
@@ -74,6 +78,7 @@ class RuntimeConfig:
     kernel_backend: str | None = None
     trace_path: str | None = None
     device_counters: bool = False
+    chaos: str | None = None
 
     @classmethod
     def resolve(cls, **overrides) -> "RuntimeConfig":
@@ -89,6 +94,7 @@ class RuntimeConfig:
             kernel_backend=_env_str(ENV_KERNEL_BACKEND),
             trace_path=_env_str(ENV_TRACE),
             device_counters=_env_bool(ENV_DEVICE_COUNTERS),
+            chaos=_env_str(ENV_CHAOS),
         )
         picked = {k: (getattr(env, k) if v is None else v)
                   for k, v in overrides.items()}

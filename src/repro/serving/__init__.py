@@ -1,5 +1,11 @@
 from repro.serving.engine import LMServer, ServeConfig, TCNStreamServer
-from repro.serving.plane import Rejected, ServingPlane
+from repro.serving.faults import (FaultInjector, FaultPlan, TransientError,
+                                  WorkerCrashed)
+from repro.serving.plane import (CRASHED, DRAINED, DRAINING, HEALTHY,
+                                 RECOVERING, Rejected, RetryPolicy,
+                                 ServingPlane)
 
 __all__ = ["LMServer", "ServeConfig", "TCNStreamServer",
-           "Rejected", "ServingPlane"]
+           "Rejected", "RetryPolicy", "ServingPlane",
+           "FaultInjector", "FaultPlan", "WorkerCrashed", "TransientError",
+           "HEALTHY", "DRAINING", "DRAINED", "CRASHED", "RECOVERING"]

@@ -925,66 +925,85 @@ class LMSessionService(SlotGridService):
                 f"n_blocks={self.pool.n_blocks})")
         for sid, blob in parking.items():
             info = meta.get("sessions", {}).get(str(sid), {})
-            if int(info.get("steps", 0)) > self.seq_cap:
+            self._validate_blob(sid, blob, info)
+
+    def _validate_blob(self, sid, blob: dict, info: dict) -> None:
+        """One parked blob's geometry checks — shared by the bulk restore
+        gate above and the single-session ``adopt_session`` path the
+        serving plane's drain/recover handoff rides."""
+        if int(info.get("steps", 0)) > self.seq_cap:
+            raise ValueError(
+                f"session {sid} parked at position {info.get('steps')} "
+                f"> this service's seq_cap={self.seq_cap}")
+        pv = blob.get(PAGED_MARKER) if isinstance(blob, dict) else None
+        if self.paged != (pv is not None):
+            raise ValueError(
+                f"incompatible LM spill: session {sid} blob is "
+                f"{'paged' if pv is not None else 'dense'}-layout but "
+                f"this service is "
+                f"{'paged' if self.paged else 'dense'}-layout")
+        if self.paged:
+            bl, n_keep = (int(x) for x in
+                          np.asarray(pv).reshape(-1)[:2])
+            if bl != self.block_len:
                 raise ValueError(
-                    f"session {sid} parked at position {info.get('steps')} "
-                    f"> this service's seq_cap={self.seq_cap}")
-            pv = blob.get(PAGED_MARKER) if isinstance(blob, dict) else None
-            if self.paged != (pv is not None):
+                    f"incompatible LM spill: session {sid} parked with "
+                    f"block_len={bl} != this service's {self.block_len}")
+            if n_keep > self.max_blocks:
                 raise ValueError(
-                    f"incompatible LM spill: session {sid} blob is "
-                    f"{'paged' if pv is not None else 'dense'}-layout but "
-                    f"this service is "
-                    f"{'paged' if self.paged else 'dense'}-layout")
-            if self.paged:
-                bl, n_keep = (int(x) for x in
-                              np.asarray(pv).reshape(-1)[:2])
-                if bl != self.block_len:
-                    raise ValueError(
-                        f"incompatible LM spill: session {sid} parked with "
-                        f"block_len={bl} != this service's {self.block_len}")
-                if n_keep > self.max_blocks:
-                    raise ValueError(
-                        f"incompatible LM spill: session {sid} owns "
-                        f"{n_keep} blocks > this service's per-session max "
-                        f"{self.max_blocks}")
+                    f"incompatible LM spill: session {sid} owns "
+                    f"{n_keep} blocks > this service's per-session max "
+                    f"{self.max_blocks}")
 
-                def check_paged(a, bax, pg, p):
-                    got = np.asarray(p).shape
-                    want = ((a.shape[:bax] + (n_keep,) + a.shape[bax + 1:])
-                            if pg else a.shape[:bax] + a.shape[bax + 1:])
-                    if got != want:
-                        raise ValueError(
-                            f"session {sid}: parked cache leaf {got} does "
-                            f"not fit this service's "
-                            f"{'pool blocks' if pg else 'column'} {want}")
-                    return None
-
-                try:
-                    jax.tree.map(check_paged, self.cache, self._batch_axes,
-                                 self._paged_flags, blob["kv"])
-                except (KeyError, ValueError, TypeError) as e:
-                    raise ValueError(f"incompatible LM spill: {e}") from e
-                continue
-
-            def check(a, bax, sax, p):
-                want = a.shape[:bax] + a.shape[bax + 1:]
+            def check_paged(a, bax, pg, p):
                 got = np.asarray(p).shape
-                t = sax - (sax > bax) if sax >= 0 else -1
-                ok = len(got) == len(want) and all(
-                    (g <= w if i == t else g == w)
-                    for i, (g, w) in enumerate(zip(got, want)))
-                if not ok:
+                want = ((a.shape[:bax] + (n_keep,) + a.shape[bax + 1:])
+                        if pg else a.shape[:bax] + a.shape[bax + 1:])
+                if got != want:
                     raise ValueError(
-                        f"session {sid}: parked cache leaf {got} does not "
-                        f"fit this service's column {want}")
+                        f"session {sid}: parked cache leaf {got} does "
+                        f"not fit this service's "
+                        f"{'pool blocks' if pg else 'column'} {want}")
                 return None
 
             try:
-                jax.tree.map(check, self.cache, self._batch_axes,
-                             self._seq_axes, blob["kv"])
+                jax.tree.map(check_paged, self.cache, self._batch_axes,
+                             self._paged_flags, blob["kv"])
             except (KeyError, ValueError, TypeError) as e:
                 raise ValueError(f"incompatible LM spill: {e}") from e
+            return
+
+        def check(a, bax, sax, p):
+            want = a.shape[:bax] + a.shape[bax + 1:]
+            got = np.asarray(p).shape
+            t = sax - (sax > bax) if sax >= 0 else -1
+            ok = len(got) == len(want) and all(
+                (g <= w if i == t else g == w)
+                for i, (g, w) in enumerate(zip(got, want)))
+            if not ok:
+                raise ValueError(
+                    f"session {sid}: parked cache leaf {got} does not "
+                    f"fit this service's column {want}")
+            return None
+
+        try:
+            jax.tree.map(check, self.cache, self._batch_axes,
+                         self._seq_axes, blob["kv"])
+        except (KeyError, ValueError, TypeError) as e:
+            raise ValueError(f"incompatible LM spill: {e}") from e
+
+    def _adopt_validate(self, blob: dict, meta: dict) -> None:
+        # single-session handoff from a peer worker: same geometry gate as
+        # the bulk restore, against the incoming session's own meta
+        self._validate_blob("<adopting>", blob, meta)
+
+    def _on_adopt(self, sid: int, meta: dict) -> None:
+        self.outputs[sid] = [int(t) for t in meta.get("outputs", [])]
+
+    def _on_detach(self, sid: int) -> None:
+        # the peer rebuilds outputs from the handoff meta; keeping the
+        # stale list here would just leak across a long churn
+        self.outputs.pop(sid, None)
 
     def _post_restore(self, restored: list[int], meta: dict) -> None:
         # generated outputs live outside the session record so they survive

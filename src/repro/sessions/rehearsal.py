@@ -95,6 +95,33 @@ class RehearsalBuffer:
             del self._mem[key]
             self._seen.pop(key, None)
 
+    def export_tenant(self, tenant: int) -> dict:
+        """One tenant's reservoirs (packed codes + scales + seen counters,
+        keyed by way) for live handoff to a peer buffer.  Non-destructive;
+        the lists are copied shallowly and the packed arrays are never
+        mutated in place, so the blob stays valid while this buffer keeps
+        taking shots."""
+        out = {}
+        for (t, way), mem in self._mem.items():
+            if t == tenant:
+                out[way] = {"shots": list(mem),
+                            "seen": self._seen.get((t, way), len(mem))}
+        return out
+
+    def adopt_tenant(self, tenant: int, blob: dict) -> None:
+        """Install reservoirs exported by a peer's ``export_tenant``.
+        Refuses a (tenant, way) that already holds shots here.  Reservoir
+        sampling continues with THIS buffer's RNG — per-buffer
+        determinism, as with every seeded component."""
+        for way in blob:
+            if (tenant, int(way)) in self._mem:
+                raise ValueError(f"tenant {tenant} way {way} already has "
+                                 "rehearsal shots; refuse to overwrite")
+        for way, ent in blob.items():
+            key = (tenant, int(way))
+            self._mem[key] = list(ent["shots"])
+            self._seen[key] = int(ent["seen"])
+
     def nbytes(self, tenant: int | None = None) -> int:
         """Host bytes of the buffer (packed codes + one fp32 scale per
         shot) — the bounded-memory claim the bench reports."""

@@ -470,6 +470,85 @@ class SlotGridService:
         """Hook: runs once after a successful restore with the spill meta
         (so subclasses never need to re-read the file)."""
 
+    # -- live handoff / crash recovery --------------------------------------
+    # The serving plane's fault-tolerance layer (serving/plane.py drain/
+    # recover/steal + the per-op spill journal) is built on these four
+    # verbs.  They reuse the exact park/spill machinery above, so every
+    # bit-identity property of park/resume carries over to handoff.
+
+    def export_session(self, sid: int) -> tuple[dict, dict]:
+        """Snapshot one live session as ``(parked blob, spill meta)``
+        WITHOUT closing it — the plane's spill-epoch primitive.  A bound
+        session is parked first (park/resume is bit-identical, so the
+        snapshot has no behavioral effect); it stays live and lazily
+        re-binds on its next push.  Raises ``KeyError`` for unknown sids
+        and ``RuntimeError`` for sessions with no packable state (e.g. a
+        retired LM session whose slot was already freed)."""
+        if sid not in self.sessions:
+            raise KeyError(f"unknown session {sid}")
+        self.park(sid)
+        if sid not in self.parking:
+            raise RuntimeError(f"session {sid} holds no packable state "
+                               "(retired?); nothing to export")
+        return self.parking[sid], self._session_spill_meta(sid)
+
+    def detach_session(self, sid: int) -> tuple[dict, dict]:
+        """Remove a session from this service and return its packed
+        ``(blob, meta)`` for adoption elsewhere (drain handoff / work
+        stealing).  Unlike ``close``, the session is NOT ending —
+        ``_on_close`` side effects (dedicated-tenant teardown) do not
+        fire; the meta carries everything the peer needs to recreate the
+        host record via ``adopt_session``."""
+        blob, meta = self.export_session(sid)
+        self._park_take(sid)
+        self.sched.release(sid)
+        self.sessions.pop(sid)
+        self._on_detach(sid)
+        return blob, meta
+
+    def _on_detach(self, sid: int) -> None:
+        """Hook: the session just left for another worker (NOT a close)."""
+
+    def adopt_session(self, blob: dict, meta: dict) -> int:
+        """Admit a session exported by a peer's ``detach_session`` /
+        ``export_session`` under a FRESH local sid (worker-local ids from
+        different services may collide).  The session enters parked; its
+        next push resumes it bit-identically.  All validation (geometry,
+        admission capacity) runs before the first mutation."""
+        meta = dict(meta or {})
+        self._adopt_validate(blob, meta)
+        cap = self.sched.max_sessions
+        if cap is not None and self.sched.live_sessions + 1 > cap:
+            raise AdmissionError(
+                f"adopting a session would exceed capacity "
+                f"({self.sched.live_sessions}/{cap} live)")
+        sid = self._alloc_sid()
+        self.sched.admit(sid)
+        self.sessions[sid] = self._restore_session(meta)
+        self._park_store(sid, blob)
+        self._on_adopt(sid, meta)
+        return sid
+
+    def _adopt_validate(self, blob: dict, meta: dict) -> None:
+        """Hook: refuse a geometry-incompatible blob BEFORE mutation."""
+
+    def _on_adopt(self, sid: int, meta: dict) -> None:
+        """Hook: runs once after a successful single-session adoption."""
+
+    # -- tenant-state handoff (tenant-aware services override) --------------
+    def live_tenants(self) -> list:
+        """Tenant ids currently holding state on this service; the base
+        grid has none (the plane guards with ``tenant_aware`` anyway)."""
+        return []
+
+    def export_tenant(self, tenant) -> dict:
+        raise NotImplementedError(
+            f"{self._service_name} service has no per-tenant state")
+
+    def adopt_tenant(self, tenant, blob: dict) -> int:
+        raise NotImplementedError(
+            f"{self._service_name} service has no per-tenant state")
+
     # -- introspection ------------------------------------------------------
     def _extra_stats(self) -> dict:
         return {}
@@ -1055,6 +1134,87 @@ class StreamSessionService(SlotGridService):
         if self.paged_bank:
             self._maybe_park_tenant(tenant)
         return n
+
+    # -- tenant-state handoff (serving plane drain/recover) -----------------
+    def live_tenants(self) -> list[int]:
+        return [t for t in range(len(self._tenant_ways))
+                if t not in self._free_tenants]
+
+    def export_tenant(self, tenant: int) -> dict:
+        """Layout-free host snapshot of one tenant's learned state — the
+        bank running sums truncated to enrolled ways (Eq. 6 state), the
+        label->way registry, and the rehearsal reservoirs — for live
+        handoff to a peer worker.  Non-destructive; either bank layout
+        adopts it (the paged pool pads rows back to whole blocks)."""
+        if not 0 <= tenant < len(self._tenant_ways) \
+                or tenant in self._free_tenants:
+            raise KeyError(f"tenant {tenant} not in use")
+        n = int(self._tenant_ways[tenant])
+        dim = self.cfg.embed_dim
+        if self.paged_bank:
+            row = self.bankpool.pack(tenant)
+            s = np.asarray(row["s_sums"], np.float32).reshape(-1, dim)[:n]
+            c = np.asarray(row["counts"], np.float32).reshape(-1)[:n]
+        else:
+            row = bank_pack_tenant(self.bank, tenant)
+            s = np.asarray(row["s_sums"], np.float32)[:n]
+            c = np.asarray(row["counts"], np.float32)[:n]
+        blob = {"s_sums": s, "counts": c, "n_ways": n,
+                "labels": dict(self._tenant_labels.get(tenant, {}))}
+        if self.rehearsal is not None:
+            blob["rehearsal"] = self.rehearsal.export_tenant(tenant)
+        return blob
+
+    def adopt_tenant(self, tenant: int | None, blob: dict) -> int:
+        """Install a peer's ``export_tenant`` blob under ``tenant`` (must
+        be a free row) or under a fresh row when ``tenant is None`` —
+        dedicated tenants keep service-LOCAL ids, so the plane remaps
+        them on handoff.  Returns the id actually used.  Paged banks
+        adopt PARKED (zero device rows until first use)."""
+        if tenant is None:
+            if not self._free_tenants:
+                raise RuntimeError("tenant bank full")
+            tenant = self._free_tenants[0]
+        if not 0 <= tenant < len(self._tenant_ways):
+            raise ValueError(f"tenant {tenant} out of range "
+                             f"[0, {len(self._tenant_ways)})")
+        if tenant not in self._free_tenants:
+            raise ValueError(f"tenant {tenant} already in use; refuse to "
+                             "overwrite its prototype rows")
+        n = int(blob["n_ways"])
+        if n > self.max_ways:
+            raise ValueError(f"blob carries {n} ways but this service caps "
+                             f"at max_ways={self.max_ways}")
+        dim = self.cfg.embed_dim
+        s = np.asarray(blob["s_sums"], np.float32).reshape(-1, dim)[:n]
+        c = np.asarray(blob["counts"], np.float32).reshape(-1)[:n]
+        self._free_tenants.remove(tenant)
+        if self.paged_bank:
+            self.bankpool.adopt(tenant, {"s_sums": s, "counts": c,
+                                         "n_ways": n})
+        else:
+            sp = np.zeros((self.max_ways, dim), np.float32)
+            cp = np.zeros((self.max_ways,), np.float32)
+            sp[:n], cp[:n] = s, c
+            self.bank = bank_unpack_tenant(self.bank, tenant, {
+                "s_sums": sp, "counts": cp, "n_ways": np.int32(n)})
+        self._tenant_ways[tenant] = n
+        if blob.get("labels"):
+            self._tenant_labels[tenant] = dict(blob["labels"])
+        if self.rehearsal is not None and blob.get("rehearsal"):
+            self.rehearsal.adopt_tenant(tenant, blob["rehearsal"])
+        return tenant
+
+    def _adopt_validate(self, blob: dict, meta: dict) -> None:
+        t = int(meta.get("tenant", NO_TENANT))
+        if t == NO_TENANT:
+            return
+        if not 0 <= t < len(self._tenant_ways):
+            raise ValueError(f"session references tenant {t} beyond "
+                             f"max_tenants={len(self._tenant_ways)}")
+        if t in self._free_tenants:
+            raise ValueError(f"session references tenant {t} but no such "
+                             "row is in use here; adopt_tenant first")
 
     # -- introspection ------------------------------------------------------
     def poll(self, sid: int) -> dict:

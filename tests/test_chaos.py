@@ -1,0 +1,506 @@
+"""Fault-tolerant serving plane under seeded fault schedules: crash
+recovery from spill epochs, drain handoff, deadline enforcement, work
+stealing, and the deterministic fault-injection harness itself.  The
+invariants everywhere: ZERO lost sessions, and survivor token streams
+bit-identical to a fault-free control."""
+
+import asyncio
+import functools
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs.runtime as rt
+from repro.configs import RuntimeConfig, get_config
+from repro.models import build_bundle
+from repro.models.tcn import tcn_empty_state
+from repro.obs.metrics import MetricsRegistry
+from repro.serving import (CRASHED, DRAINED, HEALTHY, FaultInjector,
+                           FaultPlan, Rejected, RetryPolicy, ServingPlane,
+                           TransientError, WorkerCrashed)
+from repro.serving import faults as faults_mod
+from repro.sessions import LMSessionService, StreamSessionService
+from repro.sessions.paging import PoolExhausted
+
+
+@functools.lru_cache(maxsize=None)
+def _lm_setup():
+    cfg = get_config("olmo-1b").smoke().replace(
+        n_layers=1, d_model=16, d_ff=32, vocab_size=32, head_dim=8)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    return bundle, params
+
+
+def _lm(n_slots=4, max_sessions=8, **kw):
+    bundle, params = _lm_setup()
+    return LMSessionService(bundle, params, n_slots=n_slots, seq_cap=32,
+                            t_chunk=4, max_sessions=max_sessions, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _tcn_setup():
+    cfg = get_config("chameleon-tcn").replace(
+        tcn_channels=(8, 8), tcn_kernel=3, tcn_in_channels=2,
+        embed_dim=12, n_classes=4)
+    bundle = build_bundle(cfg)
+    params = bundle.init(jax.random.key(0))
+    bn = tcn_empty_state(cfg)
+    bn = jax.tree.map(
+        lambda a: a + 0.05 * jnp.abs(
+            jax.random.normal(jax.random.key(7), a.shape)), bn)
+    return bundle, params, bn
+
+
+def _tcn(**kw):
+    bundle, params, bn = _tcn_setup()
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_tenants", 2)
+    kw.setdefault("max_ways", 5)
+    return StreamSessionService(bundle, params, bn, paged_bank=True,
+                                bank_block_ways=2, **kw)
+
+
+def _plane(workers, **kw):
+    # hermetic metrics: ServingPlane defaults to the process-global
+    # default_registry(), which accumulates across every test in the run —
+    # exact-count assertions below need a fresh registry per plane
+    kw.setdefault("metrics", MetricsRegistry())
+    return ServingPlane(workers, **kw)
+
+
+def _prompt(i):
+    return np.array([(i % 7) + 1, ((3 * i) % 7) + 1], np.int32)
+
+
+def _lm_reference(n_sessions, want):
+    """Each session decoded ALONE on a fresh fault-free service."""
+    out = {}
+    for i in range(n_sessions):
+        svc = _lm(n_slots=1, max_sessions=1)
+        sid = svc.open_session(_prompt(i))
+        out[i] = svc.decode({sid: want})[sid]
+        svc.close(sid)
+    return out
+
+
+async def _persist(op, max_attempts=300):
+    """Drive one plane verb through retryable rejections — the test-side
+    mirror of what RetryPolicy-disciplined clients do under chaos."""
+    for attempt in range(max_attempts):
+        try:
+            return await op()
+        except Rejected as e:
+            if not e.retryable:
+                raise
+            await asyncio.sleep(min(0.0005 * (attempt + 1), 0.005))
+    raise AssertionError("op did not complete within the retry budget")
+
+
+# ---------------------------------------------------------------------------
+# the harness itself: plans and injectors
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse_roundtrip_and_seeded_determinism():
+    plan = FaultPlan.parse("crash@40, slow@10x5:0.002,storm@60x20,flake@25")
+    assert plan.spec() == "slow@10x5:0.002,flake@25,crash@40,storm@60x20"
+    assert FaultPlan.parse(plan.spec()) == plan
+    assert [e.kind for e in plan.at(12)] == ["slow"]
+    assert plan.at(15) == [] and [e.kind for e in plan.at(79)] == ["storm"]
+    with pytest.raises(ValueError, match="bad fault event"):
+        FaultPlan.parse("explode@3")
+    # seeded plans: same seed byte-identical, different seeds differ
+    a = FaultPlan.seeded(7, 200, crash_every=50, flake_every=30)
+    assert a == FaultPlan.seeded(7, 200, crash_every=50, flake_every=30)
+    assert a != FaultPlan.seeded(8, 200, crash_every=50, flake_every=30)
+    assert any(e.kind == "crash" for e in a.events)
+    assert all(e.at < 200 for e in a.events)
+
+
+def test_injector_counts_verbs_swaps_service_on_crash():
+    svc = _lm()
+    inj = FaultInjector(svc, FaultPlan.parse("crash@2"), factory=_lm)
+    sid = inj.open_session(_prompt(0))           # op 0
+    toks = inj.push({sid: 2})                     # op 1
+    assert len(toks[sid]) == 2
+    with pytest.raises(WorkerCrashed):
+        inj.push({sid: 2})                        # op 2: crash
+    assert inj.service is not svc                 # fresh service swapped in
+    assert inj.crashes == 1 and (2, "crash") in inj.faults
+    assert inj.service.stats()["live_sessions"] == 0  # state is gone
+    # non-verb attributes delegate without ticking the fault clock
+    ops_before = inj.ops
+    assert inj.n_slots == 4 and inj.stats()["service"] == "lm"
+    assert inj.ops == ops_before
+    with pytest.raises(ValueError, match="factory"):
+        FaultInjector(_lm(), FaultPlan.parse("crash@0"))
+
+
+# ---------------------------------------------------------------------------
+# session handoff primitives (sessions layer)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_lm_detach_adopt_roundtrip_bit_identical(paged):
+    """Half a decode on one service, detach, adopt on a DIFFERENT service,
+    finish there: the combined stream equals the solo fault-free run."""
+    runtime = RuntimeConfig(paged=paged)
+    a, b = _lm(runtime=runtime), _lm(runtime=runtime)
+    sid = a.open_session(_prompt(3))
+    first = a.decode({sid: 4})[sid]
+    blob, meta = a.detach_session(sid)
+    assert sid not in a.sessions and a.stats()["live_sessions"] == 0
+    sid2 = b.adopt_session(blob, meta)
+    rest = b.decode({sid2: 4})[sid2]
+    assert first + rest == _lm_reference(4, 8)[3]
+    assert b.poll(sid2)["generated"] == 8        # outputs rode the meta
+    b.close(sid2)
+
+
+def test_tcn_export_adopt_tenant_carries_bank_labels_rehearsal():
+    rng = np.random.default_rng(3)
+    shots = rng.normal(size=(2, 10, 2)).astype(np.float32)
+    x = rng.normal(size=(6, 2)).astype(np.float32)
+
+    # fault-free control: enroll then classify on ONE service
+    ctrl = _tcn()
+    csid = ctrl.open_session(tenant=1)
+    ctrl.enroll_shots(csid, shots, label="cat")
+    want = np.asarray(ctrl.push_audio({csid: x})[csid]["tenant_logits"])
+
+    # handoff flow: enroll on src, move session + tenant to dst, classify
+    src, dst = _tcn(), _tcn()
+    sid = src.open_session(tenant=1)
+    src.enroll_shots(sid, shots, label="cat")
+    blob, meta = src.detach_session(sid)
+    tblob = src.export_tenant(1)
+    src.close_tenant(1)
+    assert 1 not in src.live_tenants()
+    # peer must install the tenant BEFORE the session referencing it
+    with pytest.raises(ValueError, match="adopt_tenant first"):
+        dst.adopt_session(blob, meta)
+    assert dst.adopt_tenant(1, tblob) == 1
+    sid2 = dst.adopt_session(blob, meta)
+    got = np.asarray(dst.push_audio({sid2: x})[sid2]["tenant_logits"])
+    # same bank, same labels, same conv state: classification on the new
+    # worker is bit-identical to the never-moved control
+    np.testing.assert_array_equal(got, want)
+    assert dst._tenant_labels[1] == {"cat": 0}
+    if dst.rehearsal is not None:
+        assert dst.rehearsal.export_tenant(1)  # reservoirs moved too
+    # double-adopt refuses to clobber the installed row
+    with pytest.raises(ValueError, match="already in use"):
+        dst.adopt_tenant(1, tblob)
+
+
+# ---------------------------------------------------------------------------
+# crash recovery through the plane: zero lost, bit-identical
+# ---------------------------------------------------------------------------
+
+def test_crash_mid_batch_recovers_all_sessions_bit_identical():
+    """Seeded crashes land during opens AND during batched pushes; every
+    client retries through, no session is lost, and every stream equals
+    the fault-free solo control."""
+    N, CHUNK, ROUNDS = 6, 2, 3
+
+    async def main():
+        inj = FaultInjector(_lm(), FaultPlan.parse("crash@2,crash@12"),
+                            factory=_lm)
+        plane = _plane([inj], checkpoint_every=1)
+        async with plane:
+            psids = [await _persist(
+                lambda i=i: plane.open_session(_prompt(i)))
+                for i in range(N)]
+
+            async def client(i):
+                toks = []
+                for _ in range(ROUNDS):
+                    toks += await _persist(
+                        lambda: plane.push(psids[i], CHUNK))
+                return toks
+
+            outs = await asyncio.gather(*(client(i) for i in range(N)))
+            for p in psids:
+                await _persist(lambda p=p: plane.close(p))
+            return outs, plane.stats(), plane.metrics(), inj.crashes
+
+    outs, stats, m, crashes = asyncio.run(main())
+    assert crashes == 2
+    assert stats["lost_sessions"] == 0
+    assert stats["health"] == [HEALTHY]
+    assert m["plane_crashes_total"][0]["value"] == 2
+    assert m["plane_recoveries_total"][0]["value"] == 2
+    assert m["plane_mttr_us"][0]["count"] == 2
+    ref = _lm_reference(N, CHUNK * ROUNDS)
+    for i in range(N):
+        assert outs[i] == ref[i], f"session {i} diverged across crashes"
+
+
+def test_crash_during_enroll_lands_bank_after_recovery():
+    """A crash on the enroll verb: the retried enroll lands on the
+    recovered worker, and classification matches the fault-free control
+    exactly (tenant bank + rehearsal + conv state all re-adopted)."""
+    rng = np.random.default_rng(11)
+    shots = rng.normal(size=(2, 10, 2)).astype(np.float32)
+    x = rng.normal(size=(6, 2)).astype(np.float32)
+
+    ctrl = _tcn()
+    csid = ctrl.open_session(tenant=0)
+    ctrl.enroll_shots(csid, shots)
+    want = np.asarray(ctrl.push_audio({csid: x})[csid]["tenant_logits"])
+
+    async def main():
+        inj = FaultInjector(_tcn(), FaultPlan.parse("crash@1"),
+                            factory=_tcn)
+        plane = _plane([inj], checkpoint_every=1)
+        async with plane:
+            psid = await _persist(lambda: plane.open_session(tenant=0))
+            way = await _persist(lambda: plane.enroll(psid, shots))
+            res = await _persist(lambda: plane.push(psid, x))
+            return way, res, inj.crashes, plane.stats()
+
+    way, res, crashes, stats = asyncio.run(main())
+    assert crashes == 1 and way == 0
+    assert stats["lost_sessions"] == 0
+    np.testing.assert_array_equal(
+        np.asarray(res["tenant_logits"]), want)
+
+
+def test_resume_rehomes_from_journal_when_worker_is_down():
+    """Satellite (a): resume(psid) must work even when the session's last
+    worker is crashed and not yet recovered — the plane re-adopts it from
+    its spill epoch onto a healthy peer."""
+
+    async def main():
+        inj = FaultInjector(_lm(), FaultPlan.parse("crash@1"), factory=_lm)
+        peer = _lm()
+        plane = _plane([inj, peer], checkpoint_every=1,
+                             auto_recover=False)
+        async with plane:
+            psid = await plane.open_session(_prompt(2))
+            w0 = plane._sessions[psid][0]
+            with pytest.raises(Rejected) as ei:
+                await plane.push(psid, 4)       # op 1: injected crash
+            assert ei.value.reason == "crash" and ei.value.retryable
+            assert plane.stats()["health"][w0.idx] == CRASHED
+            await plane.resume(psid)            # re-homes, then binds
+            assert plane._sessions[psid][0] is not w0
+            toks = await plane.push(psid, 4)
+            # the downed worker can still be rebuilt explicitly
+            rec = await plane.recover(w0.idx)
+            assert rec["recovered"] == 0 and rec["lost"] == 0
+            return toks, plane.stats()
+
+    toks, stats = asyncio.run(main())
+    assert stats["lost_sessions"] == 0
+    assert stats["health"] == [HEALTHY, HEALTHY]
+    # the crashed push never happened: the retried stream is the solo one
+    assert toks == _lm_reference(3, 4)[2]
+
+
+# ---------------------------------------------------------------------------
+# drain / handoff
+# ---------------------------------------------------------------------------
+
+def test_drain_hands_sessions_to_peer_bit_identical():
+    N = 4
+
+    async def main():
+        w0, w1 = _lm(), _lm()
+        plane = _plane([w0, w1], checkpoint_every=1)
+        async with plane:
+            psids = [await plane.open_session(_prompt(i)) for i in range(N)]
+            firsts = await asyncio.gather(
+                *(plane.push(p, 2) for p in psids))
+            victim = plane._sessions[psids[0]][0]
+            moved = [p for p in psids
+                     if plane._sessions[p][0] is victim]
+            summary = await plane.drain(victim.idx)
+            assert summary["moved_sessions"] == len(moved)
+            assert plane.stats()["health"][victim.idx] == DRAINED
+            # new ops on the drained worker's sessions land on the peer
+            for p in psids:
+                assert plane._sessions[p][0] is not victim
+            with pytest.raises(RuntimeError, match="not drained"):
+                plane.undrain(1 - victim.idx)
+            plane.undrain(victim.idx)
+            assert plane.stats()["health"] == [HEALTHY, HEALTHY]
+            rests = await asyncio.gather(*(plane.push(p, 2) for p in psids))
+            polls = [await plane.poll(p) for p in psids]
+            return firsts, rests, polls, plane.metrics()
+
+    firsts, rests, polls, m = asyncio.run(main())
+    ref = _lm_reference(N, 4)
+    for i in range(N):
+        assert firsts[i] + rests[i] == ref[i], f"session {i} diverged"
+        assert polls[i]["generated"] == 4
+    assert m["plane_handoffs_total"][0]["value"] >= 1
+
+
+def test_drain_refuses_without_healthy_peer():
+    async def main():
+        plane = _plane([_lm()])
+        async with plane:
+            with pytest.raises(RuntimeError, match="no healthy peer"):
+                await plane.drain(0)
+            assert plane.stats()["health"] == [HEALTHY]
+
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# deadlines + retry_after (satellite b)
+# ---------------------------------------------------------------------------
+
+def test_deadline_expiry_rejects_with_retry_after():
+    async def main():
+        plane = _plane(_lm(), default_deadline_s=30.0)
+        async with plane:
+            psid = await plane.open_session(_prompt(1))
+            with pytest.raises(Rejected) as ei:
+                # already expired when dequeued: enforced at the worker
+                await plane.push(psid, 2, deadline_s=-1.0)
+            assert ei.value.reason == "deadline" and ei.value.retryable
+            assert ei.value.retry_after is not None
+            assert ei.value.retry_after > 0
+            toks = await plane.push(psid, 2)   # no deadline: fine
+            rej = plane.metrics()["plane_rejected_total"]
+            reasons = {e["labels"]["reason"]: e["value"] for e in rej}
+            return toks, reasons
+
+    toks, reasons = asyncio.run(main())
+    # the expired push never ran: the session starts clean on the retry
+    assert toks == _lm_reference(2, 2)[1]
+    assert reasons.get("deadline") == 1
+
+
+def test_retry_policy_deterministic_and_floored_by_hint():
+    a, b = RetryPolicy(seed=3), RetryPolicy(seed=3)
+    assert [a.delay(i) for i in range(6)] == [b.delay(i) for i in range(6)]
+    assert RetryPolicy(seed=4).delay(0) != a.delay(0) or \
+        RetryPolicy(seed=4).delay(1) != b.delay(1)
+    p = RetryPolicy(seed=0, base_s=0.001, cap_s=0.01, jitter=0.5)
+    for i in range(8):
+        d = p.delay(i)
+        assert 0 < d <= 0.015
+    assert p.delay(0, retry_after=0.5) == 0.5   # server hint is the floor
+
+
+# ---------------------------------------------------------------------------
+# storms and flakes surface as retryable Rejected
+# ---------------------------------------------------------------------------
+
+def test_admission_storm_is_retryable_then_clears():
+    async def main():
+        inj = FaultInjector(_lm(), FaultPlan.parse("storm@0x2"))
+        plane = _plane([inj])
+        async with plane:
+            with pytest.raises(Rejected) as ei:
+                await plane.open_session(_prompt(0))
+            assert ei.value.reason == "admission" and ei.value.retryable
+            assert isinstance(ei.value.__cause__, PoolExhausted)
+            psid = await _persist(lambda: plane.open_session(_prompt(0)))
+            toks = await plane.push(psid, 4)
+            return toks
+
+    assert asyncio.run(main()) == _lm_reference(1, 4)[0]
+
+
+def test_transient_flake_rejects_push_then_retry_is_bit_identical():
+    async def main():
+        inj = FaultInjector(_lm(), FaultPlan.parse("flake@1"))
+        plane = _plane([inj])
+        async with plane:
+            psid = await plane.open_session(_prompt(5))
+            with pytest.raises(Rejected) as ei:
+                await plane.push(psid, 4)
+            assert ei.value.reason == "transient" and ei.value.retryable
+            assert isinstance(ei.value.__cause__, TransientError)
+            return await plane.push(psid, 4)   # nothing advanced: clean
+
+    assert asyncio.run(main()) == _lm_reference(6, 4)[5]
+
+
+# ---------------------------------------------------------------------------
+# work stealing
+# ---------------------------------------------------------------------------
+
+def test_queue_skew_steals_idle_sessions_bit_identical():
+    N = 4
+
+    async def main():
+        w0, w1 = _lm(), _lm()
+        plane = _plane([w0, w1], steal_threshold=2,
+                             checkpoint_every=1)
+        async with plane:
+            # pin every session to one worker via tenant affinity
+            tn = next(s for s in "abcdefgh"
+                      if zlib.crc32(s.encode()) % 2 == 0)
+            psids = [await plane.open_session(_prompt(i), tenant=tn)
+                     for i in range(N)]
+            hot = plane._sessions[psids[0]][0]
+            assert all(plane._sessions[p][0] is hot for p in psids)
+            # pile work onto ONE session; its idle neighbors are steal
+            # candidates the moment the queue skew crosses the threshold
+            busy = [asyncio.ensure_future(plane.push(psids[0], 1))
+                    for _ in range(8)]
+            await asyncio.gather(*busy)
+            for _ in range(100):
+                if not hot.steal_pending:
+                    break
+                await asyncio.sleep(0.001)
+            stolen = [p for p in psids[1:]
+                      if plane._sessions[p][0] is not hot]
+            assert stolen, "no session was stolen despite queue skew"
+            outs = {p: await plane.push(p, 4) for p in psids[1:]}
+            toks0 = [t for f in busy for t in f.result()]
+            return toks0, outs, psids, plane.metrics()
+
+    toks0, outs, psids, m = asyncio.run(main())
+    assert toks0 == _lm_reference(1, 8)[0]
+    ref4 = _lm_reference(N, 4)
+    for i in range(1, N):
+        assert outs[psids[i]] == ref4[i], f"stolen session {i} diverged"
+    assert m["plane_steals_total"][0]["value"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# config activation + health surface
+# ---------------------------------------------------------------------------
+
+def test_runtime_chaos_field_wraps_workers_and_is_env_pinned():
+    assert rt.ENV_CHAOS == faults_mod.ENV_VAR
+    plane = _plane(_lm(), runtime=RuntimeConfig(chaos="flake@3"))
+    assert isinstance(plane.workers[0].service, FaultInjector)
+    assert plane.workers[0].service.plan == FaultPlan.parse("flake@3")
+    # chaos unset: no injector anywhere on the call path
+    plain = _plane(_lm(), runtime=RuntimeConfig())
+    assert isinstance(plain.workers[0].service, LMSessionService)
+    # a crash plan without a factory to rebuild workers is refused early
+    with pytest.raises(ValueError, match="factory"):
+        _plane(_lm(), runtime=RuntimeConfig(chaos="crash@5"))
+
+
+def test_worker_health_gauges_track_state_machine():
+    async def main():
+        plane = _plane([_lm(), _lm()])
+        async with plane:
+            await plane.drain(0)
+            m = plane.metrics()
+            codes = {e["labels"]["worker"]: e["value"]
+                     for e in m["plane_worker_health"]}
+            assert codes["0"] == 2 and codes["1"] == 0  # drained, healthy
+            assert plane.stats()["health"] == [DRAINED, HEALTHY]
+            # routing skips the drained worker: every new session lands on
+            # the healthy peer, including ones whose affinity hash would
+            # have picked worker 0 from a fully-healthy ring
+            psids = [await plane.open_session(_prompt(i), tenant=f"t{i}")
+                     for i in range(4)]
+            assert all(plane._sessions[p][0].idx == 1 for p in psids)
+            plane.undrain(0)
+            assert plane.stats()["health"] == [HEALTHY, HEALTHY]
+
+    asyncio.run(main())

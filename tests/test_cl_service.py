@@ -12,6 +12,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import build_bundle
 from repro.models.tcn import tcn_empty_state
+from repro.obs.metrics import MetricsRegistry
 from repro.serving import ServingPlane
 from repro.sessions import (
     PagedBankPool,
@@ -428,3 +429,56 @@ def test_enroll_metrics_and_stats_surface():
     assert st["tenant_row_bytes"] == 2 * 13 * 4  # block_ways * (V+1) * fp32
     assert st["bank_pool_blocks_live"] == 1
     assert st["rehearsal_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# serving plane: tenant handoff under drain
+# ---------------------------------------------------------------------------
+
+def test_tenant_bank_mutated_during_drain_lands_on_peer_post_enroll():
+    """An enroll accepted just before drain() must apply on the old worker
+    (drain waits for the accepted queue), and the handoff must carry the
+    POST-enroll bank: the peer classifies with both prototypes, exactly
+    like a never-drained control."""
+    rng = np.random.default_rng(12)
+    shots1 = rng.normal(size=(2, 10, 2)).astype(np.float32)
+    shots2 = rng.normal(size=(1, 10, 2)).astype(np.float32)
+    x = rng.normal(size=(6, 2)).astype(np.float32)
+
+    ctrl = _svc(True)
+    csid = ctrl.open_session(tenant=0)
+    ctrl.enroll_shots(csid, shots1)
+    ctrl.enroll_shots(csid, shots2)
+    want = np.asarray(ctrl.push_audio({csid: x})[csid]["tenant_logits"])
+
+    async def main():
+        # fresh registry: the default_registry() is process-global and
+        # other suites read exact plane counter values off it
+        plane = ServingPlane([_svc(True), _svc(True)],
+                             metrics=MetricsRegistry())
+        async with plane:
+            psid = await plane.open_session(tenant=0)
+            assert await plane.enroll(psid, shots1) == 0
+            victim = plane._sessions[psid][0]
+            # enqueue the second enroll, THEN start draining its worker:
+            # the already-accepted enroll must land before the handoff
+            fe = asyncio.ensure_future(plane.enroll(psid, shots2))
+            await asyncio.sleep(0)  # the enroll op is now queued
+            way, summary = await asyncio.gather(
+                fe, plane.drain(victim.idx))
+            assert way == 1
+            assert summary["moved_sessions"] == 1
+            assert summary["moved_tenants"] == 1
+            peer = plane._sessions[psid][0]
+            assert peer is not victim
+            poll = await plane.poll(psid)
+            assert poll["n_ways"] == 2  # the peer's bank is post-enroll
+            res = await plane.push(psid, x)
+            # a THIRD enroll keeps streaming on the peer: handoff did not
+            # freeze the bank
+            assert await plane.enroll(psid, shots2) == 2
+            return res
+
+    res = asyncio.run(main())
+    np.testing.assert_array_equal(
+        np.asarray(res["tenant_logits"]), want)
